@@ -1,0 +1,87 @@
+"""Micro-benchmarks: wall-clock of the framework's hot host-side paths.
+
+These are CPU-container timings (the TPU kernels are dry-run-only), so they
+cover the pieces that really do run on the host in production: the
+simulator/decision engine, the checkpoint save/restore path, and the codec.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Scheme, SimParams, get_instance, simulate, synthetic_trace
+from repro.kernels.ckpt_codec.ref import dequantize, quantize
+
+
+def _time(fn, reps=5) -> float:
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_simulator() -> dict:
+    it = get_instance("m1.xlarge", "eu-west-1")
+    trace = synthetic_trace(it, horizon_days=30, seed=1)
+    out = {}
+    for s in (Scheme.ACC, Scheme.OPT, Scheme.ADAPT):
+        us = _time(lambda s=s: simulate(trace, s, 500 * 60.0, 0.42, SimParams()))
+        out[f"simulate_{s.value}_us"] = round(us, 1)
+    return out
+
+
+def bench_codec(mb: int = 16) -> dict:
+    x = jax.random.normal(jax.random.PRNGKey(0), (mb * 1024 * 1024 // 4,))
+    q, s, shape = quantize(x)  # warm
+    enc = _time(lambda: jax.block_until_ready(quantize(x)[0]), reps=3)
+    dec = _time(lambda: jax.block_until_ready(dequantize(q, s, shape)), reps=3)
+    return {
+        "codec_encode_us": round(enc, 1),
+        "codec_encode_MBps": round(mb / (enc / 1e6), 1),
+        "codec_decode_us": round(dec, 1),
+    }
+
+
+def bench_checkpoint(tmp="/tmp/repro_bench_ckpt") -> dict:
+    import shutil
+
+    from repro.checkpoint import CheckpointManager
+
+    shutil.rmtree(tmp, ignore_errors=True)
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (1024, 1024)),
+            "m": jax.random.normal(jax.random.PRNGKey(1), (1024, 1024))}
+    out = {}
+    for codec in ("raw", "int8"):
+        mgr = CheckpointManager(f"{tmp}_{codec}", codec_name=codec, keep=2)
+        us = _time(lambda: mgr.save(int(time.time_ns() % 1_000_000), tree), reps=3)
+        out[f"ckpt_save_{codec}_us"] = round(us, 1)
+    mgr = CheckpointManager(f"{tmp}_raw", codec_name="raw")
+    us = _time(lambda: mgr.restore(tree), reps=3)
+    out["ckpt_restore_raw_us"] = round(us, 1)
+    return out
+
+
+def bench_attention() -> dict:
+    from repro.kernels.flash_attention.ref import block_attention
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1024, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1024, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 1024, 2, 64), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: block_attention(q, k, v, causal=True, q_block=256, kv_block=256))
+    jax.block_until_ready(f(q, k, v))
+    us = _time(lambda: jax.block_until_ready(f(q, k, v)), reps=3)
+    return {"attention_ref_1k_us": round(us, 1)}
+
+
+def run_all() -> dict:
+    out = {}
+    out.update(bench_simulator())
+    out.update(bench_codec())
+    out.update(bench_checkpoint())
+    out.update(bench_attention())
+    return out

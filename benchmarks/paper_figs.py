@@ -1,0 +1,160 @@
+"""Paper-figure benchmarks (deliverable d): one function per paper figure.
+
+  fig7  — total monetary cost vs A_bid               (§VII-B, Fig. 7)
+  fig8  — job completion time vs A_bid               (Fig. 8)
+  fig9  — cost x time product vs A_bid               (Fig. 9)
+  fig10 — cost x time across instance types          (Fig. 10)
+
+Each reproduces the paper's setup: a 500-minute job, bids swept on a $0.001
+grid across the band where the m1.xlarge eu-west-1 spot price lives, all six
+schemes, corrected billing.  Ensemble of calibrated synthetic traces (the
+2011 histories are not redistributable); paper-claimed deltas are printed
+next to ours.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    ALL_SCHEMES,
+    Scheme,
+    SimParams,
+    catalog,
+    get_instance,
+    shift_trace,
+    simulate,
+    synthetic_trace,
+)
+
+WORK_S = 500 * 60.0
+PARAMS = SimParams()
+PAPER = {  # paper §VII claims: ACC vs OPT (negative = ACC better)
+    "cost": +0.0594,
+    "time": -0.1077,
+    "product": -0.0556,
+    "fig10_gain": -0.0403,  # "a gain of 4.03% for ACC over OPT" on cost*time
+}
+
+
+def _ensemble(instance, n_seeds=4, offsets=(0, 11, 23)):
+    traces = []
+    for seed in range(n_seeds):
+        t = synthetic_trace(instance, horizon_days=45, seed=100 + seed)
+        for off in offsets:
+            traces.append(shift_trace(t, off * 3600.0))
+    return traces
+
+
+def _bids(instance, n=9):
+    od = instance.on_demand
+    return np.round(np.linspace(0.537 * od, 0.59 * od, n), 3)
+
+
+def _sweep(instance, schemes=ALL_SCHEMES):
+    traces = _ensemble(instance)
+    bids = _bids(instance)
+    out: dict = {s.value: {"bid": [], "cost": [], "time": [], "product": []} for s in schemes}
+    for s in schemes:
+        for bid in bids:
+            costs, times = [], []
+            for tr in traces:
+                r = simulate(tr, s, WORK_S, float(bid), PARAMS)
+                if r.completed:
+                    costs.append(r.cost)
+                    times.append(r.completion_time / 60.0)
+            d = out[s.value]
+            d["bid"].append(float(bid))
+            d["cost"].append(float(np.mean(costs)))
+            d["time"].append(float(np.mean(times)))
+            d["product"].append(float(np.mean(np.array(costs) * np.array(times))))
+    return out
+
+
+def _rel(ours: dict, metric: str) -> float:
+    acc = np.mean(ours["acc"][metric])
+    opt = np.mean(ours["opt"][metric])
+    return float(acc / opt - 1.0)
+
+
+def fig7(results: dict) -> dict:
+    """Total monetary cost vs bid (m1.xlarge eu-west-1)."""
+    sweep = results.setdefault("sweep", _sweep(get_instance("m1.xlarge", "eu-west-1")))
+    rel = _rel(sweep, "cost")
+    return {
+        "per_bid": {k: dict(bid=v["bid"], cost=v["cost"]) for k, v in sweep.items()},
+        "acc_vs_opt": rel,
+        "paper_acc_vs_opt": PAPER["cost"],
+        "claim_band_ok": 0.0 <= rel <= 0.12,
+    }
+
+
+def fig8(results: dict) -> dict:
+    sweep = results.setdefault("sweep", _sweep(get_instance("m1.xlarge", "eu-west-1")))
+    rel = _rel(sweep, "time")
+    return {
+        "per_bid": {k: dict(bid=v["bid"], time=v["time"]) for k, v in sweep.items()},
+        "acc_vs_opt": rel,
+        "paper_acc_vs_opt": PAPER["time"],
+        "claim_band_ok": rel < 0.0,
+    }
+
+
+def fig9(results: dict) -> dict:
+    sweep = results.setdefault("sweep", _sweep(get_instance("m1.xlarge", "eu-west-1")))
+    rel = _rel(sweep, "product")
+    return {
+        "per_bid": {k: dict(bid=v["bid"], product=v["product"]) for k, v in sweep.items()},
+        "acc_vs_opt": rel,
+        "paper_acc_vs_opt": PAPER["product"],
+        "claim_band_ok": rel < 0.08,
+    }
+
+
+def fig10(results: dict, n_types: int = 15) -> dict:
+    """cost x time across instance types (paper: 15 shown of 64; gain grows
+    with instance price)."""
+    # spread across the hardware/price range like the paper's sample
+    cat = sorted(catalog(), key=lambda it: it.on_demand)
+    step = max(len(cat) // n_types, 1)
+    sample = cat[::step][:n_types]
+    rows = []
+    for it in sample:
+        sweep = _sweep(it, schemes=(Scheme.OPT, Scheme.ACC, Scheme.HOUR))
+        rows.append(
+            {
+                "instance": it.name,
+                "on_demand": it.on_demand,
+                "acc_product": float(np.mean(sweep["acc"]["product"])),
+                "opt_product": float(np.mean(sweep["opt"]["product"])),
+                "hour_product": float(np.mean(sweep["hour"]["product"])),
+            }
+        )
+    rel = [r["acc_product"] / r["opt_product"] - 1.0 for r in rows]
+    # paper: ACC ~4% over... (their metric: gain of ACC vs OPT averaged)
+    cheap = np.mean(rel[: len(rel) // 2])
+    costly = np.mean(rel[len(rel) // 2 :])
+    return {
+        "rows": rows,
+        "acc_vs_opt_mean": float(np.mean(rel)),
+        "trend_gain_improves_with_price": bool(costly <= cheap),
+        "paper_gain": PAPER["fig10_gain"],
+    }
+
+
+def run_all(out_dir: str = "results") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    results: dict = {}
+    report = {}
+    for name, fn in [("fig7", fig7), ("fig8", fig8), ("fig9", fig9), ("fig10", fig10)]:
+        t0 = time.time()
+        report[name] = fn(results)
+        report[name]["wall_s"] = round(time.time() - t0, 2)
+    report.pop("sweep", None)
+    with open(os.path.join(out_dir, "paper_figs.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    return report

@@ -1,0 +1,188 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and derives
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / link_bw
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI (conservative single-link; the wire-byte ring model in
+dryrun.parse_collectives already accounts for group sizes).
+
+Also reports MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)
+per device, the useful-FLOPs ratio, a remat-corrected activation estimate
+(XLA:CPU drops jax.checkpoint, so memory_analysis temp is a no-remat upper
+bound — DESIGN.md §Analysis), and the dominant-term verdict.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_active * tokens / chips
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * spec.global_batch / chips
+
+
+def activation_estimate_bytes(arch: str, shape_name: str, chips: int) -> float:
+    """Remat-corrected per-device activation estimate (TPU target):
+    residual stream per layer + one layer's working set + logits block."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    if spec.kind == "decode":
+        return 0.0  # decode activations are negligible next to the caches
+    data_shards = min(chips // 16, spec.global_batch) or 1
+    b_local = max(spec.global_batch // data_shards, 1)
+    tokens_local = b_local * spec.seq_len
+    d = cfg.d_model
+    resid = 2.0 * tokens_local * d * cfg.n_layers  # bf16 checkpointed inputs
+    tp = 16
+    if cfg.family == "ssm":
+        work = 4.0 * tokens_local * (cfg.d_inner // tp) * cfg.ssm_state  # scan state fp32
+    else:
+        d_ff_eff = cfg.d_ff * (cfg.top_k if cfg.family == "moe" else 1)
+        work = 2.0 * tokens_local * max(d_ff_eff // tp, d)
+    logits = 6.0 * tokens_local * cfg.padded_vocab / tp  # bf16 + fp32 copy
+    if spec.kind == "prefill":
+        logits = 6.0 * b_local * cfg.padded_vocab / tp  # last position only
+    return resid + work + logits
+
+
+def analytic_bytes_per_device(rec: dict) -> float:
+    """TPU-fused HBM-traffic estimate (lower bound, transparent terms).
+
+    The measured ``bytes accessed`` on XLA:CPU at opt-level 0 counts every
+    unfused op's operands — a 5-20x overestimate of what a fusing TPU
+    backend moves.  Model:
+
+      train:   optimizer r/w (2x state) + param read fwd+bwd + grad write
+               + activation traffic (~8 residual r/w per layer, bf16)
+               + logits (bf16 + fp32 pass)
+      prefill: param read + activation traffic + kv write
+      decode:  param read + full cache read + cache write (1 token)
+    """
+    cfg = get_config(rec["arch"])
+    spec = SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    p_local = rec["memory"]["argument_bytes"]  # params(+opt)+inputs actually on device
+    d = cfg.d_model
+    data_shards = max(chips // 16, 1)
+    b_local = max(spec.global_batch // data_shards, 1)
+    if spec.kind == "decode":
+        # read all resident state once (params + caches) + small writes
+        return p_local * 1.05
+    tokens_local = b_local * spec.seq_len
+    act = 8.0 * 2.0 * tokens_local * d * cfg.n_layers  # 8 r/w of the bf16 residual per layer
+    if cfg.family == "moe":
+        act += 2.0 * 2.0 * tokens_local * d * cfg.top_k * cfg.n_layers  # dispatch/combine copies
+    logits = (2.0 + 4.0) * tokens_local * cfg.padded_vocab / 16
+    if spec.kind == "train":
+        return 2.0 * p_local + act * 2.0 + logits * 2.0  # opt r/w + fwd+bwd activations
+    return p_local + act + logits
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    t_compute = rec["flops_per_device"] / PEAK_FLOPS
+    t_memory_measured = rec["bytes_per_device"] / HBM_BW
+    t_memory = analytic_bytes_per_device(rec) / HBM_BW
+    wire = sum(v["wire_bytes"] for v in rec.get("collectives", {}).values())
+    t_coll = wire / LINK_BW
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_measured_s": t_memory_measured,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flop_ratio": mf / rec["flops_per_device"] if rec["flops_per_device"] else 0.0,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+        "step_time_bound_s": bound,
+        "collective_detail": rec.get("collectives", {}),
+        "memory_args_gib": rec["memory"]["argument_bytes"] / 2**30,
+        "memory_temp_noremat_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "activation_est_gib": activation_estimate_bytes(rec["arch"], rec["shape"], chips) / 2**30,
+    }
+
+
+def load_all(dryrun_dir: str = "results/dryrun") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        a = analyze_record(rec)
+        if a:
+            out.append(a)
+        elif rec.get("status") == "skipped":
+            out.append(
+                {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"], "skipped": rec.get("skip_reason", "")}
+            )
+        elif rec.get("status") == "error":
+            out.append({"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"], "error": rec.get("error", "")[:200]})
+    return out
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | roofline frac | args GiB | act est GiB |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | SKIP | — | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | ERROR | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.2f} | "
+            f"{r['memory_args_gib']:.2f} | {r['activation_est_gib']:.2f} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    rows = load_all()
+    print(format_table(rows))
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    with open("results/roofline_table.md", "w") as f:
+        f.write(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

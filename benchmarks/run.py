@@ -1,0 +1,71 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  * paper-figure reproductions (Figs 7-10) with ACC-vs-OPT deltas next to
+    the paper's claimed numbers,
+  * roofline terms per dry-run cell (if results/dryrun is populated),
+  * host-path micro-benchmarks.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows: list[tuple[str, float, str]] = []
+
+    from benchmarks import microbench, paper_figs
+
+    report = paper_figs.run_all()
+    for fig, key, metric in [
+        ("fig7", "acc_vs_opt", "cost"),
+        ("fig8", "acc_vs_opt", "time"),
+        ("fig9", "acc_vs_opt", "product"),
+    ]:
+        r = report[fig]
+        rows.append(
+            (
+                f"paper_{fig}_{metric}",
+                r["wall_s"] * 1e6,
+                f"ACC_vs_OPT={r[key]:+.2%} paper={r['paper_acc_vs_opt']:+.2%} band_ok={r['claim_band_ok']}",
+            )
+        )
+    f10 = report["fig10"]
+    rows.append(
+        (
+            "paper_fig10_types",
+            f10["wall_s"] * 1e6,
+            f"ACC_vs_OPT_product={f10['acc_vs_opt_mean']:+.2%} paper={f10['paper_gain']:+.2%}",
+        )
+    )
+
+    try:
+        from benchmarks import roofline
+
+        rl = roofline.load_all()
+        ok = [r for r in rl if "t_compute_s" in r]
+        for r in ok:
+            rows.append(
+                (
+                    f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                    r["step_time_bound_s"] * 1e6,
+                    f"dominant={r['dominant']} frac={r['roofline_fraction']:.2f} useful={r['useful_flop_ratio']:.2f}",
+                )
+            )
+        if not ok:
+            print("# roofline: no dry-run results yet (run repro.launch.dryrun)", file=sys.stderr)
+    except Exception as e:  # dry-run results are optional for this entry point
+        print(f"# roofline skipped: {e}", file=sys.stderr)
+
+    for name, val in microbench.run_all().items():
+        rows.append((name, float(val), ""))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

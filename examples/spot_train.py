@@ -1,0 +1,70 @@
+"""End-to-end driver (deliverable b): train a LM under the ACC spot policy
+with genuine preemptions, checkpoint/restore, cost accounting.
+
+Presets:
+  --preset tiny   ~3M params,  CPU-friendly (default; ~2 min)
+  --preset 100m   ~100M params, the assignment's "train ~100M for a few
+                  hundred steps" target — sized for a TPU host; runs on CPU
+                  too, just slowly.
+
+Run:  PYTHONPATH=src python examples/spot_train.py --steps 60
+"""
+
+import argparse
+
+import jax
+
+from repro.core import SimParams, get_instance, synthetic_trace
+from repro.data import TokenStream
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.spot_trainer import SpotTrainer, SpotTrainerConfig
+from repro.train.steps import make_train_step
+
+PRESETS = {
+    "tiny": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=2048, batch=8, seq=128),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32128, batch=8, seq=512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--a-bid", type=float, default=0.45)
+    ap.add_argument("--codec", choices=["raw", "int8"], default="raw")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"spot-{args.preset}", family="dense", n_layers=p["n_layers"], d_model=p["d_model"],
+        n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+    )
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+    opt_cfg = AdamWConfig(lr=3e-4)
+    train_step = jax.jit(make_train_step(cfg, opt_cfg, remat=False, q_block=128, kv_block=128))
+    data = TokenStream(vocab_size=cfg.vocab_size, batch=p["batch"], seq_len=p["seq"], seed=5)
+
+    def init():
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        return params, adamw_init(params, opt_cfg)
+
+    trace = synthetic_trace(get_instance("m1.xlarge", "eu-west-1"), horizon_days=60, seed=17)
+    tcfg = SpotTrainerConfig(
+        a_bid=args.a_bid, ckpt_dir=f"/tmp/spot_train_{args.preset}", max_steps=args.steps,
+        step_time_s=240.0, sim=SimParams(), codec=args.codec, async_io=True,
+    )
+    trainer = SpotTrainer(tcfg, train_step=train_step, init_params=init, data=data, trace=trace)
+    report = trainer.run()
+    print(
+        f"\ncompleted={report.completed} steps={report.steps_done} "
+        f"virtual={report.virtual_time_s/3600:.1f}h cost=${report.cost:.2f}\n"
+        f"checkpoints={report.n_checkpoints} preemptions={report.n_preemptions} "
+        f"restores={report.n_restores} t_c={trainer.t_c_estimate:.1f}s\n"
+        f"loss first/last: {report.losses[0]:.3f} / {report.losses[-1]:.3f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

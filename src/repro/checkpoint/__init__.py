@@ -1,0 +1,6 @@
+"""Fault-tolerance substrate: sharded, atomic, async, (optionally) quantized
+checkpointing with elastic restore."""
+
+from repro.checkpoint.manager import CheckpointManager, CheckpointMeta
+
+__all__ = ["CheckpointManager", "CheckpointMeta"]

@@ -1,0 +1,231 @@
+"""Checkpoint manager: atomic, async, quantized, elastic.
+
+Layout (one directory per step):
+
+    <root>/step_000123/
+        manifest.json        # written LAST -> commit point
+        leaf_00000.npy ...   # one file per pytree leaf (or .npz for int8)
+
+Properties:
+
+  * **Atomic**: writes go to ``step_X.tmp/``; the manifest is written last
+    and the directory renamed — a checkpoint without a manifest is garbage
+    and is ignored/cleaned.  A kill mid-checkpoint (the paper's out-of-bid
+    case) can never corrupt the latest good checkpoint.
+  * **Async**: ``save(..., block=False)`` snapshots to host memory
+    synchronously (fast) and writes files on a background thread, so the
+    training loop's effective t_c is the device->host copy, not the I/O.
+  * **Quantized** (codec="int8"): kernels/ckpt_codec blocks — ~4x smaller
+    files, directly shrinking the paper's t_c term.  Default codec="raw" is
+    bit-exact.
+  * **Elastic**: files store *global* arrays + the logical-axes tree; restore
+    re-shards onto any mesh via device_put with the target NamedShardings.
+  * **Integrity**: sha256 per leaf file, verified on restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.kernels.ckpt_codec import ref as codec
+
+
+@dataclasses.dataclass
+class CheckpointMeta:
+    step: int
+    codec: str
+    n_leaves: int
+    wall_time_s: float
+    bytes_written: int
+    extra: dict
+
+
+def _tree_paths(tree) -> list[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(p) for p, _ in paths]
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        root: str,
+        *,
+        keep: int = 3,
+        codec_name: str = "raw",  # raw | int8
+        async_io: bool = False,
+    ):
+        self.root = root
+        self.keep = keep
+        self.codec_name = codec_name
+        self.async_io = async_io
+        self._thread: threading.Thread | None = None
+        self._last_error: Exception | None = None
+        os.makedirs(root, exist_ok=True)
+        self._clean_tmp()
+
+    # ------------------------------------------------------------------
+    def _clean_tmp(self):
+        for d in os.listdir(self.root):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, d, "manifest.json")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, extra: dict | None = None, *, block: bool = True) -> CheckpointMeta:
+        """Snapshot ``tree`` (pytree of jax/np arrays) at ``step``."""
+        self.wait()  # one outstanding async save at a time (double-buffer)
+        t0 = time.monotonic()
+        # synchronous part: device -> host (this is the training pause = t_c)
+        leaves, treedef = jax.tree.flatten(tree)
+        host_leaves = [np.asarray(x) for x in leaves]
+        snap_time = time.monotonic() - t0
+        meta_holder: dict = {}
+
+        def write():
+            try:
+                meta_holder["meta"] = self._write(step, host_leaves, treedef, extra or {}, snap_time)
+            except Exception as e:  # surfaced on next wait()
+                self._last_error = e
+
+        if block or not self.async_io:
+            write()
+            if self._last_error:
+                raise self._last_error
+            return meta_holder["meta"]
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+        return CheckpointMeta(step, self.codec_name, len(host_leaves), snap_time, 0, extra or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def _write(self, step, host_leaves, treedef, extra, snap_time) -> CheckpointMeta:
+        name = f"step_{step:09d}"
+        tmp = os.path.join(self.root, name + ".tmp")
+        final = os.path.join(self.root, name)
+        os.makedirs(tmp, exist_ok=True)
+        files = []
+        total = 0
+        for i, leaf in enumerate(host_leaves):
+            fname = f"leaf_{i:05d}"
+            path = os.path.join(tmp, fname)
+            is_float = leaf.dtype in (np.float32, np.float16) or str(leaf.dtype) == "bfloat16"
+            if self.codec_name == "int8" and is_float and leaf.size >= 1024:
+                q, scales, shape = codec.quantize(leaf)
+                np.savez(
+                    path,
+                    q=np.asarray(q),
+                    scales=np.asarray(scales),
+                    shape=np.asarray(shape, dtype=np.int64),
+                )
+                path += ".npz"
+            else:
+                # npy cannot store bfloat16: write the uint16 view; the
+                # manifest dtype tag drives the view back on restore
+                np.save(path, leaf.view(np.uint16) if str(leaf.dtype) == "bfloat16" else leaf)
+                path += ".npy"
+            h = hashlib.sha256(open(path, "rb").read()).hexdigest()
+            total += os.path.getsize(path)
+            files.append({"file": os.path.basename(path), "sha256": h, "dtype": str(leaf.dtype)})
+        manifest = {
+            "step": step,
+            "codec": self.codec_name,
+            "treedef": str(treedef),
+            "files": files,
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(tmp)
+        else:
+            os.replace(tmp, final)
+        self._gc()
+        return CheckpointMeta(step, self.codec_name, len(host_leaves), snap_time, total, extra)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, template, step: int | None = None, *, shardings=None) -> tuple:
+        """Restore into the structure of ``template`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings for elastic placement onto a (different) mesh.
+
+        Returns (tree, extra).
+        """
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = os.path.join(self.root, f"step_{step:09d}")
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        leaves_t, treedef = jax.tree.flatten(template)
+        if len(manifest["files"]) != len(leaves_t):
+            raise ValueError(
+                f"checkpoint has {len(manifest['files'])} leaves, template has {len(leaves_t)}"
+            )
+        out = []
+        for i, (entry, tmpl) in enumerate(zip(manifest["files"], leaves_t)):
+            path = os.path.join(d, entry["file"])
+            data = open(path, "rb").read()
+            if hashlib.sha256(data).hexdigest() != entry["sha256"]:
+                raise IOError(f"integrity check failed for {path}")
+            if path.endswith(".npz"):
+                z = np.load(path)
+                import jax.numpy as jnp
+
+                arr = np.asarray(
+                    codec.dequantize(jnp.asarray(z["q"]), jnp.asarray(z["scales"]), tuple(z["shape"]))
+                ).astype(_np_dtype(entry["dtype"]))
+            else:
+                arr = np.load(path)
+                if entry["dtype"] == "bfloat16":
+                    import ml_dtypes  # vendored with jax
+
+                    arr = arr.view(ml_dtypes.bfloat16)
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(f"leaf {i}: shape {arr.shape} != template {tmpl.shape}")
+            out.append(arr)
+        tree = jax.tree.unflatten(treedef, out)
+        if shardings is not None:
+            tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree, manifest["extra"]
+
+
+def _np_dtype(name: str):
+    if name == "bfloat16":
+        import ml_dtypes
+
+        return ml_dtypes.bfloat16
+    return np.dtype(name)

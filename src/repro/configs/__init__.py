@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Ten assigned architectures (+ reduced smoke variants), plus the paper's own
+simulation config (spot-market parameters) under ``paper_sim``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch]).smoke_config()

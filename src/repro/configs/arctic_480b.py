@@ -1,0 +1,30 @@
+"""arctic-480b [moe] — 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128e top-2 + dense residual MLP
+[hf:Snowflake/snowflake-arctic-base; hf]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    n_experts=128,
+    top_k=2,
+    dense_residual=True,
+    norm="rmsnorm",
+    act="silu",
+    gated_mlp=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=256,
+        n_experts=8, top_k=2, dense_residual=True,
+    )

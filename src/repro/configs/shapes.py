@@ -1,0 +1,75 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs per (arch, shape).
+
+The four LM shapes (assignment):
+
+  train_4k     seq 4096,    global_batch 256   -> train_step
+  prefill_32k  seq 32768,   global_batch 32    -> prefill
+  decode_32k   kv 32768,    global_batch 128   -> serve_step (1 new token)
+  long_500k    kv 524288,   global_batch 1     -> serve_step; sub-quadratic
+                                                  archs only (SSM / hybrid)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(is_applicable, reason_if_not) — assignment skip rules."""
+    spec = SHAPES[shape_name]
+    if spec.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k requires sub-quadratic attention (SSM/hybrid only); skipped per assignment"
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every *data* input of the step.
+
+    (The dry-run separately builds abstract params / caches.)
+    """
+    spec = SHAPES[shape_name]
+    b = spec.global_batch
+    s = spec.seq_len
+    tok = jnp.int32
+    if spec.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "labels": jax.ShapeDtypeStruct((b, s), tok),
+        }
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_positions, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+            out["vision_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        return out
+    if spec.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_positions, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+            out["vision_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), tok)}

@@ -1,0 +1,80 @@
+"""The paper's primary contribution: application-centric resource provisioning
+and checkpointing for spot capacity.
+
+  * market      — instance catalog + calibrated price traces
+  * billing     — corrected EC2 spot billing (hour-start price, free partial hour)
+  * schemes     — NONE/OPT/HOUR/EDGE/ADAPT + the paper's ACC, decision points
+  * simulator   — discrete-event engine + bid sweeps (paper §VII)
+  * provision   — Algorithm 1 (A_bid, instance_type via EET)
+  * events      — E_ckpt / E_terminate / E_launch generation
+  * appdef      — A=(T,R,Rm,P,U,M) unified definition + Controller
+  * lifecycle   — six-state application FSM
+"""
+
+from repro.core.billing import Termination, bill_run, run_cost
+from repro.core.events import Event, EventKind, SpotEventGenerator
+from repro.core.lifecycle import AppState, Lifecycle
+from repro.core.market import (
+    HOUR,
+    InstanceType,
+    PriceTrace,
+    TraceModel,
+    catalog,
+    constant_trace,
+    get_instance,
+    shift_trace,
+    step_trace,
+    synthetic_trace,
+    trace_ensemble,
+)
+from repro.core.provision import SLA, ProvisioningDecision, algorithm1, expected_execution_time
+from repro.core.appdef import Application, Controller, Monitoring, Workflow, spot_application
+from repro.core.schemes import (
+    ALL_SCHEMES,
+    REALISTIC_SCHEMES,
+    FailurePdf,
+    Scheme,
+    SimParams,
+    decision_points,
+)
+from repro.core.simulator import SimResult, simulate, sweep_bids
+
+__all__ = [
+    "HOUR",
+    "ALL_SCHEMES",
+    "REALISTIC_SCHEMES",
+    "AppState",
+    "Application",
+    "Controller",
+    "Event",
+    "EventKind",
+    "FailurePdf",
+    "InstanceType",
+    "Lifecycle",
+    "Monitoring",
+    "PriceTrace",
+    "ProvisioningDecision",
+    "SLA",
+    "Scheme",
+    "SimParams",
+    "SimResult",
+    "SpotEventGenerator",
+    "Termination",
+    "TraceModel",
+    "Workflow",
+    "algorithm1",
+    "bill_run",
+    "catalog",
+    "constant_trace",
+    "decision_points",
+    "expected_execution_time",
+    "get_instance",
+    "run_cost",
+    "shift_trace",
+    "simulate",
+    "spot_application",
+    "step_trace",
+    "sweep_bids",
+    "synthetic_trace",
+    "trace_ensemble",
+]

@@ -1,0 +1,5 @@
+"""Deterministic, resumable data pipeline."""
+
+from repro.data.pipeline import TokenStream
+
+__all__ = ["TokenStream"]

@@ -1,0 +1,32 @@
+"""Checkpoint codec op with backend dispatch (pallas on TPU, jnp elsewhere)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ckpt_codec import ref
+
+_FORCE_IMPL: str | None = None
+
+
+def set_impl(impl: str | None) -> None:
+    global _FORCE_IMPL
+    _FORCE_IMPL = impl
+
+
+def _default_impl() -> str:
+    if _FORCE_IMPL is not None:
+        return _FORCE_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def quantize(x, block: int = ref.BLOCK, impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.ckpt_codec import kernel
+
+        return kernel.quantize_tpu(x, block=block, interpret=impl == "interpret")
+    return ref.quantize(x, block)
+
+
+dequantize = ref.dequantize

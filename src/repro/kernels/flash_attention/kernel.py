@@ -1,0 +1,157 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+TPU-native design (hardware-adaptation notes, DESIGN.md §4):
+
+  * grid = (batch, kv_head, q_blocks, kv_blocks) — the innermost kv axis is
+    sequential on TPU, so the online-softmax state (m, l, acc) lives in VMEM
+    scratch across kv steps; nothing quadratic ever touches HBM.
+  * GQA folds the q-heads-per-kv-group G into matmul rows: the score matmul
+    is (q_block*G, D) x (D, kv_block) — MXU-aligned for D=64/128 and
+    kv_block a multiple of 128.
+  * causal/window structure: fully-masked tiles are skipped with pl.when
+    (grid still visits them, compute does not run); partially-masked tiles
+    apply an iota mask.  FLOPs on TPU therefore match the exact lower
+    triangle / diagonal band, same as the unrolled ref.
+
+Validated against ref.block_attention in interpret mode on CPU (the TPU
+backend is the deployment target, not available in this container).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # (1, q_block, 1, G, D)
+    k_ref,  # (1, kv_block, 1, D)
+    v_ref,  # (1, kv_block, 1, D)
+    o_ref,  # (1, q_block, 1, G, D)
+    m_ref,  # scratch (q_block*G,)
+    l_ref,  # scratch (q_block*G,)
+    acc_ref,  # scratch (q_block*G, D)
+    *,
+    causal: bool,
+    window: int,
+    q_block: int,
+    kv_block: int,
+    nk: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    g = q_ref.shape[3]
+    d = q_ref.shape[4]
+    rows = q_block * g
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full((rows,), NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros((rows,), jnp.float32)
+        acc_ref[...] = jnp.zeros((rows, d), jnp.float32)
+
+    # tile visibility (traced, cheap): q rows are absolute positions
+    q_lo = qi * q_block + q_offset
+    q_hi = q_lo + q_block - 1
+    k_lo = kj * kv_block
+    k_hi = k_lo + kv_block - 1
+    visible = jnp.asarray(True)
+    if causal:
+        visible = jnp.logical_and(visible, k_lo <= q_hi)
+    if window:
+        # visible iff any (q,k) pair in the tile satisfies k > q - window;
+        # the loosest pair is (q_lo, k_hi)
+        visible = jnp.logical_and(visible, k_hi > q_lo - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[...].reshape(rows, d).astype(jnp.float32)
+        k = k_ref[...].reshape(kv_block, d).astype(jnp.float32)
+        v = v_ref[...].reshape(kv_block, d).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * (1.0 / math.sqrt(d))
+        # row r -> q position; col c -> kv position
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (rows, kv_block), 0) // g
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (rows, kv_block), 1)
+        mask = jnp.ones((rows, kv_block), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[...] = (acc_ref[...] / l[:, None]).reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    q_offset: int = 0,
+    interpret: bool = False,
+):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D).  Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = h // n_kv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0
+    nq, nk = sq // q_block, sk // kv_block
+
+    # (B, S, KV, G, D) so blocks cut cleanly per kv head
+    q5 = q.reshape(b, sq, n_kv, g, d)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        q_block=q_block,
+        kv_block=kv_block,
+        nk=nk,
+        q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_kv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, 1, g, d), lambda b_, h_, qi, kj: (b_, qi, h_, 0, 0)),
+            pl.BlockSpec((1, kv_block, 1, d), lambda b_, h_, qi, kj: (b_, kj, h_, 0)),
+            pl.BlockSpec((1, kv_block, 1, d), lambda b_, h_, qi, kj: (b_, kj, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, 1, g, d), lambda b_, h_, qi, kj: (b_, qi, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, n_kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block * g,), jnp.float32),
+            pltpu.VMEM((q_block * g,), jnp.float32),
+            pltpu.VMEM((q_block * g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q5, k, v)
+    return out.reshape(b, sq, h, d)

@@ -1,0 +1,159 @@
+"""Reference attention implementations (pure jnp).
+
+Two tiers:
+
+  * :func:`naive_attention` — materializes the full score matrix; the oracle
+    for kernel tests on small shapes.
+  * :func:`block_attention` — flash-style online-softmax over (q-block,
+    kv-block) tiles with **Python-unrolled** block loops.  Unrolling matters
+    twice: (i) XLA's ``cost_analysis`` counts a ``while`` body once, so
+    unrolled tiles make dry-run FLOP/byte accounting exact; (ii) causal and
+    sliding-window structure is applied at the *tile* level — fully-masked
+    tiles are skipped in Python, so the lowered HLO contains exactly the
+    useful tiles (the lower triangle / the window diagonal band).
+
+Shapes (GQA throughout): q (B, S, H, D); k, v (B, Sk, KV, D), H = KV * G.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_heads(q, n_kv):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Full-score oracle.  ``q_offset``: absolute position of q[0] (for
+    decode/suffix queries against a longer kv)."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    qg = _split_heads(q, kv).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _tile_visible(qi, kj, q_block, kv_block, causal, window, q_offset):
+    """Is tile (qi, kj) at least partially unmasked?"""
+    q_lo, q_hi = qi * q_block + q_offset, (qi + 1) * q_block - 1 + q_offset
+    k_lo, k_hi = kj * kv_block, (kj + 1) * kv_block - 1
+    if causal and k_lo > q_hi:
+        return False
+    if window and k_hi <= q_hi - window:
+        return False
+    return True
+
+
+def block_attention(
+    q,
+    k,
+    v,
+    *,
+    causal=True,
+    window=0,
+    q_block=1024,
+    kv_block=1024,
+    q_offset=0,
+    kv_valid=None,
+):
+    """Flash-style tiled attention with unrolled tile loops (see module doc).
+
+    ``kv_valid``: number of real (unpadded) kv positions; columns beyond it
+    are masked out (used by the ragged-length pad path).
+    """
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    sq_real, sk_real = sq, sk
+    if sq % q_block or sk % kv_block:
+        pad_q = (-sq) % q_block
+        pad_k = (-sk) % kv_block
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        out = block_attention(
+            q, k, v, causal=causal, window=window, q_block=q_block, kv_block=kv_block,
+            q_offset=q_offset, kv_valid=sk_real,
+        )
+        return out[:, :sq_real]
+    nq, nk = sq // q_block, sk // kv_block
+    g = h // n_kv
+    scale = 1.0 / math.sqrt(d)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    outs = []
+    for qi in range(nq):
+        qb = q[:, qi * q_block : (qi + 1) * q_block].astype(jnp.float32)
+        qb = qb.reshape(b, q_block, n_kv, g, d)
+        m = jnp.full((b, q_block, n_kv, g), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, q_block, n_kv, g), jnp.float32)
+        acc = jnp.zeros((b, q_block, n_kv, g, d), jnp.float32)
+        q_pos = jnp.arange(q_block) + qi * q_block + q_offset
+        for kj in range(nk):
+            if not _tile_visible(qi, kj, q_block, kv_block, causal, window, q_offset):
+                continue
+            kb = kf[:, kj * kv_block : (kj + 1) * kv_block]
+            vb = vf[:, kj * kv_block : (kj + 1) * kv_block]
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qb, kb) * scale
+            k_pos = jnp.arange(kv_block) + kj * kv_block
+            mask = jnp.ones((q_block, kv_block), dtype=bool)
+            if kv_valid is not None:
+                mask &= (k_pos < kv_valid)[None, :]
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bqkgc,bckd->bqkgd", p, vb)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        outs.append(out.reshape(b, q_block, h, d))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=0):
+    """Single-token decode: q (B, 1, H, D) against a (B, S_max, KV, D) cache.
+
+    Positions >= ``cur_len`` (and, with a window, <= cur_len - window) are
+    masked.  ``cur_len`` is the *post-append* length; the query sits at
+    position cur_len - 1.
+    """
+    b, one, h, d = q.shape
+    assert one == 1
+    _, s_max, n_kv, _ = k_cache.shape
+    g = h // n_kv
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s_max)
+    mask = pos[None, :] < cur_len[:, None] if jnp.ndim(cur_len) else pos[None, :] < cur_len
+    if window:
+        lo = (cur_len - window) if jnp.ndim(cur_len) else cur_len - window
+        mask &= pos[None, :] >= (lo[:, None] if jnp.ndim(lo) else lo)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,62 @@
+"""Pallas TPU RG-LRU scan (RecurrentGemma).
+
+Same chunked-VMEM-state design as ssm_scan but with a per-channel scalar
+state: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t, a_t = exp(log_a_t).
+Grid (batch, w_blocks, chunks), state (w_block,) in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(loga_ref, gx_ref, h_seq_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    log_a = loga_ref[...][0].astype(jnp.float32)  # (chunk, w_block)
+    gx = gx_ref[...][0].astype(jnp.float32)
+
+    def body(t, h):
+        a = jnp.exp(log_a[t])
+        beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+        h = a * h + beta * gx[t]
+        h_seq_ref[0, t] = h.astype(h_seq_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, body, h_ref[...])
+
+
+def rglru_scan_tpu(log_a, gated_x, h0=None, *, chunk: int = 256, interpret: bool = False):
+    """log_a, gated_x: (B, S, W) -> (h (B,S,W) f32, h_last (B,W))."""
+    b, s, w = log_a.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+    w_block = min(w, 1024)
+    assert w % w_block == 0
+    nw = w // w_block
+    assert h0 is None, "h0 folding handled by the caller"
+
+    kernel = functools.partial(_rglru_kernel, chunk=chunk)
+    h_seq = pl.pallas_call(
+        kernel,
+        grid=(b, nw, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, w_block), lambda b_, wi, ci: (b_, ci, wi)),
+            pl.BlockSpec((1, chunk, w_block), lambda b_, wi, ci: (b_, ci, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, w_block), lambda b_, wi, ci: (b_, ci, wi)),
+        out_shape=jax.ShapeDtypeStruct((b, s, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((w_block,), jnp.float32)],
+        interpret=interpret,
+    )(log_a, gated_x)
+    return h_seq, h_seq[:, -1]

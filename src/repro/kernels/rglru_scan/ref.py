@@ -1,0 +1,30 @@
+"""RG-LRU recurrence reference (Griffin / RecurrentGemma).
+
+  r_t = sigmoid(x_t W_a);  i_t = sigmoid(x_t W_x)
+  log_a_t = -c * softplus(Lambda) * r_t          (c = 8.0)
+  h_t = exp(log_a_t) * h_{t-1} + sqrt(1 - exp(2 log_a_t)) * (i_t * x_t)
+
+Same associative-scan backbone as ssm_scan (exact under cost_analysis).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.ref import linear_scan
+
+RG_LRU_C = 8.0
+
+
+def rglru_scan(log_a, gated_x, h0=None):
+    """log_a, gated_x: (B, S, W).  Returns h: (B, S, W) fp32, h_last."""
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a.astype(jnp.float32)), 1e-12))
+    h = linear_scan(log_a, beta * gated_x.astype(jnp.float32), h0)
+    return h, h[:, -1]
+
+
+def rglru_step(log_a_t, gated_x_t, h_prev):
+    a = jnp.exp(log_a_t.astype(jnp.float32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    h = a * h_prev + beta * gated_x_t.astype(jnp.float32)
+    return h, h

@@ -1,0 +1,80 @@
+"""Pallas TPU Mamba-1 selective scan.
+
+TPU adaptation (DESIGN.md §4): the CUDA kernel's warp-parallel scan becomes
+a *time-chunked VMEM-resident* scan — grid (batch, d_blocks, time_chunks)
+with the chunk axis innermost (sequential on TPU), carrying the (d_block, N)
+state in VMEM scratch across chunks.  The (B, S, D, N) expanded tensor that
+the pure-jnp ref materializes in HBM never exists here; within a chunk the
+recurrence runs as a fori_loop over time with (d_block, N) lanes vectorized
+on the VPU.
+
+y_t = sum_n h_t[d, n] * C_t[n],  h_t = exp(dtA_t) * h_{t-1} + dBx_t
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dtA_ref, dBx_ref, c_ref, y_ref, hlast_ref, h_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    dtA = dtA_ref[...][0].astype(jnp.float32)  # (chunk, d_block, N)
+    dBx = dBx_ref[...][0].astype(jnp.float32)
+    c = c_ref[...][0].astype(jnp.float32)  # (chunk, N)
+
+    def body(t, carry):
+        h = carry
+        h = jnp.exp(dtA[t]) * h + dBx[t]  # (d_block, N)
+        y_ref[0, t] = jnp.sum(h * c[t][None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        hlast_ref[...] = h[None].astype(hlast_ref.dtype)
+
+
+def ssm_scan_tpu(dtA, dBx, C, h0=None, *, chunk: int = 256, interpret: bool = False):
+    """dtA, dBx: (B, S, D, N); C: (B, S, N) -> (y (B,S,D) f32, h_last (B,D,N))."""
+    b, s, d, n = dtA.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    d_block = min(d, 512)
+    assert d % d_block == 0
+    nd = d // d_block
+    assert h0 is None, "h0 folding handled by the caller (prefill starts cold)"
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(b, nd, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block, n), lambda b_, di, ci: (b_, ci, di, 0)),
+            pl.BlockSpec((1, chunk, d_block, n), lambda b_, di, ci: (b_, ci, di, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, di, ci: (b_, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda b_, di, ci: (b_, ci, di)),
+            pl.BlockSpec((1, d_block, n), lambda b_, di, ci: (b_, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
+        interpret=interpret,
+    )(dtA, dBx, C)
+    return y, h_last

@@ -1,0 +1,57 @@
+"""Reference linear-recurrence scans (pure jnp).
+
+``h_t = a_t * h_{t-1} + b_t`` with elementwise ``a``.  Implemented with
+``jax.lax.associative_scan`` — its HLO is a *statically unrolled* log-depth
+network of elementwise ops, so (unlike ``lax.scan``) XLA ``cost_analysis``
+accounts it exactly; this is what the dry-run lowers on CPU.  The Pallas
+kernel replaces this on TPU with a time-chunked VMEM-resident scan that never
+materializes the (B, S, ...) state in HBM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan(log_a, b, h0=None):
+    """Associative scan of h_t = exp(log_a_t) * h_{t-1} + b_t over axis 1.
+
+    log_a, b: (B, S, ...) — log-decay (<= 0 for stability) and input.
+    h0: optional (B, ...) initial state.
+    Returns h: (B, S, ...) (all states, fp32).
+    """
+    log_a = log_a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if h0 is not None:
+        # fold h0 into the first input
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0.astype(jnp.float32))
+        # note: a_1 already applied to h0; keep log_a unchanged for the scan
+        # over (a, b) pairs starting from zero state.
+
+    def combine(left, right):
+        la, ba = left
+        lb, bb = right
+        return la + lb, jnp.exp(lb) * ba + bb
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def ssm_scan(dtA, dBx, C, h0=None):
+    """Mamba-1 selective-state-space scan.
+
+    dtA: (B, S, D, N) log-decay (dt * A, A < 0); dBx: (B, S, D, N) input
+    (dt * B_t * x_t); C: (B, S, N) readout.  Returns y: (B, S, D) fp32 and
+    final state h_last: (B, D, N).
+    """
+    h = linear_scan(dtA, dBx, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", h, C.astype(jnp.float32))
+    return y, h[:, -1]
+
+
+def ssm_step(dtA_t, dBx_t, C_t, h_prev):
+    """Single decode step: h_t = exp(dtA_t)*h_prev + dBx_t; y = h_t . C_t."""
+    h = jnp.exp(dtA_t.astype(jnp.float32)) * h_prev + dBx_t.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+    return y, h

@@ -1,0 +1,29 @@
+"""Model zoo: the 10 assigned architectures as config-driven pure-JAX models.
+
+Families: dense GQA transformers, MoE (expert-parallel), Mamba-1 SSM,
+RG-LRU/local-attention hybrid, Whisper-style enc-dec, and a VLM backbone with
+a stubbed vision frontend.  All parameters are plain pytrees paired with a
+logical-axes pytree for sharding (see repro.parallel.sharding).
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_axes,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "param_axes",
+    "prefill",
+]

@@ -1,0 +1,95 @@
+"""Expert-parallel MoE with sort-based capacity dispatch.
+
+TPU-native adaptation (DESIGN.md §5): no dynamic shapes, no (tokens, E)
+cumsum materialization.  Per batch row (rows are data-sharded, so dispatch
+index arithmetic is row-local):
+
+  1. top-k routing (normalized weights),
+  2. position-in-expert via argsort over expert ids + per-expert offsets
+     (scatter-add histogram — O(T*k) memory, never O(T*E)),
+  3. scatter tokens into an (E, C, d) buffer sharded experts->model
+     (XLA SPMD turns the data->model routing into collectives),
+  4. grouped expert GEMMs batched over (row, expert),
+  5. gather back + weighted combine; tokens past capacity fall through on
+     the residual path (standard capacity dropping).
+
+Aux outputs: GShard load-balance loss and the dropped-token fraction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamBuilder
+from repro.parallel import shard
+
+
+def init_moe(b: ParamBuilder, name: str, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    b.dense(f"{name}.router", (d, e), ("embed", None), scale=0.02)
+    if cfg.gated_mlp:
+        b.dense(f"{name}.wi_gate", (e, d, f), ("experts", "fsdp", "mlp"))
+    b.dense(f"{name}.wi_up", (e, d, f), ("experts", "fsdp", "mlp"))
+    b.dense(f"{name}.wo", (e, f, d), ("experts", "mlp", "fsdp"))
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
+    ideal = tokens_per_row * cfg.top_k / cfg.n_experts
+    return max(1, int(ideal * cfg.capacity_factor + 0.5))
+
+
+def apply_moe(cfg: ModelConfig, params, name: str, x):
+    """x: (B, S, d) -> (out, aux) with aux = {load_balance_loss, drop_frac}."""
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = moe_capacity(cfg, s)
+    tk = s * k
+
+    logits = jnp.einsum("bsd,de->bse", x, params[f"{name}.router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (B, S, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # ---- position-in-expert via sort (row-local) --------------------------
+    eid = top_e.reshape(bsz, tk)
+    sort_idx = jnp.argsort(eid, axis=1, stable=True)  # (B, T*k)
+    sorted_eid = jnp.take_along_axis(eid, sort_idx, axis=1)
+    counts = jnp.zeros((bsz, e), jnp.int32).at[jnp.arange(bsz)[:, None], eid].add(1)
+    offsets = jnp.cumsum(counts, axis=1) - counts  # exclusive
+    pos_sorted = jnp.arange(tk)[None, :] - jnp.take_along_axis(offsets, sorted_eid, axis=1)
+    keep = pos_sorted < c
+    pos_sorted = jnp.minimum(pos_sorted, c - 1)
+
+    # ---- dispatch ---------------------------------------------------------
+    tok_sorted = sort_idx // k  # originating token per assignment
+    brange = jnp.arange(bsz)[:, None]
+    gathered = x[brange, tok_sorted] * keep[..., None].astype(x.dtype)  # (B, T*k, d)
+    buf = jnp.zeros((bsz, e, c, d), x.dtype).at[brange, sorted_eid, pos_sorted].add(gathered)
+    buf = shard(buf, "batch", "experts", None, None)
+
+    # ---- expert FFN (batched grouped GEMM) --------------------------------
+    up = jnp.einsum("becd,edf->becf", buf, params[f"{name}.wi_up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("becd,edf->becf", buf, params[f"{name}.wi_gate"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "batch", "experts", None, "mlp")
+    out_buf = jnp.einsum("becf,efd->becd", h, params[f"{name}.wo"])
+    out_buf = shard(out_buf, "batch", "experts", None, None)
+
+    # ---- combine ----------------------------------------------------------
+    back = out_buf[brange, sorted_eid, pos_sorted] * keep[..., None].astype(x.dtype)  # (B,T*k,d)
+    w_sorted = jnp.take_along_axis(top_w.reshape(bsz, tk), sort_idx, axis=1)
+    back = back * w_sorted[..., None].astype(x.dtype)
+    y = jnp.zeros((bsz, s, d), x.dtype).at[brange, tok_sorted].add(back)
+    y = shard(y, "batch", "seq", "embed")
+
+    # ---- aux --------------------------------------------------------------
+    frac_tokens = counts.astype(jnp.float32) / tk  # (B, E)
+    frac_probs = jnp.mean(probs, axis=1)  # (B, E)
+    lb_loss = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, {"load_balance_loss": lb_loss, "drop_frac": drop_frac}

@@ -1,0 +1,78 @@
+"""Parameter pytrees with parallel logical-axes pytrees.
+
+``ParamBuilder`` accumulates ``{name: array}`` and ``{name: axes-tuple}``
+side by side; init is split-key deterministic.  For scan-over-layers, layer
+params are stacked along a leading "layers" axis via ``stack_layers``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamBuilder:
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self._key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def _next(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, name: str, shape: tuple[int, ...], axes: tuple, scale: float | None = None):
+        """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+        self.params[name] = (jax.random.truncated_normal(self._next(), -2.0, 2.0, shape, jnp.float32) * std).astype(
+            self.dtype
+        )
+        self.axes[name] = axes
+        return self
+
+    def zeros(self, name: str, shape: tuple[int, ...], axes: tuple, dtype=None):
+        self.params[name] = jnp.zeros(shape, dtype or self.dtype)
+        self.axes[name] = axes
+        return self
+
+    def ones(self, name: str, shape: tuple[int, ...], axes: tuple, dtype=None):
+        self.params[name] = jnp.ones(shape, dtype or self.dtype)
+        self.axes[name] = axes
+        return self
+
+    def const(self, name: str, value, axes: tuple):
+        self.params[name] = value
+        self.axes[name] = axes
+        return self
+
+    def sub(self, name: str, builder: "ParamBuilder"):
+        self.params[name] = builder.params
+        self.axes[name] = builder.axes
+        return self
+
+    def build(self) -> tuple[dict, dict]:
+        return self.params, self.axes
+
+
+def stack_layers(n_layers: int, key: jax.Array, make_layer):
+    """vmap ``make_layer(key) -> (params, axes)`` over ``n_layers`` keys.
+
+    Returns stacked params (leading "layers" dim) and axes with a "layers"
+    logical axis prefixed.
+    """
+    keys = jax.random.split(key, n_layers)
+    _, axes = make_layer(keys[0])  # structure probe (cheap: small configs; reused below)
+    stacked = jax.vmap(lambda k: make_layer(k)[0])(keys)
+    axes = jax.tree.map(
+        lambda a: ("layers", *a),
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(v, (str, type(None))) for v in x),
+    )
+    return stacked, axes
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(v, (str, type(None))) for v in x)

@@ -1,0 +1,77 @@
+"""RecurrentGemma recurrent block: conv + RG-LRU gated linear recurrence.
+
+Block layout follows Griffin: linear x/gate branches, short causal conv on
+the x branch, RG-LRU recurrence, gated output projection.  The rnn width is
+tensor-parallel ("rnn" logical axis -> "model").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan import ops as rglru_ops
+from repro.kernels.rglru_scan.ref import RG_LRU_C
+from repro.models.config import ModelConfig
+from repro.models.params import ParamBuilder
+from repro.models.ssm import _causal_conv
+from repro.parallel import shard
+
+
+def init_rglru_block(b: ParamBuilder, name: str, cfg: ModelConfig):
+    d, w, kc = cfg.d_model, cfg.rnn_width, cfg.ssm_conv
+    b.dense(f"{name}.in_x", (d, w), ("fsdp", "rnn"))
+    b.dense(f"{name}.in_gate", (d, w), ("fsdp", "rnn"))
+    b.dense(f"{name}.conv_w", (kc, w), ("conv", "rnn"), scale=0.5)
+    b.zeros(f"{name}.conv_b", (w,), ("rnn",))
+    b.dense(f"{name}.w_a", (w, w), ("rnn", None), scale=0.02)
+    b.dense(f"{name}.w_i", (w, w), ("rnn", None), scale=0.02)
+    # Lambda init so that a^c in (0.9, 0.999) at r=1 (Griffin appendix)
+    b.const(f"{name}.Lambda", jnp.full((w,), 0.7, jnp.float32), ("rnn",))
+    b.dense(f"{name}.out_proj", (w, d), ("rnn", "fsdp"))
+
+
+def _gates(cfg: ModelConfig, params, name: str, x_act):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x_act, params[f"{name}.w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x_act, params[f"{name}.w_i"]).astype(jnp.float32))
+    lam = jax.nn.softplus(params[f"{name}.Lambda"].astype(jnp.float32))
+    log_a = -RG_LRU_C * lam[None, None, :] * r
+    return log_a, i
+
+
+def apply_rglru_block(cfg: ModelConfig, params, name: str, x):
+    xb = jnp.einsum("bsd,dw->bsw", x, params[f"{name}.in_x"])
+    gate = jnp.einsum("bsd,dw->bsw", x, params[f"{name}.in_gate"])
+    xb = shard(xb, "batch", "seq", "rnn")
+    x_conv, _ = _causal_conv(xb, params[f"{name}.conv_w"], params[f"{name}.conv_b"])
+    x_act = jax.nn.silu(x_conv)
+    log_a, i = _gates(cfg, params, name, x_act)
+    h, _ = rglru_ops.rglru_scan(log_a, i * x_act.astype(jnp.float32))
+    y = h.astype(x.dtype) * jax.nn.silu(gate)
+    y = shard(y, "batch", "seq", "rnn")
+    out = jnp.einsum("bsw,wd->bsd", y, params[f"{name}.out_proj"])
+    return shard(out, "batch", "seq", "embed")
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    w, kc = cfg.rnn_width, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, kc - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_cache_axes():
+    return {"conv": ("batch", "conv", "rnn"), "h": ("batch", "rnn")}
+
+
+def apply_rglru_decode(cfg: ModelConfig, params, name: str, x, cache):
+    xb = jnp.einsum("bsd,dw->bsw", x, params[f"{name}.in_x"])
+    gate = jnp.einsum("bsd,dw->bsw", x, params[f"{name}.in_gate"])
+    x_conv, conv_state = _causal_conv(xb, params[f"{name}.conv_w"], params[f"{name}.conv_b"], cache["conv"])
+    x_act = jax.nn.silu(x_conv)  # (B,1,W)
+    log_a, i = _gates(cfg, params, name, x_act)
+    h, _ = rglru_ops.rglru_step(log_a[:, 0], (i * x_act.astype(jnp.float32))[:, 0], cache["h"])
+    y = h[:, None, :].astype(x.dtype) * jax.nn.silu(gate)
+    out = jnp.einsum("bsw,wd->bsd", y, params[f"{name}.out_proj"])
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "h": h}

@@ -1,0 +1,113 @@
+"""Mamba-1 block (falcon-mamba-7b): conv + selective state-space scan.
+
+Inner width D = expand * d_model is tensor-parallel ("mlp" logical axis) —
+the scan is elementwise over D so TP requires no collectives inside the
+block (TPU adaptation note in DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import ops as ssm_ops
+from repro.models.config import ModelConfig
+from repro.models.params import ParamBuilder
+from repro.parallel import shard
+
+
+def init_mamba(b: ParamBuilder, name: str, cfg: ModelConfig):
+    d, di, n, r, kc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    b.dense(f"{name}.in_proj", (d, 2 * di), ("fsdp", "mlp"))
+    b.dense(f"{name}.conv_w", (kc, di), ("conv", "mlp"), scale=0.5)
+    b.zeros(f"{name}.conv_b", (di,), ("mlp",))
+    b.dense(f"{name}.x_proj", (di, r + 2 * n), ("mlp", None))
+    b.dense(f"{name}.dt_proj", (r, di), (None, "mlp"))
+    b.zeros(f"{name}.dt_bias", (di,), ("mlp",))
+    # A_log init: log of 1..N per channel (S4D-real init)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    b.const(f"{name}.A_log", jnp.log(a), ("mlp", "state"))
+    b.ones(f"{name}.D", (di,), ("mlp",), dtype=jnp.float32)
+    b.dense(f"{name}.out_proj", (di, d), ("mlp", "fsdp"))
+
+
+def conv_tail(x, k: int):
+    """Last k-1 positions of x (B,S,D), left-padded with zeros if S < k-1 —
+    the decode conv state after a prefill of any length."""
+    b, s, d = x.shape
+    if s >= k - 1:
+        return x[:, s - (k - 1) :]
+    pad = jnp.zeros((b, k - 1 - s, d), x.dtype)
+    return jnp.concatenate([pad, x], axis=1)
+
+
+def _causal_conv(x, w, bias, state=None):
+    """Depthwise causal conv over time.  x: (B,S,D); w: (K,D).
+
+    ``state``: optional (B, K-1, D) left context (decode); returns new state.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, D)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1) :] if k > 1 else None
+    return out + bias[None, None, :], new_state
+
+
+def _ssm_inputs(cfg: ModelConfig, params, name: str, x_act):
+    """x_act: (B, S, D) -> (dtA, dBx, C) for the scan."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    proj = jnp.einsum("bsd,de->bse", x_act, params[f"{name}.x_proj"])
+    dt_low, b_c = proj[..., :r], proj[..., r:]
+    bmat, cmat = b_c[..., :n], b_c[..., n:]  # (B,S,N)
+    dt = jnp.einsum("bsr,rd->bsd", dt_low, params[f"{name}.dt_proj"]) + params[f"{name}.dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B,S,D)
+    a = -jnp.exp(params[f"{name}.A_log"].astype(jnp.float32))  # (D,N)
+    dtA = dt[..., None] * a[None, None]  # (B,S,D,N) log-decay (<=0)
+    dBx = (dt * x_act.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+    return dtA, dBx, cmat
+
+
+def apply_mamba(cfg: ModelConfig, params, name: str, x):
+    """Full-sequence mamba block.  x: (B,S,d) -> (out, final_state)."""
+    xz = jnp.einsum("bsd,de->bse", x, params[f"{name}.in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard(x_in, "batch", "seq", "mlp")
+    x_conv, _ = _causal_conv(x_in, params[f"{name}.conv_w"], params[f"{name}.conv_b"])
+    x_act = jax.nn.silu(x_conv)
+    dtA, dBx, cmat = _ssm_inputs(cfg, params, name, x_act)
+    y, h_last = ssm_ops.ssm_scan(dtA, dBx, cmat)
+    y = y + params[f"{name}.D"][None, None, :] * x_act.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    y = shard(y, "batch", "seq", "mlp")
+    out = jnp.einsum("bse,ed->bsd", y, params[f"{name}.out_proj"])
+    return shard(out, "batch", "seq", "embed"), h_last
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, kc - 1, di), dtype),
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def mamba_cache_axes():
+    return {"conv": ("batch", "conv", "mlp"), "h": ("batch", "mlp", "state")}
+
+
+def apply_mamba_decode(cfg: ModelConfig, params, name: str, x, cache):
+    """Single-token step.  x: (B,1,d); cache: {conv:(B,K-1,D), h:(B,D,N)}."""
+    xz = jnp.einsum("bsd,de->bse", x, params[f"{name}.in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = _causal_conv(x_in, params[f"{name}.conv_w"], params[f"{name}.conv_b"], cache["conv"])
+    x_act = jax.nn.silu(x_conv)  # (B,1,D)
+    dtA, dBx, cmat = _ssm_inputs(cfg, params, name, x_act)
+    y, h = ssm_ops.ssm_step(dtA[:, 0], dBx[:, 0], cmat[:, 0], cache["h"])
+    y = y + params[f"{name}.D"][None, :] * x_act[:, 0].astype(jnp.float32)
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params[f"{name}.out_proj"])
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "h": h}

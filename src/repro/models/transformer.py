@@ -1,0 +1,470 @@
+"""Config-driven assembly of all architecture families.
+
+Layers are stored as a *list* of per-layer param dicts and applied in a
+Python-unrolled loop.  This is deliberate (DESIGN.md §Analysis): XLA's
+``cost_analysis`` counts a ``while``/``scan`` body once regardless of trip
+count, so unrolled layers keep the dry-run roofline accounting exact; XLA's
+buffer liveness makes unrolled execution memory-equivalent to scan, and
+``jax.checkpoint`` per layer provides the remat policy.
+
+Public API: init_params / param_axes / forward / loss_fn / init_cache /
+prefill / decode_step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import moe_ep as MEP
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.params import ParamBuilder
+from repro.parallel import shard
+
+# ---------------------------------------------------------------------------
+# Layer kinds per family
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    if cfg.family == "ssm":
+        return ["mamba"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        pattern = cfg.block_pattern or ("rec",)
+        return [pattern[i % len(pattern)] for i in range(cfg.n_layers)]
+    if cfg.family == "moe":
+        return ["moe"] * cfg.n_layers
+    if cfg.family == "encdec":
+        return ["decoder"] * cfg.n_layers
+    return ["dense"] * cfg.n_layers  # dense | vlm
+
+
+def _init_layer(cfg: ModelConfig, kind: str, key) -> tuple[dict, dict]:
+    b = ParamBuilder(key, dtype=jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    if kind == "mamba":
+        L.init_norm(b, "norm", cfg)
+        S.init_mamba(b, "mixer", cfg)
+    elif kind == "rec":
+        L.init_norm(b, "norm1", cfg)
+        R.init_rglru_block(b, "mixer", cfg)
+        L.init_norm(b, "norm2", cfg)
+        L.init_mlp(b, "mlp", cfg)
+    elif kind in ("dense", "attn"):
+        L.init_norm(b, "norm1", cfg)
+        L.init_attention(b, "attn", cfg)
+        L.init_norm(b, "norm2", cfg)
+        L.init_mlp(b, "mlp", cfg)
+    elif kind == "moe":
+        L.init_norm(b, "norm1", cfg)
+        L.init_attention(b, "attn", cfg)
+        L.init_norm(b, "norm2", cfg)
+        M.init_moe(b, "moe", cfg)
+        if cfg.dense_residual:
+            L.init_mlp(b, "mlp", cfg)
+    elif kind == "encoder":
+        L.init_norm(b, "norm1", cfg)
+        L.init_attention(b, "attn", cfg)
+        L.init_norm(b, "norm2", cfg)
+        L.init_mlp(b, "mlp", cfg)
+    elif kind == "decoder":
+        L.init_norm(b, "norm1", cfg)
+        L.init_attention(b, "self_attn", cfg)
+        L.init_norm(b, "norm_cross", cfg)
+        L.init_attention(b, "cross_attn", cfg)
+        L.init_norm(b, "norm2", cfg)
+        L.init_mlp(b, "mlp", cfg)
+    else:
+        raise ValueError(kind)
+    return b.build()
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    return _init(cfg, key)[0]
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    """Logical-axes pytree matching init_params; no allocation (eval_shape)."""
+    holder = {}
+
+    def probe(key):
+        p, a = _init(cfg, key)
+        holder["axes"] = a
+        return p
+
+    jax.eval_shape(probe, jax.random.PRNGKey(0))
+    return holder["axes"]
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters (for dry-run lowering)."""
+    return jax.eval_shape(lambda k: _init(cfg, k)[0], jax.random.PRNGKey(0))
+
+
+def _init(cfg: ModelConfig, key):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    eb = ParamBuilder(keys[0], dtype=dtype)
+    L.init_embedding(eb, cfg)
+    L.init_norm(eb, "final_norm", cfg)
+    params, axes = eb.build()
+    kinds = layer_kinds(cfg)
+    params["layers"], axes["layers"] = [], []
+    for i, kind in enumerate(kinds):
+        p, a = _init_layer(cfg, kind, keys[i + 1])
+        params["layers"].append(p)
+        axes["layers"].append(a)
+    if cfg.family == "encdec":
+        params["encoder"], axes["encoder"] = [], []
+        enc_keys = jax.random.split(keys[-1], cfg.encoder_layers)
+        for i in range(cfg.encoder_layers):
+            p, a = _init_layer(cfg, "encoder", enc_keys[i])
+            params["encoder"].append(p)
+            axes["encoder"].append(a)
+        nb = ParamBuilder(keys[-2], dtype=dtype)
+        L.init_norm(nb, "encoder_norm", cfg)
+        p, a = nb.build()
+        params.update(p)
+        axes.update(a)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _moe(cfg: ModelConfig, p, h):
+    if cfg.moe_impl == "ep":
+        return MEP.apply_moe_ep(cfg, p, "moe", h)
+    return M.apply_moe(cfg, p, "moe", h)
+
+
+def _apply_layer(cfg: ModelConfig, kind: str, p, x, *, memory=None, q_block, kv_block):
+    """One layer, full sequence.  ``memory``: encoder output for decoders."""
+    if kind == "mamba":
+        h, _ = S.apply_mamba(cfg, p, "mixer", L.apply_norm(cfg, p, "norm", x))
+        return x + h
+    if kind == "rec":
+        x = x + R.apply_rglru_block(cfg, p, "mixer", L.apply_norm(cfg, p, "norm1", x))
+        return x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+    if kind in ("dense", "attn"):
+        window = cfg.window if (cfg.family == "hybrid" and kind == "attn") else 0
+        a, _ = L.apply_attention(
+            cfg, p, "attn", L.apply_norm(cfg, p, "norm1", x), causal=True, window=window,
+            q_block=q_block, kv_block=kv_block,
+        )
+        x = x + a
+        return x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+    if kind == "moe":
+        a, _ = L.apply_attention(
+            cfg, p, "attn", L.apply_norm(cfg, p, "norm1", x), causal=True, q_block=q_block, kv_block=kv_block
+        )
+        x = x + a
+        h = L.apply_norm(cfg, p, "norm2", x)
+        y, aux = _moe(cfg, p, h)
+        if cfg.dense_residual:
+            y = y + L.apply_mlp(cfg, p, "mlp", h)
+        return x + y, aux
+    if kind == "encoder":
+        a, _ = L.apply_attention(
+            cfg, p, "attn", L.apply_norm(cfg, p, "norm1", x), causal=False, q_block=q_block, kv_block=kv_block
+        )
+        x = x + a
+        return x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+    if kind == "decoder":
+        a, _ = L.apply_attention(
+            cfg, p, "self_attn", L.apply_norm(cfg, p, "norm1", x), causal=True, q_block=q_block, kv_block=kv_block
+        )
+        x = x + a
+        c = _cross_attention(cfg, p, "cross_attn", L.apply_norm(cfg, p, "norm_cross", x), memory)
+        x = x + c
+        return x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+    raise ValueError(kind)
+
+
+def _cross_attention(cfg: ModelConfig, p, name: str, x, memory):
+    """Dense cross-attention (memory is short — whisper: 1500 frames)."""
+    from repro.kernels.flash_attention.ref import naive_attention
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p[f"{name}.wq"])
+    k = jnp.einsum("bsd,dke->bske", memory, p[f"{name}.wk"])
+    v = jnp.einsum("bsd,dke->bske", memory, p[f"{name}.wv"])
+    o = naive_attention(q, k, v, causal=False)
+    return jnp.einsum("bshe,hed->bsd", o, p[f"{name}.wo"])
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    x = L.embed_tokens(cfg, params, batch["tokens"])
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        # stubbed frontend: splice precomputed patch embeddings over the
+        # positions flagged by vision_mask (assignment: backbone only)
+        ve = batch["vision_embeds"].astype(x.dtype)  # (B, Tv, d)
+        mask = batch["vision_mask"]  # (B, S) bool, exactly Tv true per row
+        # positions of vision tokens: cumsum index into ve
+        idx = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1
+        idx = jnp.clip(idx, 0, ve.shape[1] - 1)
+        spliced = jnp.take_along_axis(ve, idx[..., None], axis=1)
+        x = jnp.where(mask[..., None], spliced, x)
+    return x
+
+
+def _encode(cfg: ModelConfig, params, frames, *, q_block, kv_block):
+    x = frames.astype(params["embed.tokens"].dtype)
+    if cfg.learned_pos:
+        pos = jnp.arange(x.shape[1])
+        x = x + jnp.take(params["embed.positions"], pos, axis=0)[None]
+    for p in params["encoder"]:
+        x = _apply_layer(cfg, "encoder", p, x, q_block=q_block, kv_block=kv_block)
+    return L.apply_norm(cfg, params, "encoder_norm", x)
+
+
+def forward(cfg: ModelConfig, params, batch, *, q_block: int = 1024, kv_block: int = 1024, remat: bool = False):
+    """Full forward.  Returns (logits, aux)."""
+    x = _embed_inputs(cfg, params, batch)
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(cfg, params, batch["frames"], q_block=q_block, kv_block=kv_block)
+    aux = {"load_balance_loss": jnp.zeros((), jnp.float32), "drop_frac": jnp.zeros((), jnp.float32)}
+    kinds = layer_kinds(cfg)
+    n_moe = max(1, sum(k == "moe" for k in kinds))
+
+    def run_layer(kind, p, x):
+        return _apply_layer(cfg, kind, p, x, memory=memory, q_block=q_block, kv_block=kv_block)
+
+    for kind, p in zip(kinds, params["layers"]):
+        fn = jax.checkpoint(functools.partial(run_layer, kind)) if remat else functools.partial(run_layer, kind)
+        out = fn(p, x)
+        if kind == "moe":
+            x, layer_aux = out
+            aux["load_balance_loss"] += layer_aux["load_balance_loss"] / n_moe
+            aux["drop_frac"] += layer_aux["drop_frac"] / n_moe
+        else:
+            x = out
+    x = L.apply_norm(cfg, params, "final_norm", x)
+    logits = L.unembed(cfg, params, x)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, **fw_kwargs):
+    """Next-token cross-entropy (+ MoE aux).  labels: -100 = ignore."""
+    logits, aux = forward(cfg, params, batch, **fw_kwargs)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0].astype(jnp.float32)
+    nll = (lse - label_logit) * valid.astype(jnp.float32)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_weight * aux["load_balance_loss"]
+    metrics = {
+        "loss": loss,
+        "nll": jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1),
+        "aux": aux,
+    }
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    if cfg.family == "hybrid" and kind == "attn" and cfg.window:
+        return min(max_len, cfg.window)  # rolling window cache
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    caches = []
+    for kind in layer_kinds(cfg):
+        if kind == "mamba":
+            caches.append(S.init_mamba_cache(cfg, batch, dtype))
+        elif kind == "rec":
+            caches.append(R.init_rglru_cache(cfg, batch, dtype))
+        elif kind == "decoder":
+            caches.append(
+                {
+                    "self": L.init_attention_cache(cfg, batch, max_len, dtype),
+                    "cross_k": jnp.zeros((batch, cfg.encoder_positions, cfg.n_kv_heads, cfg.d_head), dtype),
+                    "cross_v": jnp.zeros((batch, cfg.encoder_positions, cfg.n_kv_heads, cfg.d_head), dtype),
+                }
+            )
+        else:
+            caches.append(L.init_attention_cache(cfg, batch, _attn_cache_len(cfg, kind, max_len), dtype))
+    return {"layers": caches, "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    caches = []
+    for kind in layer_kinds(cfg):
+        if kind == "mamba":
+            caches.append(S.mamba_cache_axes())
+        elif kind == "rec":
+            caches.append(R.rglru_cache_axes())
+        elif kind == "decoder":
+            caches.append(
+                {
+                    "self": L.attention_cache_axes(),
+                    "cross_k": ("batch", None, "kv_heads", "head_dim"),
+                    "cross_v": ("batch", None, "kv_heads", "head_dim"),
+                }
+            )
+        else:
+            caches.append(L.attention_cache_axes())
+    return {"layers": caches, "len": ()}
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, *, q_block: int = 1024, kv_block: int = 1024):
+    """Run the prompt, fill the cache, return (last_logits, cache).
+
+    For simplicity the prompt length S is taken as dense (no padding); the
+    cache is written at positions [0, S).
+    """
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache = init_cache(cfg, bsz, max_len, dtype)
+    x = _embed_inputs(cfg, params, batch)
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(cfg, params, batch["frames"], q_block=q_block, kv_block=kv_block)
+    kinds = layer_kinds(cfg)
+    new_caches = []
+    for kind, p, lc in zip(kinds, params["layers"], cache["layers"]):
+        if kind == "mamba":
+            h_in = L.apply_norm(cfg, p, "norm", x)
+            xz = jnp.einsum("bsd,de->bse", h_in, p["mixer.in_proj"])
+            x_in, z = jnp.split(xz, 2, axis=-1)
+            x_conv, _ = S._causal_conv(x_in, p["mixer.conv_w"], p["mixer.conv_b"])
+            x_act = jax.nn.silu(x_conv)
+            dtA, dBx, cmat = S._ssm_inputs(cfg, p, "mixer", x_act)
+            from repro.kernels.ssm_scan import ops as ssm_ops
+
+            y, h_last = ssm_ops.ssm_scan(dtA, dBx, cmat)
+            y = y + p["mixer.D"][None, None, :] * x_act.astype(jnp.float32)
+            y = y.astype(x.dtype) * jax.nn.silu(z)
+            out = jnp.einsum("bse,ed->bsd", y, p["mixer.out_proj"])
+            x = x + out
+            new_caches.append({"conv": S.conv_tail(x_in, cfg.ssm_conv).astype(dtype), "h": h_last})
+        elif kind == "rec":
+            h_in = L.apply_norm(cfg, p, "norm1", x)
+            xb = jnp.einsum("bsd,dw->bsw", h_in, p["mixer.in_x"])
+            gate = jnp.einsum("bsd,dw->bsw", h_in, p["mixer.in_gate"])
+            x_conv, _ = S._causal_conv(xb, p["mixer.conv_w"], p["mixer.conv_b"])
+            x_act = jax.nn.silu(x_conv)
+            log_a, i_g = R._gates(cfg, p, "mixer", x_act)
+            from repro.kernels.rglru_scan import ops as rglru_ops
+
+            h, h_last = rglru_ops.rglru_scan(log_a, i_g * x_act.astype(jnp.float32))
+            y = h.astype(x.dtype) * jax.nn.silu(gate)
+            out = jnp.einsum("bsw,wd->bsd", y, p["mixer.out_proj"])
+            x = x + out
+            x = x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+            new_caches.append({"conv": S.conv_tail(xb, cfg.ssm_conv).astype(dtype), "h": h_last})
+        elif kind == "decoder":
+            h_in = L.apply_norm(cfg, p, "norm1", x)
+            a, (k, v) = L.apply_attention(cfg, p, "self_attn", h_in, causal=True, q_block=q_block, kv_block=kv_block)
+            x = x + a
+            ck = jnp.einsum("bsd,dke->bske", memory, p["cross_attn.wk"])
+            cv = jnp.einsum("bsd,dke->bske", memory, p["cross_attn.wv"])
+            x = x + _cross_attention(cfg, p, "cross_attn", L.apply_norm(cfg, p, "norm_cross", x), memory)
+            x = x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+            sc = lc["self"]
+            sc = {
+                "k": jax.lax.dynamic_update_slice_in_dim(sc["k"], k.astype(dtype), 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(sc["v"], v.astype(dtype), 0, axis=1),
+                "len": jnp.asarray(s, jnp.int32),
+            }
+            new_caches.append({"self": sc, "cross_k": ck.astype(dtype), "cross_v": cv.astype(dtype)})
+        else:
+            window = cfg.window if (cfg.family == "hybrid" and kind == "attn") else 0
+            h_in = L.apply_norm(cfg, p, "norm1", x)
+            name = "attn"
+            a, (k, v) = L.apply_attention(
+                cfg, p, name, h_in, causal=True, window=window, q_block=q_block, kv_block=kv_block
+            )
+            x = x + a
+            if kind == "moe":
+                h = L.apply_norm(cfg, p, "norm2", x)
+                y, _ = _moe(cfg, p, h)
+                if cfg.dense_residual:
+                    y = y + L.apply_mlp(cfg, p, "mlp", h)
+                x = x + y
+            else:
+                x = x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+            clen = lc["k"].shape[1]
+            if clen < s:
+                # rolling window cache: slot layout must match decode's
+                # circular indexing (position p at slot p % clen)
+                k_w = jnp.roll(k[:, -clen:], s % clen, axis=1)
+                v_w = jnp.roll(v[:, -clen:], s % clen, axis=1)
+                new_caches.append(
+                    {"k": k_w.astype(dtype), "v": v_w.astype(dtype), "len": jnp.asarray(s, jnp.int32)}
+                )
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(lc["k"], k.astype(dtype), 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(lc["v"], v.astype(dtype), 0, axis=1)
+                new_caches.append({"k": kc, "v": vc, "len": jnp.asarray(s, jnp.int32)})
+    x = L.apply_norm(cfg, params, "final_norm", x)
+    logits = L.unembed(cfg, params, x[:, -1:])
+    return logits, {"layers": new_caches, "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache):
+    """One decode step.  tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+    pos = cache["len"]
+    x = L.embed_tokens(cfg, params, tokens, position_offset=pos)
+    kinds = layer_kinds(cfg)
+    new_caches = []
+    for kind, p, lc in zip(kinds, params["layers"], cache["layers"]):
+        if kind == "mamba":
+            h, nc = S.apply_mamba_decode(cfg, p, "mixer", L.apply_norm(cfg, p, "norm", x), lc)
+            x = x + h
+            new_caches.append(nc)
+        elif kind == "rec":
+            h, nc = R.apply_rglru_decode(cfg, p, "mixer", L.apply_norm(cfg, p, "norm1", x), lc)
+            x = x + h
+            x = x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+            new_caches.append(nc)
+        elif kind == "decoder":
+            a, sc = L.apply_attention_decode(cfg, p, "self_attn", L.apply_norm(cfg, p, "norm1", x), lc["self"])
+            x = x + a
+            x = x + _cross_decode(cfg, p, "cross_attn", L.apply_norm(cfg, p, "norm_cross", x), lc)
+            x = x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+            new_caches.append({"self": sc, "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]})
+        elif kind == "moe":
+            a, nc = L.apply_attention_decode(cfg, p, "attn", L.apply_norm(cfg, p, "norm1", x), lc)
+            x = x + a
+            h = L.apply_norm(cfg, p, "norm2", x)
+            y, _ = _moe(cfg, p, h)
+            if cfg.dense_residual:
+                y = y + L.apply_mlp(cfg, p, "mlp", h)
+            x = x + y
+            new_caches.append(nc)
+        else:
+            window = cfg.window if (cfg.family == "hybrid" and kind == "attn") else 0
+            a, nc = L.apply_attention_decode(
+                cfg, p, "attn", L.apply_norm(cfg, p, "norm1", x), lc, window=window
+            )
+            x = x + a
+            x = x + L.apply_mlp(cfg, p, "mlp", L.apply_norm(cfg, p, "norm2", x))
+            new_caches.append(nc)
+    x = L.apply_norm(cfg, params, "final_norm", x)
+    logits = L.unembed(cfg, params, x)
+    return logits, {"layers": new_caches, "len": pos + 1}
+
+
+def _cross_decode(cfg: ModelConfig, p, name: str, x, lc):
+    from repro.kernels.flash_attention.ref import naive_attention
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p[f"{name}.wq"])
+    o = naive_attention(q, lc["cross_k"], lc["cross_v"], causal=False)
+    return jnp.einsum("bshe,hed->bsd", o, p[f"{name}.wo"])

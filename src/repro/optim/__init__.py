@@ -1,0 +1,21 @@
+"""Optimizer substrate: sharded AdamW, schedules, grad utilities."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, opt_state_axes
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.compress import (
+    CompressionState,
+    compress_gradients_init,
+    compressed_grad_transform,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "CompressionState",
+    "adamw_init",
+    "adamw_update",
+    "compress_gradients_init",
+    "compressed_grad_transform",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "opt_state_axes",
+]

@@ -1,0 +1,24 @@
+"""LR schedules as pure functions step -> multiplier (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+
+    return fn
+
+
+def linear_warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_schedule(max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

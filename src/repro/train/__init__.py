@@ -1,0 +1,13 @@
+"""Training/serving runtime: step builders + the SpotTrainer control loop."""
+
+from repro.train.steps import TrainState, make_decode_step, make_prefill, make_train_step
+from repro.train.spot_trainer import SpotTrainer, SpotTrainerConfig
+
+__all__ = [
+    "SpotTrainer",
+    "SpotTrainerConfig",
+    "TrainState",
+    "make_decode_step",
+    "make_prefill",
+    "make_train_step",
+]

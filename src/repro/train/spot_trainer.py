@@ -1,0 +1,216 @@
+"""SpotTrainer: the paper's ACC control loop driving a *real* JAX training job.
+
+The runtime counterpart of core/simulator.py: a training loop on leased spot
+capacity, with the monitoring subsystem's three events wired to real actions:
+
+    E_ckpt      -> CheckpointManager.save (async; t_c is *measured* and fed
+                   back into the decision point t_cd = t_h - t_c - t_w)
+    E_terminate -> lease ends; live training state is genuinely discarded
+    E_launch    -> restore latest checkpoint (+ data-iterator step) and resume
+
+Time is virtual (each optimizer step advances the clock by ``step_time_s``;
+checkpoints advance it by the measured-or-modelled t_c), so a multi-day spot
+campaign replays in seconds of wall time while exercising the actual
+save/discard/restore machinery.  Billing follows core/billing.py exactly.
+
+Extras beyond the paper (DESIGN.md §2):
+
+  * model-size-aware t_c: bytes(params+opt)/snapshot_bandwidth, halved again
+    by the int8 codec — the knob the paper treats as a constant;
+  * straggler watchdog: EWMA of step wall time; steps slower than
+    ``straggler_factor`` x EWMA fire a straggler event (hook: in a real
+    cluster, re-shard or replace the slow host);
+  * elastic restore: ``relaunch_shardings`` lets the relaunch land on a
+    different mesh than the one that was preempted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import HOUR, PriceTrace, SimParams, Termination, run_cost
+from repro.core.events import EventKind, SpotEventGenerator
+from repro.core.lifecycle import AppState, Lifecycle
+
+
+@dataclasses.dataclass
+class SpotTrainerConfig:
+    a_bid: float
+    ckpt_dir: str
+    max_steps: int = 200
+    step_time_s: float = 10.0  # virtual seconds per optimizer step
+    snapshot_bw_bytes_s: float = 2e9  # device->host+IO bandwidth for t_c model
+    sim: SimParams = dataclasses.field(default_factory=SimParams)
+    codec: str = "raw"
+    keep: int = 3
+    async_io: bool = True
+    straggler_factor: float = 3.0
+    measure_t_c: bool = True  # fold measured t_c back into decision points
+
+
+@dataclasses.dataclass
+class SpotRunReport:
+    completed: bool
+    steps_done: int
+    virtual_time_s: float
+    cost: float
+    n_checkpoints: int
+    n_preemptions: int
+    n_restores: int
+    straggler_events: int
+    losses: list[float]
+    lease_log: list[tuple[float, float]]  # (launch, end) virtual times
+
+
+class SpotTrainer:
+    def __init__(
+        self,
+        cfg: SpotTrainerConfig,
+        *,
+        train_step: Callable,  # (params, opt_state, batch) -> (params, opt_state, metrics)
+        init_params: Callable[[], tuple],  # () -> (params, opt_state)
+        data,  # TokenStream
+        trace: PriceTrace,
+        relaunch_shardings=None,
+        on_straggler: Callable | None = None,
+    ):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.init_params = init_params
+        self.data = data
+        self.trace = trace
+        self.relaunch_shardings = relaunch_shardings
+        self.on_straggler = on_straggler
+        self.mgr = CheckpointManager(
+            cfg.ckpt_dir, keep=cfg.keep, codec_name=cfg.codec, async_io=cfg.async_io
+        )
+        self.lifecycle = Lifecycle()
+        self.t_c_estimate = cfg.sim.t_c  # refined after the first save
+
+    # ------------------------------------------------------------------
+    def _state_bytes(self, params, opt_state) -> int:
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves((params, opt_state)))
+
+    def _virtual_t_c(self, params, opt_state) -> float:
+        bytes_ = self._state_bytes(params, opt_state)
+        if self.cfg.codec == "int8":
+            bytes_ = bytes_ // 4 + bytes_ // 256  # q + scales
+        return bytes_ / self.cfg.snapshot_bw_bytes_s
+
+    # ------------------------------------------------------------------
+    def run(self) -> SpotRunReport:
+        cfg = self.cfg
+        sim = cfg.sim
+        self.lifecycle.map_modules()  # New -> Inactive (composition)
+        params, opt_state = self.init_params()
+        step = 0
+        losses: list[float] = []
+        cost = 0.0
+        n_ckpt = n_preempt = n_restore = n_straggler = 0
+        leases: list[tuple[float, float]] = []
+        ewma = None
+
+        t_c = self._virtual_t_c(params, opt_state) if cfg.measure_t_c else sim.t_c
+        self.t_c_estimate = t_c
+
+        t = 0.0 if self.trace.price_at(0.0) <= cfg.a_bid else self._next_launch(0.0)
+        while t is not None and step < cfg.max_steps and t < self.trace.horizon:
+            launch = t
+            self.lifecycle.deploy() if self.lifecycle.state == AppState.INACTIVE else self.lifecycle.heal()
+            # resume from checkpoint if one exists (first launch: fresh state)
+            if self.mgr.latest_step() is not None:
+                (params, opt_state), extra = self.mgr.restore(
+                    (params, opt_state), shardings=self.relaunch_shardings
+                )
+                self.data.load_state_dict(extra["data"])
+                step = int(extra["step"])
+                n_restore += 1
+            t = launch + sim.t_r  # recovery overhead
+            gen = SpotEventGenerator(
+                a_bid=cfg.a_bid,
+                params=dataclasses.replace(sim, t_c=max(t_c, 1.0)),
+                price_fn=self.trace.price_at,
+            )
+            k = 1
+            terminated = None
+            while step < cfg.max_steps:
+                t_h = launch + k * sim.billing_period_s
+                t_cd = t_h - max(t_c, 1.0) - sim.t_w
+                # --- run real training steps until the checkpoint decision point
+                while step < cfg.max_steps and t + cfg.step_time_s <= t_cd:
+                    batch = next(self.data)
+                    wall0 = time.monotonic()
+                    params, opt_state, metrics = self.train_step(params, opt_state, batch)
+                    wall = time.monotonic() - wall0
+                    ewma = wall if ewma is None else 0.9 * ewma + 0.1 * wall
+                    if wall > cfg.straggler_factor * ewma and step > 3:
+                        n_straggler += 1
+                        if self.on_straggler is not None:
+                            self.on_straggler(step, wall, ewma)
+                    losses.append(float(metrics["loss"]))
+                    step += 1
+                    t += cfg.step_time_s
+                if step >= cfg.max_steps:
+                    break
+                # --- decision points (paper Eq. 3-4)
+                events = list(gen.events_for_hour(t_h))
+                kinds = {e.kind for e in events}
+                if EventKind.CKPT in kinds:
+                    wall0 = time.monotonic()
+                    self.mgr.save(
+                        step, (params, opt_state), {"step": step, "data": self.data.state_dict()}
+                    )
+                    io_wall = time.monotonic() - wall0
+                    n_ckpt += 1
+                    if cfg.measure_t_c:
+                        # virtual t_c: modelled bytes/bw; real I/O wall time is
+                        # folded in as a lower bound so t_cd stays feasible
+                        t_c = max(self._virtual_t_c(params, opt_state), io_wall)
+                        self.t_c_estimate = t_c
+                t = t_h
+                if EventKind.TERMINATE in kinds:
+                    terminated = t_h
+                    break
+                k += 1
+            end = t if terminated is None else terminated
+            cost += run_cost(self.trace, launch, end, Termination.USER, sim.billing_period_s)
+            leases.append((launch, end))
+            if terminated is None:  # completed (or horizon)
+                break
+            # genuine preemption: discard live state
+            n_preempt += 1
+            params, opt_state = self.init_params()
+            self.lifecycle.resource_failure()  # Active -> Unreachable
+            t = self._next_launch(terminated + 1e-9)
+
+        completed = step >= cfg.max_steps
+        if self.lifecycle.state != AppState.TERMINATED:
+            if self.lifecycle.state in (AppState.UNBALANCED, AppState.UNREACHABLE):
+                self.lifecycle.heal()
+            if self.lifecycle.state == AppState.ACTIVE or self.lifecycle.state == AppState.INACTIVE:
+                self.lifecycle.release()
+        self.mgr.wait()
+        return SpotRunReport(
+            completed=completed,
+            steps_done=step,
+            virtual_time_s=t if t is not None else math.inf,
+            cost=cost,
+            n_checkpoints=n_ckpt,
+            n_preemptions=n_preempt,
+            n_restores=n_restore,
+            straggler_events=n_straggler,
+            losses=losses,
+            lease_log=leases,
+        )
+
+    def _next_launch(self, t_from: float) -> float | None:
+        from repro.core.simulator import _next_launch_time
+
+        return _next_launch_time(self.trace, t_from, self.cfg.a_bid, self.cfg.sim.poll_s)

@@ -1,0 +1,96 @@
+"""Step builders: train_step / prefill / decode_step as jit-able closures.
+
+Microbatch gradient accumulation uses a Python-unrolled loop (cost-exact
+under the dry-run, memory-equivalent to scan under XLA liveness).  Remat is
+applied per layer inside the model (forward(remat=True)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt_state: dict
+    step: int = 0
+
+
+def make_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key) -> TrainState:
+    params = T.init_params(cfg, key)
+    return TrainState(params=params, opt_state=adamw_init(params, opt_cfg), step=0)
+
+
+def _split_microbatches(batch: dict, n: int) -> list[dict]:
+    if n <= 1:
+        return [batch]
+    out = []
+    for i in range(n):
+        out.append(jax.tree.map(lambda x: x.reshape(n, -1, *x.shape[1:])[i], batch))
+    return out
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    schedule: Callable | None = None,
+    *,
+    microbatches: int = 1,
+    remat: bool = True,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_of(params, mb):
+        return T.loss_fn(cfg, params, mb, q_block=q_block, kv_block=kv_block, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        mbs = _split_microbatches(batch, microbatches)
+        grads = None
+        metrics = None
+        for mb in mbs:  # unrolled accumulation
+            (loss, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+            if grads is None:
+                grads, metrics = g, m
+            else:
+                grads = jax.tree.map(jnp.add, grads, g)
+                metrics = jax.tree.map(jnp.add, metrics, m)
+        inv = 1.0 / len(mbs)
+        grads = jax.tree.map(lambda x: x * inv, grads)
+        metrics = jax.tree.map(lambda x: x * inv, metrics)
+        lr_scale = schedule(opt_state["step"]) if schedule is not None else 1.0
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg, lr_scale)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig, max_len: int, *, q_block: int = 1024, kv_block: int = 1024):
+    def prefill(params, batch):
+        return T.prefill(cfg, params, batch, max_len, q_block=q_block, kv_block=kv_block)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, cache):
+        return T.decode_step(cfg, params, tokens, cache)
+
+    return decode_step
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,89 @@
+"""Application definition (Eq. 1-2, 5-6), lifecycle FSM, event generation."""
+
+import pytest
+
+from repro.core import (
+    AppState,
+    Controller,
+    EventKind,
+    Lifecycle,
+    SimParams,
+    SpotEventGenerator,
+    spot_application,
+    step_trace,
+)
+
+
+def test_spot_application_matches_eq_5_6():
+    app = spot_application("genome-job", "m1.xlarge", a_bid=0.44, s_bid=10.0)
+    app.validate()
+    assert [t.name for t in app.tiers] == ["t1"]
+    r1, r2 = app.resources
+    assert r1.type == "spot_instance" and r2.type == "EBS" and r2.size == "1GB"
+    assert app.resource_map == {"r1": "t1", "r2": "t1"}
+    mon = app.monitoring
+    assert set(mon.events) == {EventKind.CKPT, EventKind.TERMINATE, EventKind.LAUNCH}
+    assert mon.workflow_for(EventKind.CKPT).actions == ("save_results",)
+    assert mon.workflow_for(EventKind.LAUNCH).actions == ("launch_spot", "mount_volume", "resume_tasks")
+    bids = next(p for p in app.policies if p.name == "bids")
+    assert bids.spec == {"A_bid": 0.44, "S_bid": 10.0}
+
+
+def test_controller_executes_workflow_actions_in_order():
+    app = spot_application("j", "m1.small", 0.05, 1.0)
+    calls = []
+    registry = {
+        a: (lambda a=a: (lambda **ctx: calls.append(a)))()
+        for wf in app.monitoring.workflows
+        for a in wf.actions
+    }
+    ctl = Controller(registry)
+    ctl.execute(app.monitoring.workflow_for(EventKind.LAUNCH))
+    assert calls == ["launch_spot", "mount_volume", "resume_tasks"]
+    assert ctl.log == ["W_launch:launch_spot", "W_launch:mount_volume", "W_launch:resume_tasks"]
+
+
+def test_controller_missing_handler_raises():
+    ctl = Controller({})
+    app = spot_application("j", "m1.small", 0.05, 1.0)
+    with pytest.raises(KeyError):
+        ctl.execute(app.monitoring.workflow_for(EventKind.CKPT))
+
+
+def test_lifecycle_fig3_paths():
+    lc = Lifecycle()
+    lc.map_modules()  # New -> Inactive
+    lc.deploy()  # Inactive -> Active
+    lc.overload()  # Active -> Unbalanced
+    lc.heal()  # -> Active
+    lc.resource_failure()  # -> Unreachable
+    lc.heal()  # -> Active
+    lc.release()  # -> Terminated
+    assert lc.state == AppState.TERMINATED
+    assert len(lc.history) == 7
+
+
+def test_lifecycle_rejects_illegal_transitions():
+    lc = Lifecycle()
+    with pytest.raises(ValueError):
+        lc.to(AppState.ACTIVE)  # New -> Active is not allowed (must map first)
+    lc.map_modules()
+    lc.deploy()
+    lc.release()
+    with pytest.raises(ValueError):
+        lc.to(AppState.ACTIVE)  # Terminated is absorbing
+
+
+def test_spot_event_generator_hour_boundary():
+    params = SimParams(t_c=300.0, t_w=5.0)
+    trace = step_trace([(0.0, 0.40), (3200.0, 0.60), (3500.0, 0.40)])
+    gen = SpotEventGenerator(a_bid=0.50, params=params, price_fn=trace.price_at)
+    # t_cd = 3295: price 0.60 > bid -> E_ckpt;  t_td = 3595: price 0.40 -> no terminate
+    events = list(gen.events_for_hour(3600.0))
+    assert [e.kind for e in events] == [EventKind.CKPT]
+    assert events[0].payload["deadline"] == 3600.0
+    # second boundary: quiet -> nothing
+    assert list(gen.events_for_hour(7200.0)) == []
+    # launch probe
+    assert gen.launch_event(0.0).kind == EventKind.LAUNCH
+    assert gen.launch_event(3300.0) is None

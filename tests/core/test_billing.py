@@ -1,0 +1,66 @@
+"""Billing rules (paper §IV): hour-start pricing, free partial hour on
+out-of-bid kill, full hour on user termination."""
+
+import numpy as np
+import pytest
+
+from repro.core import HOUR, Termination, bill_run, run_cost, step_trace
+
+
+def test_full_hours_charged_at_hour_start_price():
+    # price changes mid-hour must NOT affect the charge (paper's correction
+    # to Yi et al.'s simulator).
+    trace = step_trace([(0.0, 0.10), (1800.0, 5.00), (5400.0, 0.20)])
+    items = bill_run(trace, launch=0.0, end=2 * HOUR, termination=Termination.USER)
+    assert [i.price for i in items] == [0.10, 5.00]  # hour-start prices: t=0 -> .10, t=3600 -> 5.00
+    assert all(i.charged for i in items)
+
+
+def test_partial_hour_free_on_out_of_bid():
+    trace = step_trace([(0.0, 0.50)])
+    items = bill_run(trace, launch=0.0, end=1.5 * HOUR, termination=Termination.OUT_OF_BID)
+    assert len(items) == 2
+    assert items[0].charged and not items[1].charged
+    assert run_cost(trace, 0.0, 1.5 * HOUR, Termination.OUT_OF_BID) == pytest.approx(0.50)
+
+
+def test_partial_hour_charged_full_on_user_termination():
+    trace = step_trace([(0.0, 0.50)])
+    assert run_cost(trace, 0.0, 1.5 * HOUR, Termination.USER) == pytest.approx(1.00)
+    # a single second into an hour is a full hour if user-terminated
+    assert run_cost(trace, 0.0, HOUR + 1.0, Termination.USER) == pytest.approx(1.00)
+
+
+def test_termination_on_exact_boundary_does_not_start_next_hour():
+    trace = step_trace([(0.0, 0.50)])
+    for term in Termination:
+        items = bill_run(trace, 0.0, 2 * HOUR, term)
+        assert len(items) == 2
+        assert run_cost(trace, 0.0, 2 * HOUR, term) == pytest.approx(1.00)
+
+
+def test_hours_are_relative_to_launch_not_wall_clock():
+    # launch at t=1800; the first instance-hour is [1800, 5400) and is charged
+    # at the price at t=1800.
+    trace = step_trace([(0.0, 0.10), (1700.0, 0.70), (5000.0, 0.30)])
+    items = bill_run(trace, launch=1800.0, end=1800.0 + HOUR, termination=Termination.USER)
+    assert len(items) == 1
+    assert items[0].price == pytest.approx(0.70)
+
+
+def test_zero_length_run_costs_nothing():
+    trace = step_trace([(0.0, 0.50)])
+    assert bill_run(trace, 10.0, 10.0, Termination.USER) == []
+
+
+def test_billing_period_override():
+    trace = step_trace([(0.0, 0.60)])
+    # per-minute billing: 90 s user-terminated = 2 minutes charged
+    cost = run_cost(trace, 0.0, 90.0, Termination.USER, billing_period_s=60.0)
+    assert cost == pytest.approx(2 * 0.60 / 1.0)  # price is $/period here
+
+
+def test_rejects_negative_run():
+    trace = step_trace([(0.0, 0.50)])
+    with pytest.raises(ValueError):
+        bill_run(trace, 100.0, 50.0, Termination.USER)

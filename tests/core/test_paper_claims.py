@@ -1,0 +1,82 @@
+"""Statistical validation against the paper's §VII claims (trace-ensemble).
+
+The paper reports, for a 500-minute job on m1.xlarge eu-west-1 over bids
+$0.401-0.441: ACC cost +5.94 % vs OPT (min 0.33, max 10.30), ACC time
+-10.77 % vs OPT, ACC cost*time -5.56 % vs OPT, and ACC beating every
+realistic scheme (HOUR/EDGE/ADAPT) on all metrics.  We check the *signs and
+bands* on a calibrated synthetic ensemble (the 2011 eu-west traces are not
+redistributable); exact-number comparison lives in EXPERIMENTS.md §Paper.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALL_SCHEMES,
+    Scheme,
+    SimParams,
+    get_instance,
+    shift_trace,
+    simulate,
+    synthetic_trace,
+)
+
+PARAMS = SimParams()  # t_c=300, t_r=600 — Yi et al.'s constants
+
+
+@pytest.fixture(scope="module")
+def ensemble_results():
+    it = get_instance("m1.xlarge", "eu-west-1", "linux")
+    od = it.on_demand
+    bids = np.round(np.linspace(0.537 * od, 0.59 * od, 7), 3)
+    work = 500 * 60.0  # the paper's 500-minute job
+    traces = []
+    for seed in range(4):
+        t = synthetic_trace(it, horizon_days=45, seed=100 + seed)
+        for off_h in (0, 11, 23):
+            traces.append(shift_trace(t, off_h * 3600.0))
+    out = {s: {"cost": [], "time": []} for s in ALL_SCHEMES}
+    for s in ALL_SCHEMES:
+        for bid in bids:
+            for tr in traces:
+                r = simulate(tr, s, work, float(bid), PARAMS)
+                if r.completed:
+                    out[s]["cost"].append(r.cost)
+                    out[s]["time"].append(r.completion_time)
+    return {s: {k: float(np.mean(v)) for k, v in d.items()} for s, d in out.items()}
+
+
+def test_acc_cost_close_to_opt(ensemble_results):
+    """Paper: ACC within ~6 % of OPT on cost (OPT's edge = free partial hours)."""
+    opt, acc = ensemble_results[Scheme.OPT], ensemble_results[Scheme.ACC]
+    rel = acc["cost"] / opt["cost"] - 1.0
+    assert 0.0 <= rel < 0.15, f"ACC cost {rel:+.1%} vs OPT outside paper band"
+
+
+def test_acc_faster_than_opt(ensemble_results):
+    """Paper: ACC improves completion time over OPT (avg -10.77 %)."""
+    opt, acc = ensemble_results[Scheme.OPT], ensemble_results[Scheme.ACC]
+    assert acc["time"] < opt["time"]
+
+
+def test_acc_beats_all_realistic_schemes(ensemble_results):
+    acc = ensemble_results[Scheme.ACC]
+    for s in (Scheme.HOUR, Scheme.EDGE, Scheme.ADAPT, Scheme.NONE):
+        r = ensemble_results[s]
+        assert acc["cost"] < r["cost"], f"ACC should beat {s} on cost"
+        assert acc["time"] < r["time"], f"ACC should beat {s} on time"
+
+
+def test_acc_cost_time_product_near_or_below_opt(ensemble_results):
+    """Paper: ACC -5.56 % vs OPT on cost*time; allow a small positive margin
+    for trace-model mismatch."""
+    opt, acc = ensemble_results[Scheme.OPT], ensemble_results[Scheme.ACC]
+    rel = (acc["cost"] * acc["time"]) / (opt["cost"] * opt["time"]) - 1.0
+    assert rel < 0.08, f"ACC cost*time {rel:+.1%} vs OPT outside band"
+
+
+def test_none_is_catastrophic(ensemble_results):
+    """Paper Fig 7: NONE is far worse than every checkpointing scheme."""
+    none, opt = ensemble_results[Scheme.NONE], ensemble_results[Scheme.OPT]
+    assert none["cost"] > 2.0 * opt["cost"]
+    assert none["time"] > 2.0 * opt["time"]

@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) over random traces, bids and job sizes.
+
+System invariants that must hold for *any* market trajectory:
+
+  * accounting sanity (cost >= 0, completion >= work + t_r, itemized == total);
+  * OPT is an oracle lower bound among the bid-limited schemes;
+  * with the bid above every price, no scheme is ever interrupted;
+  * availability is monotone in the bid.
+"""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    HOUR,
+    Scheme,
+    SimParams,
+    Termination,
+    bill_run,
+    run_cost,
+    simulate,
+    step_trace,
+)
+
+P = SimParams(t_c=300.0, t_r=600.0, t_w=5.0)
+
+
+@st.composite
+def traces(draw):
+    """Random piecewise-constant traces on the $0.001 grid."""
+    n = draw(st.integers(min_value=1, max_value=40))
+    prices = [draw(st.integers(min_value=300, max_value=800)) / 1000.0 for _ in range(n)]
+    gaps = [draw(st.integers(min_value=60, max_value=8 * 3600)) for _ in range(n - 1)]
+    starts = [0.0]
+    for g in gaps:
+        starts.append(starts[-1] + g)
+    horizon = starts[-1] + draw(st.integers(min_value=100, max_value=400)) * HOUR
+    return step_trace(list(zip(starts, prices)), horizon_s=horizon)
+
+
+bids = st.integers(min_value=350, max_value=900).map(lambda b: b / 1000.0)
+works = st.integers(min_value=600, max_value=30 * 3600).map(float)
+
+
+@given(traces(), bids, works)
+@settings(max_examples=60, deadline=None)
+def test_accounting_invariants(trace, bid, work):
+    for s in Scheme:
+        r = simulate(trace, s, work, bid, P)
+        assert r.cost >= 0.0
+        assert r.n_checkpoints >= 0 and r.n_kills >= 0 and r.work_lost_s >= -1e-6
+        assert r.cost == sum(run.cost for run in r.runs)
+        if r.completed:
+            assert r.completion_time >= work + P.t_r - 1e-6
+            # every run is inside the horizon and ordered
+            ends = [run.end for run in r.runs]
+            assert ends == sorted(ends)
+        else:
+            assert math.isinf(r.completion_time)
+
+
+@given(traces(), bids, works)
+@settings(max_examples=60, deadline=None)
+def test_opt_is_oracle_lower_bound(trace, bid, work):
+    opt = simulate(trace, Scheme.OPT, work, bid, P)
+    for s in (Scheme.NONE, Scheme.HOUR, Scheme.EDGE, Scheme.ADAPT):
+        r = simulate(trace, s, work, bid, P)
+        if r.completed:
+            assert opt.completed
+            assert opt.completion_time <= r.completion_time + 1e-6
+
+
+@given(traces(), works)
+@settings(max_examples=40, deadline=None)
+def test_bid_above_all_prices_never_interrupted(trace, work):
+    bid = float(trace.prices.max()) + 0.001
+    base = None
+    for s in (Scheme.NONE, Scheme.OPT, Scheme.EDGE, Scheme.ACC, Scheme.ADAPT):
+        r = simulate(trace, s, work, bid, P)
+        assert r.completed
+        assert r.n_kills == 0 and r.n_self_terminations == 0
+        # EDGE still checkpoints on rising edges below the bid (inherent to
+        # the scheme); everyone else runs uninterrupted.
+        assert r.completion_time == work + P.t_r + r.n_checkpoints * P.t_c
+        if s != Scheme.EDGE:
+            assert r.n_checkpoints == 0
+            if base is None:
+                base = r.cost
+            else:  # identical billing for identical runs
+                assert r.cost == base
+
+
+@given(traces(), st.tuples(bids, bids))
+@settings(max_examples=40, deadline=None)
+def test_availability_monotone_in_bid(trace, two_bids):
+    lo, hi = min(two_bids), max(two_bids)
+    avail_lo = sum(b - a for a, b in trace.available_periods(lo))
+    avail_hi = sum(b - a for a, b in trace.available_periods(hi))
+    assert avail_hi >= avail_lo - 1e-9
+
+
+@given(traces(), st.floats(min_value=0.0, max_value=50.0), st.floats(min_value=0.1, max_value=200.0))
+@settings(max_examples=40, deadline=None)
+def test_billing_itemization_consistent(trace, launch_h, dur_h):
+    launch, end = launch_h * HOUR, launch_h * HOUR + dur_h * HOUR
+    for term in Termination:
+        items = bill_run(trace, launch, end, term)
+        assert len(items) == math.ceil(dur_h - 1e-12)
+        assert run_cost(trace, launch, end, term) == sum(i.price for i in items if i.charged)
+        # hour-start times are launch-relative
+        for k, it in enumerate(items):
+            assert it.hour_start == launch + k * HOUR
+            assert it.price == trace.price_at(it.hour_start)

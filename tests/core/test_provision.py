@@ -1,0 +1,76 @@
+"""Algorithm 1 (paper §VI-B): A_bid via Eq. 7, instance type via EET (Eq. 8)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SLA,
+    FailurePdf,
+    algorithm1,
+    catalog,
+    expected_execution_time,
+    get_instance,
+    step_trace,
+    synthetic_trace,
+)
+
+
+def test_failure_pdf_from_deterministic_trace():
+    # available 2 h, killed, available 1 h, killed, then available forever
+    trace = step_trace(
+        [(0.0, 0.40), (7200.0, 1.0), (7800.0, 0.40), (11400.0, 1.0), (12000.0, 0.40)],
+        horizon_s=100 * 3600.0,
+    )
+    pdf = FailurePdf.from_trace(trace, bid=0.50, bin_s=60.0)
+    # two failures (2 h and 1 h) + one censored period
+    assert pdf.censored == pytest.approx(1 / 3)
+    assert pdf.pdf[120] == pytest.approx(1 / 3)  # 7200 s = bin 120
+    assert pdf.pdf[60] == pytest.approx(1 / 3)
+    assert pdf.survival(0.0) == 1.0
+    assert pdf.survival(3 * 3600.0) == pytest.approx(1 / 3)
+    assert 0.0 <= pdf.hazard(1800.0, 3600.0) <= 1.0
+
+
+def test_eet_no_failures_equals_work():
+    trace = step_trace([(0.0, 0.40)], horizon_s=200 * 3600.0)
+    pdf = FailurePdf.from_trace(trace, bid=0.50)
+    assert expected_execution_time(pdf, 7200.0, 600.0) == pytest.approx(7200.0)
+
+
+def test_eet_increases_with_failure_rate():
+    quiet = step_trace([(0.0, 0.40)], horizon_s=200 * 3600.0)
+    churny_segs = []
+    t = 0.0
+    for _ in range(100):
+        churny_segs += [(t, 0.40), (t + 1800.0, 1.0)]
+        t += 3600.0
+    churny = step_trace(churny_segs, horizon_s=t + 3600.0)
+    pdf_q = FailurePdf.from_trace(quiet, 0.50)
+    pdf_c = FailurePdf.from_trace(churny, 0.50)
+    w = 2 * 3600.0
+    assert expected_execution_time(pdf_c, w, 600.0) > expected_execution_time(pdf_q, w, 600.0)
+    # a job longer than every observed available period can never finish
+    assert math.isinf(expected_execution_time(pdf_c, 10 * 3600.0, 600.0)) or expected_execution_time(
+        pdf_c, 10 * 3600.0, 600.0
+    ) > 10 * 3600.0
+
+
+def test_algorithm1_selects_feasible_minimum():
+    cat = catalog()
+    sla = SLA(min_compute_units=8.0, regions=("eu-west-1",), os="linux")
+    feasible = [it for it in cat if sla.admits(it)]
+    assert feasible and all(it.compute_units >= 8.0 for it in feasible)
+    histories = {it.name: synthetic_trace(it, horizon_days=20, seed=3) for it in feasible}
+    decision = algorithm1(5 * 3600.0, sla, cat, histories, recovery_s=600.0)
+    # Eq. 7: A_bid is the min on-demand price over the feasible list
+    assert decision.a_bid == pytest.approx(min(it.on_demand for it in feasible))
+    assert decision.instance.name in histories
+    assert decision.eet_s == pytest.approx(min(decision.candidates.values()))
+    assert np.isfinite(decision.eet_s)
+
+
+def test_algorithm1_rejects_empty_sla():
+    with pytest.raises(ValueError):
+        algorithm1(3600.0, SLA(min_compute_units=1e9), catalog(), {})

@@ -1,0 +1,150 @@
+"""Deterministic scenario tests for the six checkpointing schemes."""
+
+import math
+
+import pytest
+
+from repro.core import HOUR, Scheme, SimParams, decision_points, simulate, step_trace
+
+P = SimParams(t_c=300.0, t_r=600.0, t_w=5.0, poll_s=60.0)
+
+
+def test_decision_points_eq_3_and_4():
+    t_cd, t_td = decision_points(3600.0, P)
+    assert t_cd == pytest.approx(3600.0 - 300.0 - 5.0)
+    assert t_td == pytest.approx(3600.0 - 5.0)
+
+
+def test_quiet_trace_all_schemes_agree_except_hour():
+    """No price excursions: NONE/OPT/EDGE/ACC identical; HOUR pays ckpt pauses."""
+    trace = step_trace([(0.0, 0.40)])
+    W = 7000.0
+    rs = {s: simulate(trace, s, W, 0.50, P) for s in Scheme}
+    for s in (Scheme.NONE, Scheme.OPT, Scheme.EDGE, Scheme.ACC):
+        assert rs[s].completed
+        assert rs[s].completion_time == pytest.approx(600.0 + W)
+        assert rs[s].n_checkpoints == 0
+    # 7600 s spans 3 started hours at 0.40 (user termination -> all charged)
+    for s in (Scheme.NONE, Scheme.OPT, Scheme.EDGE, Scheme.ACC):
+        assert rs[s].cost == pytest.approx(3 * 0.40)
+    # HOUR checkpoints before each boundary: two pauses push completion out
+    assert rs[Scheme.HOUR].n_checkpoints == 2
+    assert rs[Scheme.HOUR].completion_time == pytest.approx(600.0 + W + 2 * 300.0)
+
+
+def test_acc_rides_out_intra_hour_spike_opt_gets_killed():
+    """Paper Fig 5/8: a spike contained in one instance-hour is free for ACC
+    (hour already priced at its start) but kills OPT."""
+    trace = step_trace([(0.0, 0.40), (1800.0, 1.00), (3000.0, 0.40)])
+    W, bid = 7000.0, 0.50
+    acc = simulate(trace, Scheme.ACC, W, bid, P)
+    opt = simulate(trace, Scheme.OPT, W, bid, P)
+
+    assert acc.completed and opt.completed
+    # ACC: never pauses (price at t_cd=3295 is 0.40), completes at 600 + 7000
+    assert acc.completion_time == pytest.approx(7600.0)
+    assert acc.n_checkpoints == 0 and acc.n_self_terminations == 0
+    assert acc.cost == pytest.approx(3 * 0.40)
+    # OPT: killed at 1800 (ckpt at 1500 saved 900 s of work), relaunches at
+    # 3000, recovers 600, finishes the remaining 6100 at 9700.
+    assert opt.n_kills == 1 and opt.n_checkpoints == 1
+    assert opt.completion_time == pytest.approx(9700.0)
+    # OPT's first run is a free partial hour (out-of-bid kill)
+    assert opt.cost == pytest.approx(0.0 + 2 * 0.40)
+    # the paper's two headline claims, visible in one scenario:
+    assert acc.completion_time < opt.completion_time
+    assert opt.cost < acc.cost
+
+
+def test_acc_checkpoints_and_terminates_at_boundary():
+    """Price high across the hour boundary: E_ckpt at t_cd, E_terminate at t_td,
+    relaunch when price recovers."""
+    trace = step_trace([(0.0, 0.40), (3000.0, 1.00), (10000.0, 0.40)])
+    W, bid = 7000.0, 0.50
+    acc = simulate(trace, Scheme.ACC, W, bid, P)
+    assert acc.completed
+    assert acc.n_checkpoints == 1
+    assert acc.n_self_terminations == 1
+    # saved work at ckpt start (3300): 3300 - 600 = 2700; relaunch at first
+    # poll tick >= 10000 (= 10020), recover 600, finish remaining 4300.
+    assert acc.completion_time == pytest.approx(10020.0 + 600.0 + (W - 2700.0))
+    # run 1: one full hour at 0.40 (terminated exactly on the boundary);
+    # run 2: 4900 s -> 2 hours at 0.40 (user/completion termination).
+    assert acc.cost == pytest.approx(0.40 + 2 * 0.40)
+    # work between ckpt snapshot and boundary is paused, not lost
+    assert acc.work_lost_s == pytest.approx(0.0)
+
+
+def test_acc_terminate_without_checkpoint_loses_work():
+    """Price jumps between t_cd and t_td (the t_w race): terminate fires with
+    no checkpoint; unsaved work is lost (paper §VI-A)."""
+    # jump at 3400: after t_cd=3295 (price 0.40 -> no ckpt) but before t_td=3595
+    trace = step_trace([(0.0, 0.40), (3400.0, 1.00), (9000.0, 0.40)])
+    W, bid = 20000.0, 0.50
+    acc = simulate(trace, Scheme.ACC, W, bid, P)
+    assert acc.n_self_terminations == 1
+    assert acc.n_checkpoints == 0 or acc.work_lost_s > 0
+    # work 600..3600 = 3000 s lost at the first termination
+    assert acc.work_lost_s >= 3000.0 - 1e-6
+
+
+def test_hour_checkpoints_complete_exactly_at_boundaries():
+    trace = step_trace([(0.0, 0.40)])
+    W = 3000.0
+    r = simulate(trace, Scheme.HOUR, W, 0.50, P)
+    # work 600..3300 = 2700 < W; ckpt [3300,3600); finish 3600..3900
+    assert r.completed
+    assert r.n_checkpoints == 1
+    assert r.completion_time == pytest.approx(3900.0)
+    assert r.cost == pytest.approx(2 * 0.40)
+
+
+def test_edge_checkpoints_on_rising_edges_below_bid():
+    trace = step_trace([(0.0, 0.30), (1800.0, 0.40), (5000.0, 0.35)])
+    W = 2000.0
+    r = simulate(trace, Scheme.EDGE, W, 0.50, P)
+    # edge at 1800 (0.30->0.40, still under bid): ckpt [1800,2100)
+    assert r.completed
+    assert r.n_checkpoints == 1
+    assert r.completion_time == pytest.approx(600.0 + 1200.0 + 300.0 + 800.0)
+    assert r.cost == pytest.approx(0.30)  # one started hour at 0.30
+
+
+def test_none_restarts_from_scratch():
+    trace = step_trace([(0.0, 0.40), (2000.0, 1.00), (2600.0, 0.40)])
+    W, bid = 2000.0, 0.45
+    none = simulate(trace, Scheme.NONE, W, bid, P)
+    opt = simulate(trace, Scheme.OPT, W, bid, P)
+    assert none.completed and opt.completed
+    # NONE: period1 does 1400 s of work, all lost; period2 redoes everything
+    assert none.completion_time == pytest.approx(2600.0 + 600.0 + 2000.0)
+    assert none.work_lost_s == pytest.approx(1400.0)
+    # OPT: saved 1100 s at the kill, finishes earlier
+    assert opt.completion_time == pytest.approx(2600.0 + 600.0 + (2000.0 - 1100.0))
+    assert opt.completion_time < none.completion_time
+
+
+def test_opt_skips_checkpoint_when_completing_before_kill():
+    trace = step_trace([(0.0, 0.40), (5000.0, 1.00), (6000.0, 0.40)])
+    r = simulate(trace, Scheme.OPT, 3000.0, 0.50, P)
+    assert r.completed and r.n_checkpoints == 0
+    assert r.completion_time == pytest.approx(3600.0)
+
+
+def test_never_available_never_completes():
+    trace = step_trace([(0.0, 2.00)])
+    for s in Scheme:
+        r = simulate(trace, s, 1000.0, 0.50, P)
+        assert not r.completed
+        assert math.isinf(r.completion_time)
+        assert r.cost == 0.0
+
+
+def test_kill_during_recovery_pays_nothing_and_saves_nothing():
+    # available for 300 s < t_r=600: killed mid-recovery; partial hour free
+    trace = step_trace([(0.0, 0.40), (300.0, 1.00), (50000.0, 0.40)])
+    r = simulate(trace, Scheme.OPT, 1000.0, 0.50, P)
+    assert r.completed
+    assert r.runs[0].cost == pytest.approx(0.0)
+    # completes on the second attempt (relaunch at period start 50000)
+    assert r.completion_time == pytest.approx(50000.0 + 600.0 + 1000.0, abs=1.0)

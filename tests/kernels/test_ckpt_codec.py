@@ -1,0 +1,60 @@
+"""ckpt_codec: kernel vs ref, and hypothesis round-trip error bounds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ckpt_codec.kernel import quantize_tpu
+from repro.kernels.ckpt_codec.ref import BLOCK, dequantize, quantize
+
+
+@pytest.mark.parametrize("shape", [(1000,), (64, 64), (7, 33, 5), (4096,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_ref(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 3).astype(dtype)
+    qk, sk, shk = quantize_tpu(x, interpret=True)
+    qr, sr, shr = quantize(x)
+    assert shk == shr == shape
+    # 1-ulp scale differences (reduction order) can flip exact .5 rounding
+    # ties by one step; anything larger is a real bug.
+    dq = np.abs(np.asarray(qk, np.int32) - np.asarray(qr, np.int32))
+    assert dq.max() <= 1 and (dq != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+@given(
+    st.integers(min_value=1, max_value=4000),
+    st.floats(min_value=1e-6, max_value=1e6),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_error_bound(n, scale, seed):
+    """|dequant(quant(x)) - x| <= block_max/127 * 0.5 + eps, for any x."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    q, s, shape = quantize(x)
+    dq = dequantize(q, s, shape)
+    err = np.abs(np.asarray(dq) - np.asarray(x))
+    # per-block bound: half a quantization step of that block's scale
+    blocks = np.asarray(jnp.pad(x, (0, (-n) % BLOCK)).reshape(-1, BLOCK))
+    bound = np.abs(blocks).max(axis=1, keepdims=True) / 127.0 * 0.5 + 1e-7
+    bound_full = np.repeat(bound, BLOCK, axis=1).reshape(-1)[:n]
+    assert (err <= bound_full + 1e-6 * scale).all()
+
+
+@given(st.integers(min_value=1, max_value=2000))
+@settings(max_examples=20, deadline=None)
+def test_quantize_is_idempotent_on_its_output(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    q, s, shape = quantize(x)
+    dq = dequantize(q, s, shape)
+    q2, s2, _ = quantize(dq)
+    dq2 = dequantize(q2, s2, shape)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(dq2), atol=1e-6)
+
+
+def test_zero_input():
+    q, s, shape = quantize(jnp.zeros((300,)))
+    assert np.asarray(q).max() == 0
+    np.testing.assert_array_equal(np.asarray(dequantize(q, s, shape)), np.zeros(300))

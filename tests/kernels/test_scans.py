@@ -1,0 +1,106 @@
+"""ssm_scan / rglru_scan Pallas kernels vs associative-scan refs, plus
+sequential-oracle checks and decode-step consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_tpu
+from repro.kernels.rglru_scan.ref import rglru_scan, rglru_step
+from repro.kernels.ssm_scan.kernel import ssm_scan_tpu
+from repro.kernels.ssm_scan.ref import linear_scan, ssm_scan, ssm_step
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _ssm_inputs(b, s, d, n, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    dtA = -jax.nn.softplus(jax.random.normal(k1, (b, s, d, n))).astype(dtype)
+    dBx = jax.random.normal(k2, (b, s, d, n)).astype(dtype)
+    c = jax.random.normal(k3, (b, s, n)).astype(dtype)
+    return dtA, dBx, c
+
+
+def _sequential_oracle(dtA, dBx, c):
+    b, s, d, n = dtA.shape
+    h = np.zeros((b, d, n), np.float64)
+    ys = []
+    for t in range(s):
+        h = np.exp(np.asarray(dtA[:, t], np.float64)) * h + np.asarray(dBx[:, t], np.float64)
+        ys.append(np.einsum("bdn,bn->bd", h, np.asarray(c[:, t], np.float64)))
+    return np.stack(ys, 1), h
+
+
+def test_associative_ref_matches_sequential_oracle():
+    dtA, dBx, c = _ssm_inputs(2, 64, 8, 4)
+    y_ref, h_ref = ssm_scan(dtA, dBx, c)
+    y_seq, h_seq = _sequential_oracle(dtA, dBx, c)
+    np.testing.assert_allclose(np.asarray(y_ref), y_seq, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_ref), h_seq, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 16, 4), (1, 256, 64, 16), (2, 64, 8, 8)])
+@pytest.mark.parametrize("chunk", [32, 64])
+def test_ssm_kernel_matches_ref(shape, chunk):
+    b, s, d, n = shape
+    dtA, dBx, c = _ssm_inputs(b, s, d, n)
+    y_k, h_k = ssm_scan_tpu(dtA, dBx, c, chunk=chunk, interpret=True)
+    y_r, h_r = ssm_scan(dtA, dBx, c)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_kernel_dtypes(dtype):
+    dtA, dBx, c = _ssm_inputs(1, 64, 16, 4, dtype)
+    y_k, _ = ssm_scan_tpu(dtA, dBx, c, chunk=32, interpret=True)
+    y_r, _ = ssm_scan(dtA, dBx, c)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=tol, rtol=tol)
+
+
+def test_ssm_step_streams_like_scan():
+    dtA, dBx, c = _ssm_inputs(2, 16, 8, 4)
+    y_full, h_full = ssm_scan(dtA, dBx, c)
+    h = jnp.zeros((2, 8, 4))
+    for t in range(16):
+        y_t, h = ssm_step(dtA[:, t], dBx[:, t], c[:, t], h)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, -1]), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full), atol=1e-4, rtol=1e-4)
+
+
+def _rglru_inputs(b, s, w):
+    k1, k2 = jax.random.split(KEY)
+    log_a = -jax.nn.softplus(jax.random.normal(k1, (b, s, w)))
+    gx = jax.random.normal(k2, (b, s, w))
+    return log_a, gx
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 32), (1, 256, 128)])
+@pytest.mark.parametrize("chunk", [32, 128])
+def test_rglru_kernel_matches_ref(shape, chunk):
+    b, s, w = shape
+    log_a, gx = _rglru_inputs(b, s, w)
+    h_k, last_k = rglru_scan_tpu(log_a, gx, chunk=chunk, interpret=True)
+    h_r, last_r = rglru_scan(log_a, gx)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(last_k), np.asarray(last_r), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_step_streams_like_scan():
+    log_a, gx = _rglru_inputs(2, 32, 16)
+    h_full, last = rglru_scan(log_a, gx)
+    h = jnp.zeros((2, 16))
+    for t in range(32):
+        _, h = rglru_step(log_a[:, t], gx[:, t], h)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(last), atol=1e-5, rtol=1e-5)
+
+
+def test_linear_scan_h0():
+    log_a, gx = _rglru_inputs(1, 8, 4)
+    h0 = jnp.ones((1, 4))
+    h = linear_scan(log_a, gx, h0)
+    # manual first step
+    expected0 = np.exp(np.asarray(log_a[:, 0])) * 1.0 + np.asarray(gx[:, 0])
+    np.testing.assert_allclose(np.asarray(h[:, 0]), expected0, atol=1e-5, rtol=1e-5)

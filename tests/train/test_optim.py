@@ -1,0 +1,90 @@
+"""AdamW, schedules, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    compress_gradients_init,
+    compressed_grad_transform,
+    linear_warmup_cosine,
+)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        g = {"x": 2 * params["x"]}  # d/dx x^2
+        params, state, m = adamw_update(params, g, state, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.05
+    assert int(state["step"]) == 200
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    params = {"x": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    g = {"x": jnp.full(4, 1e6)}
+    _, _, m = adamw_update(params, g, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_bf16_moments_shapes_and_dtype():
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros((8, 8), jnp.bfloat16)}
+    state = adamw_init(params, cfg)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    p2, s2, _ = adamw_update(params, g, state, cfg)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert s2["nu"]["w"].dtype == jnp.bfloat16
+
+
+def test_schedule_warmup_then_decay():
+    fn = linear_warmup_cosine(10, 110, final_frac=0.1)
+    assert float(fn(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(fn(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(fn(jnp.asarray(60))) < 1.0
+    assert float(fn(jnp.asarray(1000))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_compression_error_feedback_preserves_sum():
+    """EF property: sum of transmitted grads -> sum of true grads over time."""
+    params = {"w": jnp.zeros((512,))}
+    state = compress_gradients_init(params)
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(512)
+    sent_sum = np.zeros(512)
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=512) * (1 + i % 3), jnp.float32)}
+        true_sum += np.asarray(g["w"])
+        gq, state = compressed_grad_transform(g, state)
+        sent_sum += np.asarray(gq["w"])
+    # residual is bounded by one quantization step; sums track closely
+    resid = np.abs(np.asarray(state.residual["w"]))
+    np.testing.assert_allclose(sent_sum + np.asarray(state.residual["w"]), true_sum, rtol=1e-5, atol=1e-4)
+    assert resid.max() < 0.2
+
+
+def test_compressed_training_converges_close_to_exact():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0)
+
+    def run(compress):
+        params = {"x": jnp.asarray(np.linspace(-2, 2, 64), jnp.float32)}
+        state = adamw_init(params, cfg)
+        comp = compress_gradients_init(params)
+        for _ in range(100):
+            g = {"x": 2 * params["x"]}
+            if compress:
+                g, comp = compressed_grad_transform(g, comp)
+            params, state, _ = adamw_update(params, g, state, cfg)
+        return np.abs(np.asarray(params["x"])).max()
+
+    exact, comp = run(False), run(True)
+    assert comp < max(4 * exact, 0.08)

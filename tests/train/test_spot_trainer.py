@@ -1,0 +1,131 @@
+"""End-to-end fault tolerance: SpotTrainer under preemptions.
+
+A tiny dense model trains under a price trace engineered to preempt the
+lease; the trainer must checkpoint at t_cd, terminate at t_td, restore on
+relaunch, and converge to the same final state as an uninterrupted run
+(bit-exact with codec="raw" — data order is a pure function of step).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import HOUR, SimParams, step_trace
+from repro.data import TokenStream
+from repro.optim import AdamWConfig
+from repro.train.spot_trainer import SpotTrainer, SpotTrainerConfig
+from repro.train.steps import make_train_step
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_init
+
+OPT = AdamWConfig(lr=1e-3, moment_dtype="float32")
+
+
+def _setup(tmp_path, trace, max_steps=24, a_bid=0.5, step_time=300.0):
+    cfg = get_smoke_config("glm4-9b")
+    train_step = jax.jit(make_train_step(cfg, OPT, remat=False, q_block=16, kv_block=16))
+    data = TokenStream(vocab_size=cfg.vocab_size, batch=2, seq_len=32, seed=7)
+
+    def init():
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        return params, adamw_init(params, OPT)
+
+    tcfg = SpotTrainerConfig(
+        a_bid=a_bid,
+        ckpt_dir=str(tmp_path),
+        max_steps=max_steps,
+        step_time_s=step_time,
+        sim=SimParams(t_c=300.0, t_r=600.0),
+        async_io=False,
+    )
+    return SpotTrainer(tcfg, train_step=train_step, init_params=init, data=data, trace=trace), data
+
+
+def test_uninterrupted_run_completes(tmp_path):
+    trace = step_trace([(0.0, 0.40)])
+    trainer, _ = _setup(tmp_path / "a", trace)
+    report = trainer.run()
+    assert report.completed
+    assert report.n_preemptions == 0
+    assert report.steps_done == 24
+    assert report.cost > 0
+    # loss should decrease overall on the synthetic corpus
+    assert np.mean(report.losses[-5:]) < np.mean(report.losses[:5])
+
+
+def test_preemption_checkpoint_restore_and_equivalence(tmp_path):
+    """Price spikes over A_bid across hour boundaries: the trainer must be
+    preempted, restore, and end bit-identical to the uninterrupted run."""
+    # spike covers t_cd/t_td of hour 1 (3600) and ends at 4000
+    trace = step_trace([(0.0, 0.40), (3200.0, 1.00), (4000.0, 0.40)])
+    trainer, _ = _setup(tmp_path / "spot", trace)
+    report = trainer.run()
+    assert report.completed
+    assert report.n_preemptions == 1
+    assert report.n_checkpoints >= 1
+    assert report.n_restores == 1
+
+    quiet, _ = _setup(tmp_path / "quiet", step_trace([(0.0, 0.40)]))
+    ref = quiet.run()
+    assert ref.completed
+    # same steps, same data order -> identical final losses
+    np.testing.assert_allclose(report.losses[-1], ref.losses[-1], rtol=1e-6)
+    # but the preempted run took longer and redid at most a handful of steps
+    assert report.virtual_time_s > ref.virtual_time_s
+
+
+def test_preemption_cost_follows_billing(tmp_path):
+    trace = step_trace([(0.0, 0.40), (3200.0, 1.00), (4000.0, 0.40)])
+    trainer, _ = _setup(tmp_path / "b", trace)
+    report = trainer.run()
+    # lease 1: [0, 3600) -> one hour at 0.40; lease 2 starts >= 4000
+    assert report.lease_log[0][1] == pytest.approx(3600.0)
+    assert report.cost == pytest.approx(
+        sum(
+            0.40 * np.ceil((end - start) / HOUR - 1e-9)
+            for start, end in report.lease_log
+        )
+    )
+
+
+def test_straggler_watchdog_fires(tmp_path):
+    import time as time_mod
+
+    trace = step_trace([(0.0, 0.40)])
+    trainer, data = _setup(tmp_path / "c", trace, max_steps=12)
+    events = []
+    trainer.on_straggler = lambda step, wall, ewma: events.append(step)
+    orig = trainer.train_step
+
+    # warm up the jit cache so the EWMA reflects steady-state step time
+    p0, o0 = trainer.init_params()
+    orig(p0, o0, data.batch_at(0))
+
+    calls = {"n": 0}
+
+    def slow_step(p, o, b):
+        calls["n"] += 1
+        if calls["n"] == 9:
+            time_mod.sleep(2.0)
+        return orig(p, o, b)
+
+    trainer.train_step = slow_step
+    report = trainer.run()
+    assert report.straggler_events >= 1
+    assert events
+
+
+def test_model_size_aware_t_c(tmp_path):
+    """t_c must scale with state bytes / snapshot bandwidth (DESIGN.md §2)."""
+    trace = step_trace([(0.0, 0.40)])
+    trainer, _ = _setup(tmp_path / "d", trace, max_steps=2)
+    params, opt = trainer.init_params()
+    bytes_ = trainer._state_bytes(params, opt)
+    assert trainer._virtual_t_c(params, opt) == pytest.approx(bytes_ / 2e9)
+    cfg_q = dataclasses.replace(trainer.cfg, codec="int8")
+    trainer.cfg = cfg_q
+    assert trainer._virtual_t_c(params, opt) < bytes_ / 2e9 / 2
