@@ -1,0 +1,60 @@
+"""Fleet provisioning demo: one workload, four placement policies.
+
+Submits a stream of jobs to the fleet controller under each policy and prints
+per-policy cost, completion and migration numbers, then follows a single job
+through its migration chain (kill on one type, resume from checkpoint on
+another with ECU-scaled remaining work).
+
+Run:  PYTHONPATH=src python examples/fleet_demo.py
+"""
+
+from repro.core.market import HOUR
+from repro.core.provision import SLA
+from repro.fleet import (
+    FleetController,
+    Workload,
+    batched_fleet_traces,
+    default_policies,
+    select_types,
+)
+
+sla = SLA(min_compute_units=4.0, os="linux")
+types = select_types(sla, n_types=16)
+seed = 0
+traces = batched_fleet_traces(types, [seed], horizon_days=10.0)[seed]
+histories = batched_fleet_traces(types, [seed], horizon_days=10.0, history=True)[seed]
+workload = Workload.poisson(
+    n_jobs=30, mean_interarrival_s=0.5 * HOUR, mean_work_s=4 * HOUR, seed=seed, sla=sla
+)
+
+print(f"{len(workload)} jobs, {workload.total_work_s / HOUR:.0f} reference-ECU hours of work, "
+      f"{len(types)} instance types\n")
+print(f"{'policy':<14} {'cost $':>8} {'done':>7} {'mean_h':>7} {'kills':>6} {'migr':>5} {'outages':>8}")
+
+migrated_example = None
+for policy in default_policies(n_replicas=2):
+    ctrl = FleetController(types, traces, policy, histories=histories)
+    res = ctrl.run(workload)
+    s = res.summary()
+    print(
+        f"{policy.name:<14} {s['total_cost']:>8.2f} {s['n_completed']:>3.0f}/{s['n_jobs']:<3.0f} "
+        f"{s['mean_completion_h']:>7.2f} {s['n_kills']:>6.0f} {s['n_migrations']:>5.0f} "
+        f"{s['n_outages']:>8.0f}"
+    )
+    if migrated_example is None:
+        for o in res.outcomes.values():
+            if o.n_migrations >= 1 and o.completed:
+                migrated_example = (policy.name, o)
+                break
+
+if migrated_example:
+    policy_name, o = migrated_example
+    print(f"\n# job {o.job.id} under {policy_name}: {o.n_migrations} migration(s), "
+          f"work {o.job.work_s / HOUR:.1f} ref-ECU-h")
+    for rec in o.attempts:
+        tag = "done" if rec.completed else ("KILL" if rec.killed else "end")
+        print(
+            f"  {rec.instance:<28} [{rec.launch / HOUR:7.2f}h, {rec.end / HOUR:7.2f}h] "
+            f"{tag:<4} saved {rec.initial_saved_ref / HOUR:.2f} -> {rec.saved_after_ref / HOUR:.2f} "
+            f"ref-ECU-h  ${rec.cost:.3f}"
+        )

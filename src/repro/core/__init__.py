@@ -21,10 +21,13 @@ from repro.core.market import (
     TraceModel,
     catalog,
     constant_trace,
+    ensemble_seed,
     get_instance,
+    sample_traces_batch,
     shift_trace,
     step_trace,
     synthetic_trace,
+    synthetic_traces_batch,
     trace_ensemble,
 )
 from repro.core.provision import SLA, ProvisioningDecision, algorithm1, expected_execution_time
@@ -37,7 +40,7 @@ from repro.core.schemes import (
     SimParams,
     decision_points,
 )
-from repro.core.simulator import SimResult, simulate, sweep_bids
+from repro.core.simulator import AttemptResult, SimResult, simulate, simulate_attempt, sweep_bids
 
 __all__ = [
     "HOUR",
@@ -45,6 +48,7 @@ __all__ = [
     "REALISTIC_SCHEMES",
     "AppState",
     "Application",
+    "AttemptResult",
     "Controller",
     "Event",
     "EventKind",
@@ -67,14 +71,18 @@ __all__ = [
     "catalog",
     "constant_trace",
     "decision_points",
+    "ensemble_seed",
     "expected_execution_time",
     "get_instance",
     "run_cost",
+    "sample_traces_batch",
     "shift_trace",
     "simulate",
+    "simulate_attempt",
     "spot_application",
     "step_trace",
     "sweep_bids",
     "synthetic_trace",
+    "synthetic_traces_batch",
     "trace_ensemble",
 ]

@@ -19,6 +19,7 @@ Everything is deterministic given a seed.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Sequence
 
 import numpy as np
@@ -154,19 +155,45 @@ class PriceTrace:
         return float(self.times[i])
 
     def available_periods(self, bid: float) -> list[tuple[float, float]]:
-        """Maximal intervals where ``price <= bid`` (instance can run)."""
+        """Maximal intervals where ``price <= bid`` (instance can run).
+
+        Vectorized (``np.diff``/``np.nonzero`` over the segment mask): this is
+        the hot path of every (scheme, bid) sweep and of fleet simulations.
+        """
         ok = self.prices <= bid
-        periods: list[tuple[float, float]] = []
-        start = None
-        for i, flag in enumerate(ok):
-            if flag and start is None:
-                start = self.times[i]
-            if not flag and start is not None:
-                periods.append((float(start), float(self.times[i])))
-                start = None
-        if start is not None:
-            periods.append((float(start), self.horizon))
-        return periods
+        if not ok.any():
+            return []
+        edges = np.diff(ok.astype(np.int8))
+        starts = np.nonzero(edges == 1)[0] + 1
+        ends = np.nonzero(edges == -1)[0] + 1
+        if ok[0]:
+            starts = np.concatenate(([0], starts))
+        if ok[-1]:
+            ends = np.concatenate((ends, [len(self.prices)]))
+        # times[len(prices)] is the horizon, so both cases read self.times.
+        return [(float(self.times[s]), float(self.times[e])) for s, e in zip(starts, ends)]
+
+    def next_available(self, bid: float, t: float) -> float | None:
+        """Earliest time ``>= t`` with ``price <= bid`` (None if never again)."""
+        if t >= self.horizon:
+            return None
+        i = self.segment_index(t)
+        ok = self.prices <= bid
+        if ok[i]:
+            return t
+        later = np.nonzero(ok[i + 1 :])[0]
+        if len(later) == 0:
+            return None
+        return float(self.times[i + 1 + later[0]])
+
+    def next_out_of_bid(self, bid: float, t: float) -> float:
+        """End of the availability period containing ``t``: first boundary
+        after ``t`` whose segment price exceeds ``bid`` (horizon if none)."""
+        i = self.segment_index(t)
+        bad = np.nonzero(self.prices[i + 1 :] > bid)[0]
+        if len(bad) == 0:
+            return self.horizon
+        return float(self.times[i + 1 + bad[0]])
 
     def rising_edges(self) -> np.ndarray:
         """Times at which the price strictly increases."""
@@ -249,6 +276,89 @@ class TraceModel:
         return PriceTrace(times=np.asarray(times), prices=np.asarray(prices))
 
 
+def sample_traces_batch(
+    models: Sequence[TraceModel],
+    horizon_s: float,
+    seeds: Sequence[int],
+) -> list[PriceTrace]:
+    """NumPy-batched trace generation: one trace per (model, seed) pair.
+
+    The regime-switching Markov chain is advanced once per segment for the
+    whole batch (a few thousand vector steps) instead of once per segment per
+    trace in Python, so generating the full 64-type x many-seed grid of a
+    fleet sweep takes tens of milliseconds rather than seconds.
+
+    Each entry draws from its own ``default_rng(seed)`` stream, so a trace is
+    deterministic in ``(model, horizon_s, seed)`` regardless of what else is
+    in the batch.  The stream call *order* differs from :meth:`TraceModel.sample`
+    (bulk array draws vs per-segment draws), so batched traces are
+    statistically identical but not bitwise equal to scalar ones.
+    """
+    if len(models) != len(seeds):
+        raise ValueError("models and seeds must have equal length")
+    n = len(models)
+    if n == 0:
+        return []
+    # Expected segment dwell is ~3100 s under the stationary regime mix;
+    # 2x headroom makes running out of pre-drawn segments astronomically rare
+    # (scalar fallback below covers it).
+    k_max = max(64, int(horizon_s / 1500.0))
+
+    u = np.empty((n, k_max))  # regime-transition uniforms
+    z = np.empty((n, k_max))  # base-band normals
+    e = np.empty((n, k_max))  # dwell exponentials
+    v = np.empty((n, k_max))  # elevated/spike uniforms
+    for b, seed in enumerate(seeds):
+        rng = np.random.default_rng(seed)
+        u[b] = rng.random(k_max)
+        z[b] = rng.standard_normal(k_max)
+        e[b] = rng.exponential(1.0, k_max)
+        v[b] = rng.random(k_max)
+
+    def col(attr: str) -> np.ndarray:
+        return np.asarray([getattr(m, attr) for m in models])[:, None]
+
+    p_elevated, p_spike = col("p_elevated"), col("p_spike")
+    regimes = np.empty((n, k_max), dtype=np.int8)  # 0 base, 1 elevated, 2 spike
+    regime = np.zeros(n, dtype=np.int8)
+    pe, ps = p_elevated[:, 0], p_spike[:, 0]
+    for k in range(k_max):
+        regimes[:, k] = regime
+        uk = u[:, k]
+        from_base = np.where(uk < pe, 1, 0)
+        from_elev = np.where(uk < ps, 2, np.where(uk < 0.75, 0, 1))
+        from_spike = np.where(uk < 0.7, 0, 1)
+        regime = np.select(
+            [regime == 0, regime == 1], [from_base, from_elev], default=from_spike
+        ).astype(np.int8)
+
+    is_base, is_elev, is_spike = regimes == 0, regimes == 1, regimes == 2
+    price_base = col("base_center") + col("base_jitter") * z
+    price_elev = col("elevated_low") + (col("elevated_high") - col("elevated_low")) * v
+    price_spike = col("spike_low") + (col("spike_high") - col("spike_low")) * v
+    prices = np.select([is_base, is_elev, is_spike], [price_base, price_elev, price_spike])
+    grid = col("grid")
+    prices = np.maximum(grid, np.round(prices / grid) * grid)
+
+    dwell_scale = np.select(
+        [is_base, is_elev, is_spike],
+        [col("dwell_base_s"), col("dwell_elevated_s"), col("dwell_spike_s")],
+    )
+    dwell = np.maximum(30.0, e * dwell_scale)
+    cum = np.cumsum(dwell, axis=1)
+
+    out: list[PriceTrace] = []
+    for b in range(n):
+        if cum[b, -1] < horizon_s:  # ran out of pre-drawn segments
+            out.append(models[b].sample(horizon_s, seeds[b]))
+            continue
+        n_seg = int(np.searchsorted(cum[b], horizon_s)) + 1
+        times = np.concatenate(([0.0], cum[b, :n_seg]))
+        times[-1] = min(times[-1], horizon_s)
+        out.append(PriceTrace(times=times, prices=prices[b, :n_seg].copy()))
+    return out
+
+
 def synthetic_trace(
     instance: InstanceType,
     horizon_days: float = 30.0,
@@ -257,6 +367,49 @@ def synthetic_trace(
     """Convenience: calibrated trace for one instance type."""
     model = TraceModel.for_instance(instance)
     return model.sample(horizon_days * 24 * HOUR, seed)
+
+
+def ensemble_seed(instance: InstanceType, base_seed: int = 0, i: int = 0) -> int:
+    """Decorrelated per-instance seed.
+
+    ``trace_ensemble(it, seed=s)`` uses raw seeds ``s*1000 + i`` for every
+    instance type, so two *different* types sampled with the same base seed
+    share an rng stream: their model parameters all scale linearly with the
+    on-demand price, making the traces near-proportional — a price spike then
+    hits every type simultaneously and silently defeats fleet
+    diversification.  Mixing the instance name into the seed restores
+    independence while staying deterministic.
+    """
+    if base_seed < 0:
+        raise ValueError("base_seed must be non-negative")
+    h = zlib.crc32(instance.name.encode())
+    return ((base_seed * 1000 + i) << 32) | h
+
+
+def synthetic_traces_batch(
+    instances: Sequence[InstanceType],
+    horizon_days: float = 30.0,
+    base_seed: int = 0,
+    n_seeds: int = 1,
+) -> dict[str, list[PriceTrace]]:
+    """Batched, decorrelated traces for a set of instance types.
+
+    Returns ``{instance.name: [trace_for_seed_0, ..., trace_for_seed_{n-1}]}``
+    generated in one :func:`sample_traces_batch` call with
+    :func:`ensemble_seed` streams.
+    """
+    models = []
+    seeds = []
+    for it in instances:
+        m = TraceModel.for_instance(it)
+        for i in range(n_seeds):
+            models.append(m)
+            seeds.append(ensemble_seed(it, base_seed, i))
+    traces = sample_traces_batch(models, horizon_days * 24 * HOUR, seeds)
+    out: dict[str, list[PriceTrace]] = {}
+    for j, it in enumerate(instances):
+        out[it.name] = traces[j * n_seeds : (j + 1) * n_seeds]
+    return out
 
 
 def trace_ensemble(

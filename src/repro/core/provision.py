@@ -80,26 +80,43 @@ def algorithm1(
     histories: dict[str, PriceTrace],
     recovery_s: float = 300.0,
     reference_ecu: float = 8.0,
+    pdf_cache: dict[tuple[str, float], FailurePdf] | None = None,
 ) -> ProvisioningDecision:
-    """Paper Algorithm 1.  ``histories`` maps instance name -> price history."""
+    """Paper Algorithm 1.  ``histories`` maps instance name -> price history.
+
+    ``pdf_cache`` (keyed ``(name, round(bid, 6))``) lets repeated callers —
+    the fleet controller re-provisions on every migration — skip rebuilding
+    failure pdfs from the same history.
+    """
     feasible = [it for it in catalog if sla.admits(it)]
     if not feasible:
         raise ValueError("no instance type meets the SLA")
     a_bid = min(it.on_demand for it in feasible)  # Eq. 7
 
     candidates: dict[str, float] = {}
-    best: tuple[float, InstanceType] | None = None
+    best: tuple[float, float, InstanceType] | None = None
     for it in feasible:
         hist = histories.get(it.name)
         if hist is None:
             continue
-        pdf = FailurePdf.from_trace(hist, a_bid)
-        # scale work to this instance's speed
-        w_scaled = work_s * (reference_ecu / it.compute_units)
-        eet = expected_execution_time(pdf, w_scaled, recovery_s)
+        if hist.next_available(a_bid, 0.0) is None:
+            # Never below A_bid in recorded history: the empty failure pdf is
+            # all censored mass, which Eq. 8 would misread as "never fails".
+            eet = math.inf
+        else:
+            key = (it.name, round(a_bid, 6))
+            pdf = pdf_cache.get(key) if pdf_cache is not None else None
+            if pdf is None:
+                pdf = FailurePdf.from_trace(hist, a_bid)
+                if pdf_cache is not None:
+                    pdf_cache[key] = pdf
+            # scale work to this instance's speed
+            w_scaled = work_s * (reference_ecu / it.compute_units)
+            eet = expected_execution_time(pdf, w_scaled, recovery_s)
         candidates[it.name] = eet
-        if best is None or eet < best[0]:
-            best = (eet, it)
+        # ties (incl. the all-infeasible case) break towards cheaper on-demand
+        if best is None or (eet, it.on_demand) < (best[0], best[1]):
+            best = (eet, it.on_demand, it)
     if best is None:
         raise ValueError("no price history available for any feasible type")
-    return ProvisioningDecision(a_bid=a_bid, instance=best[1], eet_s=best[0], candidates=candidates)
+    return ProvisioningDecision(a_bid=a_bid, instance=best[2], eet_s=best[0], candidates=candidates)

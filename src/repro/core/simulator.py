@@ -69,6 +69,7 @@ def simulate(
     bid: float,
     params: SimParams | None = None,
     failure_pdf: FailurePdf | None = None,
+    initial_saved_work: float = 0.0,
 ) -> SimResult:
     """Simulate one job of ``work_s`` seconds under ``scheme`` with ``bid``.
 
@@ -76,13 +77,21 @@ def simulate(
     taken as infinite).  For ADAPT, ``failure_pdf`` defaults to the pdf
     estimated from this trace's own history (the paper estimates it from the
     published 3-month history).
+
+    ``initial_saved_work`` resumes a job mid-trace from an existing
+    checkpoint: the first launch restores that much completed work (the job
+    finishes once total work reaches ``work_s``).  This is how the fleet
+    migration engine re-homes a killed job on a new instance type; the
+    default of 0.0 keeps single-job behavior identical.
     """
     params = params or SimParams()
+    if not 0.0 <= initial_saved_work <= work_s:
+        raise ValueError(f"initial_saved_work {initial_saved_work} outside [0, {work_s}]")
     if scheme == Scheme.ACC:
-        return _simulate_acc(trace, work_s, bid, params)
+        return _simulate_acc(trace, work_s, bid, params, initial_saved_work)
     if scheme == Scheme.ADAPT and failure_pdf is None:
         failure_pdf = FailurePdf.from_trace(trace, bid)
-    return _simulate_bid_limited(trace, scheme, work_s, bid, params, failure_pdf)
+    return _simulate_bid_limited(trace, scheme, work_s, bid, params, failure_pdf, initial_saved_work)
 
 
 # ---------------------------------------------------------------------------
@@ -97,8 +106,9 @@ def _simulate_bid_limited(
     bid: float,
     params: SimParams,
     failure_pdf: FailurePdf | None,
+    initial_saved_work: float = 0.0,
 ) -> SimResult:
-    saved = 0.0
+    saved = initial_saved_work
     n_ckpt = 0
     n_kills = 0
     work_lost = 0.0
@@ -208,6 +218,85 @@ def _run_period(trace, scheme, launch, start_work, b, saved, work_s, params, fai
 
 
 # ---------------------------------------------------------------------------
+# Single-attempt primitive (fleet migration engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttemptResult:
+    """Outcome of one instance attempt (a single availability period).
+
+    All times are absolute on the given trace.  ``work_done_s`` and
+    ``saved_work_s`` include ``initial_saved_work``; on a kill only
+    ``saved_work_s`` survives to the next attempt.
+    """
+
+    launch: float
+    end: float  # completion instant, kill instant, or horizon
+    completed: bool
+    killed: bool  # provider out-of-bid kill at ``end`` (False at horizon)
+    cost: float
+    work_done_s: float
+    saved_work_s: float
+    n_checkpoints: int
+
+    def termination(self) -> Termination:
+        return Termination.USER if self.completed else Termination.OUT_OF_BID
+
+
+def simulate_attempt(
+    trace: PriceTrace,
+    scheme: Scheme,
+    work_s: float,
+    bid: float,
+    start_t: float = 0.0,
+    params: SimParams | None = None,
+    failure_pdf: FailurePdf | None = None,
+    initial_saved_work: float = 0.0,
+) -> AttemptResult | None:
+    """Run a *single* instance attempt: launch at the first availability at or
+    after ``start_t`` and walk one availability period to completion, kill, or
+    horizon.
+
+    Unlike :func:`simulate`, which relaunches on the *same* trace after every
+    kill, this returns control to the caller at the first kill so a fleet
+    controller can re-provision onto a different instance type (migration).
+    Returns ``None`` when the trace is never available again under ``bid``.
+    ACC is bid-unlimited (the instance is never provider-killed), so fleet
+    attempts use the bid-limited schemes.
+    """
+    params = params or SimParams()
+    if scheme == Scheme.ACC:
+        raise ValueError("simulate_attempt supports bid-limited schemes; use simulate() for ACC")
+    if not 0.0 <= initial_saved_work <= work_s:
+        raise ValueError(f"initial_saved_work {initial_saved_work} outside [0, {work_s}]")
+    if scheme == Scheme.ADAPT and failure_pdf is None:
+        failure_pdf = FailurePdf.from_trace(trace, bid)
+
+    launch = trace.next_available(bid, start_t)
+    if launch is None or launch >= trace.horizon:
+        return None
+    b = trace.next_out_of_bid(bid, launch)
+    killed = b < trace.horizon
+    saved = initial_saved_work
+
+    start_work = launch + params.t_r
+    if start_work >= b:
+        # killed (or horizon) before recovery finished: no progress
+        cost = billing.run_cost(trace, launch, b, Termination.OUT_OF_BID, params.billing_period_s)
+        return AttemptResult(launch, b, False, killed, cost, saved, saved, 0)
+
+    done_at, work_end, saved, took = _run_period(
+        trace, scheme, launch, start_work, b, saved, work_s, params, failure_pdf
+    )
+    if done_at is not None:
+        cost = billing.run_cost(trace, launch, done_at, Termination.USER, params.billing_period_s)
+        return AttemptResult(launch, done_at, True, False, cost, work_s, saved, took)
+    cost = billing.run_cost(trace, launch, b, Termination.OUT_OF_BID, params.billing_period_s)
+    return AttemptResult(launch, b, False, killed, cost, work_end, saved, took)
+
+
+# ---------------------------------------------------------------------------
 # ACC (paper §VI)
 # ---------------------------------------------------------------------------
 
@@ -225,8 +314,14 @@ def _next_launch_time(trace: PriceTrace, t_from: float, a_bid: float, poll_s: fl
     return None
 
 
-def _simulate_acc(trace: PriceTrace, work_s: float, a_bid: float, params: SimParams) -> SimResult:
-    saved = 0.0
+def _simulate_acc(
+    trace: PriceTrace,
+    work_s: float,
+    a_bid: float,
+    params: SimParams,
+    initial_saved_work: float = 0.0,
+) -> SimResult:
+    saved = initial_saved_work
     n_ckpt = 0
     n_term = 0
     work_lost = 0.0

@@ -1,0 +1,59 @@
+"""Fleet provisioning subsystem: multi-job scheduling, cross-type migration,
+and vectorized sweeps over the 64-type catalog.
+
+The paper's Algorithm 1 provisions one instance for one job; this package
+provisions a *fleet* of heterogeneous spot instances serving a stream of
+jobs, in the direction named by Qu et al. and Voorsluys et al. (PAPERS.md):
+
+  * :mod:`~repro.fleet.workload`   — job streams (arrivals, work, deadlines, SLAs)
+  * :mod:`~repro.fleet.policies`   — Algorithm1 / cost-greedy / EET-greedy /
+                                     diversified placement
+  * :mod:`~repro.fleet.controller` — discrete-event loop over concurrent jobs,
+                                     corrected billing, checkpoint-preserving
+                                     cross-type migration on out-of-bid kills
+  * :mod:`~repro.fleet.sweep`      — NumPy-batched (policy x bid x seed) studies
+"""
+
+from repro.fleet.controller import AttemptRecord, FleetController, FleetResult, JobOutcome
+from repro.fleet.policies import (
+    Algorithm1Policy,
+    CostGreedyPolicy,
+    DiversifiedPolicy,
+    EETGreedyPolicy,
+    Placement,
+    PlacementContext,
+    PlacementPolicy,
+    default_policies,
+)
+from repro.fleet.sweep import (
+    SweepCell,
+    SweepConfig,
+    batched_fleet_traces,
+    run_sweep,
+    select_types,
+    summarize,
+)
+from repro.fleet.workload import Job, Workload
+
+__all__ = [
+    "Algorithm1Policy",
+    "AttemptRecord",
+    "CostGreedyPolicy",
+    "DiversifiedPolicy",
+    "EETGreedyPolicy",
+    "FleetController",
+    "FleetResult",
+    "Job",
+    "JobOutcome",
+    "Placement",
+    "PlacementContext",
+    "PlacementPolicy",
+    "SweepCell",
+    "SweepConfig",
+    "Workload",
+    "batched_fleet_traces",
+    "default_policies",
+    "run_sweep",
+    "select_types",
+    "summarize",
+]

@@ -1,0 +1,431 @@
+"""Fleet controller: many concurrent jobs, one discrete-event loop.
+
+:class:`FleetController` runs a :class:`~repro.fleet.workload.Workload` of
+jobs across a catalog of instance types with one price trace per type.  Each
+job replica advances through *attempts* — single availability periods
+simulated by :func:`repro.core.simulator.simulate_attempt` under the chosen
+checkpointing scheme, billed by :mod:`repro.core.billing`.  On an out-of-bid
+kill the migration engine re-runs the placement policy over the surviving
+catalog and resumes the job on a (usually different) type from its last
+checkpoint, scaling remaining work by the ECU ratio exactly as Algorithm 1
+scales work when ranking types.
+
+The event loop holds a heap of (time, event) pairs; attempts are simulated
+eagerly into the future and cancelled lazily (stale tokens), which keeps the
+loop O(events log events) with no per-tick stepping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Mapping
+
+from repro.core import billing
+from repro.core.billing import Termination
+from repro.core.market import InstanceType, PriceTrace
+from repro.core.schemes import Scheme, SimParams
+from repro.core.simulator import simulate_attempt
+from repro.fleet.policies import Placement, PlacementContext, PlacementPolicy
+from repro.fleet.workload import Job, Workload
+
+_EPS = 1e-9
+_ARRIVAL, _END = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class AttemptRecord:
+    """One billed instance run of one job replica.
+
+    ``initial_saved_ref`` / ``saved_after_ref`` are checkpointed work in
+    reference-ECU seconds before and after the attempt; ``work_start`` is when
+    useful work began (launch + t_r, clipped to ``end``) — the interval
+    ``[work_start, end)`` is when this replica was making progress.
+    """
+
+    job_id: int
+    replica: int
+    instance: str
+    bid: float
+    launch: float
+    end: float
+    termination: Termination
+    cost: float
+    work_start: float
+    initial_saved_ref: float
+    saved_after_ref: float
+    killed: bool
+    completed: bool
+    cancelled: bool  # sibling replica finished first; run truncated at its end
+
+
+@dataclasses.dataclass
+class JobOutcome:
+    job: Job
+    completed: bool
+    completion_time: float  # math.inf when unfinished
+    cost: float  # sum over this job's records
+    n_kills: int
+    n_migrations: int
+    attempts: list[AttemptRecord]
+
+    @property
+    def deadline_met(self) -> bool | None:
+        if self.job.deadline_s is None:
+            return None
+        return self.completed and self.completion_time <= self.job.deadline_s
+
+
+@dataclasses.dataclass
+class FleetResult:
+    policy: str
+    scheme: Scheme
+    outcomes: dict[int, JobOutcome]
+    records: list[AttemptRecord]
+    horizon: float
+
+    @property
+    def total_cost(self) -> float:
+        return sum(r.cost for r in self.records)
+
+    @property
+    def n_completed(self) -> int:
+        return sum(1 for o in self.outcomes.values() if o.completed)
+
+    @property
+    def n_kills(self) -> int:
+        return sum(o.n_kills for o in self.outcomes.values())
+
+    @property
+    def n_migrations(self) -> int:
+        return sum(o.n_migrations for o in self.outcomes.values())
+
+    @property
+    def kill_rate(self) -> float:
+        """Kills per attempted instance run."""
+        return self.n_kills / max(1, len(self.records))
+
+    @property
+    def makespan(self) -> float:
+        """Last completion minus first arrival (inf if any job unfinished)."""
+        if not self.outcomes:
+            return 0.0
+        if any(not o.completed for o in self.outcomes.values()):
+            return math.inf
+        t0 = min(o.job.arrival_s for o in self.outcomes.values())
+        return max(o.completion_time for o in self.outcomes.values()) - t0
+
+    def mean_completion_s(self) -> float:
+        done = [o.completion_time - o.job.arrival_s for o in self.outcomes.values() if o.completed]
+        return sum(done) / len(done) if done else math.inf
+
+    def outage_intervals(self, eps: float = 1e-6) -> list[tuple[float, float]]:
+        """Whole-fleet outages: maximal intervals during which at least one
+        job is active (arrived, unfinished) yet **no** replica anywhere in the
+        fleet is making progress.
+
+        Correlated kills show up here: if every job sits on the same instance
+        type, one price spike stalls them all simultaneously (at minimum for
+        the t_r recovery of the migration), whereas a diversified fleet keeps
+        computing through a regional spike.
+        """
+        deltas: list[tuple[float, int, int]] = []  # (time, job_delta, work_delta)
+        for o in self.outcomes.values():
+            a = o.job.arrival_s
+            b = min(o.completion_time, self.horizon) if o.completed else self.horizon
+            if b > a:
+                deltas.append((a, 1, 0))
+                deltas.append((b, -1, 0))
+        for r in self.records:
+            if r.end > r.work_start + eps:
+                deltas.append((r.work_start, 0, 1))
+                deltas.append((r.end, 0, -1))
+        deltas.sort()
+        out: list[tuple[float, float]] = []
+        jobs = work = 0
+        start: float | None = None
+        for t, dj, dw in deltas:
+            was_outage = jobs > 0 and work == 0
+            jobs += dj
+            work += dw
+            is_outage = jobs > 0 and work == 0
+            if is_outage and not was_outage:
+                start = t
+            elif was_outage and not is_outage and start is not None:
+                if t - start > eps:
+                    out.append((start, t))
+                start = None
+        return out
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "total_cost": self.total_cost,
+            "n_jobs": len(self.outcomes),
+            "n_completed": self.n_completed,
+            "n_kills": self.n_kills,
+            "n_migrations": self.n_migrations,
+            "kill_rate": self.kill_rate,
+            "makespan_h": self.makespan / 3600.0,
+            "mean_completion_h": self.mean_completion_s() / 3600.0,
+            "n_outages": len(self.outage_intervals()),
+        }
+
+
+@dataclasses.dataclass
+class _Replica:
+    saved_ref: float = 0.0
+    n_migrations: int = 0
+    n_kills: int = 0
+    done: bool = False
+    token: int | None = None
+    active: tuple | None = None  # (AttemptResult, Placement, initial_saved_ref)
+
+
+@dataclasses.dataclass
+class _JobState:
+    job: Job
+    replicas: dict[int, _Replica]
+    completed_at: float | None = None
+
+
+class FleetController:
+    """Schedules a workload across the catalog under one placement policy."""
+
+    def __init__(
+        self,
+        catalog: list[InstanceType],
+        traces: Mapping[str, PriceTrace],
+        policy: PlacementPolicy,
+        histories: Mapping[str, PriceTrace] | None = None,
+        params: SimParams | None = None,
+        scheme: Scheme = Scheme.HOUR,
+        reference_ecu: float = 8.0,
+        migrate: bool = True,
+        max_migrations_per_replica: int = 64,
+        bid_margin: float = 0.56,
+    ):
+        """``histories`` is what policies (and ADAPT) estimate failure pdfs
+        from.  It defaults to the evaluation traces themselves — convenient
+        for tests, but that grants policies oracle knowledge of the future;
+        pass a disjoint history (as :func:`repro.fleet.sweep.run_sweep` does)
+        for honest policy comparisons."""
+        missing = [it.name for it in catalog if it.name not in traces]
+        if missing:
+            raise ValueError(f"no trace for catalog types: {missing[:4]}...")
+        if scheme == Scheme.ACC:
+            raise ValueError("fleet attempts are bid-limited; ACC has no out-of-bid kill to migrate on")
+        self.catalog = list(catalog)
+        self.traces = dict(traces)
+        self.policy = policy
+        self.histories = dict(histories) if histories is not None else dict(traces)
+        self.params = params or SimParams()
+        self.scheme = scheme
+        self.reference_ecu = reference_ecu
+        self.migrate = migrate
+        self.max_migrations_per_replica = max_migrations_per_replica
+        self.horizon = min(t.horizon for t in self.traces.values())
+        self.ctx = PlacementContext(
+            histories=self.histories,
+            params=self.params,
+            reference_ecu=reference_ecu,
+            bid_margin=bid_margin,
+        )
+
+    # -- helpers ------------------------------------------------------------
+
+    def _spot_prices(self, now: float) -> dict[str, float]:
+        return {name: tr.price_at(now) for name, tr in self.traces.items()}
+
+    def _feasible(self, job: Job, exclude: frozenset[str] = frozenset()) -> list[InstanceType]:
+        return [it for it in self.catalog if job.sla.admits(it) and it.name not in exclude]
+
+    def _scale(self, it: InstanceType) -> float:
+        """reference-ECU seconds -> wall seconds on ``it`` (and back by /)."""
+        return self.reference_ecu / it.compute_units
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, workload: Workload) -> FleetResult:
+        records: list[AttemptRecord] = []
+        states: dict[int, _JobState] = {}
+        heap: list[tuple[float, int, int, tuple]] = []
+        seq = 0
+        token_counter = 0
+
+        def push(t: float, kind: int, payload: tuple) -> None:
+            nonlocal seq
+            heapq.heappush(heap, (t, kind, seq, payload))
+            seq += 1
+
+        def spawn_attempt(st: _JobState, r_idx: int, placement: Placement, now: float) -> None:
+            nonlocal token_counter
+            rep = st.replicas[r_idx]
+            trace = self.traces[placement.instance.name]
+            scale = self._scale(placement.instance)
+            # ADAPT's hazard estimate must come from history, not from the
+            # future of the very trace being simulated (and is cached).
+            failure_pdf = None
+            if self.scheme == Scheme.ADAPT:
+                failure_pdf = self.ctx.pdf(placement.instance.name, placement.bid)
+            att = simulate_attempt(
+                trace,
+                self.scheme,
+                st.job.work_s * scale,
+                placement.bid,
+                start_t=now,
+                params=self.params,
+                failure_pdf=failure_pdf,
+                initial_saved_work=rep.saved_ref * scale,
+            )
+            if att is None:  # type never available again under this bid
+                rep.done = True
+                return
+            token_counter += 1
+            rep.token = token_counter
+            rep.active = (att, placement, rep.saved_ref)
+            push(att.end, _END, (st.job.id, r_idx, rep.token))
+
+        def replace(st: _JobState, r_idx: int, now: float, exclude: frozenset[str]) -> None:
+            rep = st.replicas[r_idx]
+            # keep replicas apart: avoid types a sibling is already running
+            # on, falling back to overlap rather than stranding the replica
+            sibling_types = frozenset(
+                rep2.active[1].instance.name
+                for r2, rep2 in st.replicas.items()
+                if r2 != r_idx and rep2.active is not None
+            )
+            feasible = self._feasible(st.job, exclude | sibling_types)
+            if not feasible:
+                feasible = self._feasible(st.job, exclude)
+            if not feasible:
+                rep.done = True
+                return
+            self.ctx.spot_prices_now = self._spot_prices(now)
+            remaining = st.job.work_s - rep.saved_ref
+            placements = self.policy.place(st.job, now, remaining, feasible, self.ctx, k=1)
+            spawn_attempt(st, r_idx, placements[0], now)
+
+        def record_attempt(
+            st: _JobState, r_idx: int, att, placement: Placement, initial_ref: float,
+            end: float, termination: Termination, cost: float,
+            killed: bool, completed: bool, cancelled: bool, saved_after_ref: float,
+        ) -> None:
+            work_start = min(att.launch + self.params.t_r, end)
+            records.append(
+                AttemptRecord(
+                    job_id=st.job.id,
+                    replica=r_idx,
+                    instance=placement.instance.name,
+                    bid=placement.bid,
+                    launch=att.launch,
+                    end=end,
+                    termination=termination,
+                    cost=cost,
+                    work_start=work_start,
+                    initial_saved_ref=initial_ref,
+                    saved_after_ref=saved_after_ref,
+                    killed=killed,
+                    completed=completed,
+                    cancelled=cancelled,
+                )
+            )
+
+        for job in workload:
+            push(job.arrival_s, _ARRIVAL, (job,))
+
+        while heap:
+            now, kind, _, payload = heapq.heappop(heap)
+
+            if kind == _ARRIVAL:
+                (job,) = payload
+                feasible = self._feasible(job)
+                if not feasible:
+                    states[job.id] = _JobState(job=job, replicas={})
+                    continue
+                self.ctx.spot_prices_now = self._spot_prices(now)
+                placements = self.policy.place(job, now, job.work_s, feasible, self.ctx)
+                st = _JobState(job=job, replicas={r: _Replica() for r in range(len(placements))})
+                states[job.id] = st
+                for r_idx, placement in enumerate(placements):
+                    spawn_attempt(st, r_idx, placement, now)
+                continue
+
+            job_id, r_idx, token = payload
+            st = states[job_id]
+            rep = st.replicas[r_idx]
+            if st.completed_at is not None or rep.token != token or rep.active is None:
+                continue  # stale event (cancelled or superseded)
+            att, placement, initial_ref = rep.active
+            rep.token = None
+            rep.active = None
+            scale = self._scale(placement.instance)
+
+            if att.completed:
+                st.completed_at = att.end
+                record_attempt(
+                    st, r_idx, att, placement, initial_ref, att.end,
+                    Termination.USER, att.cost, False, True, False, st.job.work_s,
+                )
+                rep.saved_ref = st.job.work_s
+                rep.done = True
+                # first replica wins: truncate and bill siblings up to now
+                for r2, rep2 in st.replicas.items():
+                    if r2 == r_idx or rep2.active is None:
+                        continue
+                    att2, placement2, init2 = rep2.active
+                    rep2.token = None
+                    rep2.active = None
+                    rep2.done = True
+                    if att2.launch < now - _EPS:
+                        tr2 = self.traces[placement2.instance.name]
+                        cost2 = billing.run_cost(
+                            tr2, att2.launch, now, Termination.USER, self.params.billing_period_s
+                        )
+                        record_attempt(
+                            st, r2, att2, placement2, init2, now,
+                            Termination.USER, cost2, False, False, True, init2,
+                        )
+                continue
+
+            # attempt ended without completing: kill or horizon
+            saved_after_ref = att.saved_work_s / scale
+            if saved_after_ref < rep.saved_ref - _EPS:
+                raise AssertionError(
+                    f"job {job_id}: checkpointed work shrank {rep.saved_ref} -> {saved_after_ref}"
+                )
+            if att.killed:
+                rep.n_kills += 1
+            record_attempt(
+                st, r_idx, att, placement, initial_ref, att.end,
+                att.termination(), att.cost, att.killed, False, False, saved_after_ref,
+            )
+            rep.saved_ref = saved_after_ref
+            if att.killed and self.migrate and rep.n_migrations < self.max_migrations_per_replica:
+                rep.n_migrations += 1
+                replace(st, r_idx, att.end, frozenset({placement.instance.name}))
+            else:
+                rep.done = True
+
+        outcomes: dict[int, JobOutcome] = {}
+        per_job: dict[int, list[AttemptRecord]] = {}
+        for r in records:
+            per_job.setdefault(r.job_id, []).append(r)
+        for job_id, st in states.items():
+            recs = per_job.get(job_id, [])
+            outcomes[job_id] = JobOutcome(
+                job=st.job,
+                completed=st.completed_at is not None,
+                completion_time=st.completed_at if st.completed_at is not None else math.inf,
+                cost=sum(r.cost for r in recs),
+                n_kills=sum(rep.n_kills for rep in st.replicas.values()),
+                n_migrations=sum(rep.n_migrations for rep in st.replicas.values()),
+                attempts=recs,
+            )
+        return FleetResult(
+            policy=self.policy.name,
+            scheme=self.scheme,
+            outcomes=outcomes,
+            records=records,
+            horizon=self.horizon,
+        )

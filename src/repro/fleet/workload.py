@@ -1,0 +1,123 @@
+"""Workloads for the fleet subsystem: streams of jobs with arrivals, work
+sizes, deadlines and SLAs.
+
+Work is expressed in *reference-ECU seconds* (the paper's m1.xlarge, 8 ECU, is
+the reference): a job of ``work_s`` takes ``work_s * reference_ecu /
+instance.compute_units`` wall seconds of computation on a given type, exactly
+as :func:`repro.core.provision.algorithm1` scales work when ranking types by
+Expected Execution Time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.core.market import HOUR
+from repro.core.provision import SLA
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One unit of demand on the fleet."""
+
+    id: int
+    arrival_s: float
+    work_s: float  # reference-ECU seconds of compute
+    deadline_s: float | None = None  # absolute wall-clock deadline (None = best effort)
+    sla: SLA = dataclasses.field(default_factory=SLA)
+
+    def __post_init__(self):
+        if self.arrival_s < 0 or self.work_s <= 0:
+            raise ValueError(f"job {self.id}: bad arrival/work ({self.arrival_s}, {self.work_s})")
+        if self.deadline_s is not None and self.deadline_s <= self.arrival_s:
+            raise ValueError(f"job {self.id}: deadline before arrival")
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """An ordered stream of jobs (sorted by arrival time)."""
+
+    jobs: tuple[Job, ...]
+
+    def __post_init__(self):
+        arrivals = [j.arrival_s for j in self.jobs]
+        if arrivals != sorted(arrivals):
+            raise ValueError("jobs must be sorted by arrival time")
+        ids = [j.id for j in self.jobs]
+        if len(set(ids)) != len(ids):
+            raise ValueError("job ids must be unique")
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+    def __iter__(self) -> Iterator[Job]:
+        return iter(self.jobs)
+
+    @property
+    def total_work_s(self) -> float:
+        return sum(j.work_s for j in self.jobs)
+
+    @staticmethod
+    def batch(
+        n_jobs: int,
+        work_s: float,
+        sla: SLA | None = None,
+        arrival_s: float = 0.0,
+        deadline_s: float | None = None,
+    ) -> "Workload":
+        """``n_jobs`` identical jobs arriving at once (a cluster submission)."""
+        sla = sla or SLA()
+        return Workload(
+            tuple(
+                Job(id=i, arrival_s=arrival_s, work_s=work_s, deadline_s=deadline_s, sla=sla)
+                for i in range(n_jobs)
+            )
+        )
+
+    @staticmethod
+    def poisson(
+        n_jobs: int,
+        mean_interarrival_s: float,
+        mean_work_s: float,
+        seed: int = 0,
+        sla: SLA | None = None,
+        work_sigma: float = 0.5,
+        deadline_slack: float | None = None,
+    ) -> "Workload":
+        """Poisson arrivals with lognormal work sizes.
+
+        ``deadline_slack`` (if set) gives each job a deadline of
+        ``arrival + slack * work`` — e.g. 3.0 allows 3x the ideal runtime.
+        """
+        sla = sla or SLA()
+        rng = np.random.default_rng(seed)
+        arrivals = np.cumsum(rng.exponential(mean_interarrival_s, n_jobs))
+        # lognormal with the requested mean: E[e^X] = e^{mu + sigma^2/2}
+        mu = np.log(mean_work_s) - 0.5 * work_sigma**2
+        works = rng.lognormal(mu, work_sigma, n_jobs)
+        works = np.maximum(works, 60.0)
+        jobs = []
+        for i in range(n_jobs):
+            a = float(arrivals[i])
+            w = float(works[i])
+            d = a + deadline_slack * w if deadline_slack is not None else None
+            jobs.append(Job(id=i, arrival_s=a, work_s=w, deadline_s=d, sla=sla))
+        return Workload(tuple(jobs))
+
+    @staticmethod
+    def from_sizes(
+        sizes_h: Sequence[float],
+        interarrival_s: float = HOUR,
+        sla: SLA | None = None,
+    ) -> "Workload":
+        """Deterministic workload from a list of job sizes in hours."""
+        sla = sla or SLA()
+        return Workload(
+            tuple(
+                Job(id=i, arrival_s=i * interarrival_s, work_s=h * HOUR, sla=sla)
+                for i, h in enumerate(sizes_h)
+            )
+        )

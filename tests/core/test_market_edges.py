@@ -1,0 +1,213 @@
+"""Edge cases for market: shift_trace boundaries, ensemble seeding, the
+vectorized available_periods, and batched trace generation."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    HOUR,
+    PriceTrace,
+    TraceModel,
+    catalog,
+    constant_trace,
+    ensemble_seed,
+    get_instance,
+    sample_traces_batch,
+    shift_trace,
+    step_trace,
+    synthetic_trace,
+    synthetic_traces_batch,
+    trace_ensemble,
+)
+
+
+# ---------------------------------------------------------------------------
+# shift_trace
+# ---------------------------------------------------------------------------
+
+
+def _trace():
+    return step_trace([(0.0, 0.40), (100.0, 0.50), (250.0, 0.30)], horizon_s=1000.0)
+
+
+def test_shift_trace_offset_exactly_on_boundary():
+    tr = _trace()
+    sh = shift_trace(tr, 100.0)
+    # new t=0 lands exactly at the start of segment 1: that segment's price
+    # holds from 0 and the remaining boundaries shift left by the offset
+    assert sh.times[0] == 0.0
+    np.testing.assert_allclose(sh.times, [0.0, 150.0, 900.0])
+    np.testing.assert_allclose(sh.prices, [0.50, 0.30])
+    assert sh.price_at(0.0) == 0.50
+    assert sh.horizon == tr.horizon - 100.0
+
+
+def test_shift_trace_offset_in_final_segment():
+    tr = _trace()
+    sh = shift_trace(tr, 600.0)
+    np.testing.assert_allclose(sh.times, [0.0, 400.0])
+    np.testing.assert_allclose(sh.prices, [0.30])
+    assert sh.horizon == 400.0
+
+
+def test_shift_trace_offset_mid_segment_preserves_prices():
+    tr = _trace()
+    sh = shift_trace(tr, 120.0)
+    assert sh.price_at(0.0) == tr.price_at(120.0)
+    # every future price change is reproduced at the shifted time
+    for t in np.linspace(0.0, sh.horizon - 1e-6, 50):
+        assert sh.price_at(t) == tr.price_at(t + 120.0)
+
+
+def test_shift_trace_rejects_offset_at_or_past_horizon():
+    tr = _trace()
+    with pytest.raises(ValueError):
+        shift_trace(tr, tr.horizon)
+    with pytest.raises(ValueError):
+        shift_trace(tr, tr.horizon + 1.0)
+
+
+def test_shift_trace_zero_offset_is_identity():
+    tr = _trace()
+    assert shift_trace(tr, 0.0) is tr
+
+
+# ---------------------------------------------------------------------------
+# ensemble seeding
+# ---------------------------------------------------------------------------
+
+
+def test_trace_ensemble_seed_zero_collides_across_instances():
+    """Documented hazard: trace_ensemble uses raw seeds ``seed*1000 + i``, so
+    two *different* instance types sampled with the same base seed share rng
+    streams.  Their model parameters all scale with the on-demand price, so
+    the traces are near-perfectly rank-correlated — a spike hits every type
+    at once, silently defeating fleet diversification."""
+    a = get_instance("m1.small", "us-east-1")
+    b = get_instance("m2.4xlarge", "ap-southeast-1")
+    ta = trace_ensemble(a, n=2, horizon_days=10, seed=0)[0]
+    tb = trace_ensemble(b, n=2, horizon_days=10, seed=0)[0]
+    # same segment boundaries (identical dwell draws)...
+    n = min(len(ta.prices), len(tb.prices))
+    np.testing.assert_allclose(ta.times[:n], tb.times[:n])
+    # ...and near-proportional prices (same normal/uniform draws, scaled od)
+    corr = np.corrcoef(ta.prices[: n - 1], tb.prices[: n - 1])[0, 1]
+    assert corr > 0.99
+
+
+def test_ensemble_seed_decorrelates_instances():
+    a = get_instance("m1.small", "us-east-1")
+    b = get_instance("m2.4xlarge", "ap-southeast-1")
+    sa, sb = ensemble_seed(a, 0), ensemble_seed(b, 0)
+    assert sa != sb
+    ta = synthetic_trace(a, horizon_days=10, seed=sa)
+    tb = synthetic_trace(b, horizon_days=10, seed=sb)
+    n = min(len(ta.prices), len(tb.prices)) - 1
+    assert not np.allclose(ta.times[:n], tb.times[:n])
+    corr = np.corrcoef(ta.prices[:n], tb.prices[:n])[0, 1]
+    assert abs(corr) < 0.5
+
+
+def test_ensemble_seed_distinct_across_base_seeds_and_indices():
+    it = get_instance("m1.xlarge")
+    seen = {ensemble_seed(it, s, i) for s in range(4) for i in range(8)}
+    assert len(seen) == 32
+    with pytest.raises(ValueError):
+        ensemble_seed(it, -1)
+
+
+# ---------------------------------------------------------------------------
+# vectorized available_periods / next_available / next_out_of_bid
+# ---------------------------------------------------------------------------
+
+
+def _reference_available_periods(trace, bid):
+    ok = trace.prices <= bid
+    periods, start = [], None
+    for i, flag in enumerate(ok):
+        if flag and start is None:
+            start = trace.times[i]
+        if not flag and start is not None:
+            periods.append((float(start), float(trace.times[i])))
+            start = None
+    if start is not None:
+        periods.append((float(start), trace.horizon))
+    return periods
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_available_periods_matches_reference(seed):
+    it = get_instance("m1.xlarge")
+    tr = synthetic_trace(it, horizon_days=20, seed=seed)
+    for bid in (0.0, 0.35, 0.37, 0.39, 0.42, 10.0):
+        assert tr.available_periods(bid) == _reference_available_periods(tr, bid)
+
+
+def test_available_periods_single_segment():
+    tr = constant_trace(0.40, horizon_s=100.0)
+    assert tr.available_periods(0.50) == [(0.0, 100.0)]
+    assert tr.available_periods(0.30) == []
+
+
+def test_next_available_and_next_out_of_bid():
+    tr = step_trace([(0.0, 0.50), (100.0, 0.30), (200.0, 0.60)], horizon_s=300.0)
+    assert tr.next_available(0.4, 0.0) == 100.0
+    assert tr.next_available(0.4, 150.0) == 150.0  # already available
+    assert tr.next_available(0.4, 250.0) is None
+    assert tr.next_available(0.7, 299.0) == 299.0
+    assert tr.next_available(0.7, 300.0) is None  # at horizon
+    assert tr.next_out_of_bid(0.4, 150.0) == 200.0
+    assert tr.next_out_of_bid(0.7, 0.0) == 300.0  # never out of bid -> horizon
+
+
+# ---------------------------------------------------------------------------
+# batched trace generation
+# ---------------------------------------------------------------------------
+
+
+def test_sample_traces_batch_deterministic_and_batch_independent():
+    it = get_instance("m1.xlarge")
+    m = TraceModel.for_instance(it)
+    horizon = 5 * 24 * HOUR
+    solo = sample_traces_batch([m], horizon, [7])[0]
+    # same seed inside a bigger, reordered batch: identical trace
+    batch = sample_traces_batch([m, m, m], horizon, [3, 7, 11])[1]
+    np.testing.assert_array_equal(solo.times, batch.times)
+    np.testing.assert_array_equal(solo.prices, batch.prices)
+
+
+def test_sample_traces_batch_matches_scalar_statistics():
+    it = get_instance("m1.xlarge")
+    m = TraceModel.for_instance(it)
+    horizon = 20 * 24 * HOUR
+    batch = sample_traces_batch([m] * 8, horizon, list(range(8)))
+    scalar = [m.sample(horizon, s) for s in range(100, 108)]
+
+    def stats(traces):
+        p = np.concatenate([t.prices for t in traces])
+        return p.mean(), np.median(p), p.max()
+
+    bm, bmed, bmax = stats(batch)
+    sm, smed, smax = stats(scalar)
+    assert bm == pytest.approx(sm, rel=0.1)
+    assert bmed == pytest.approx(smed, rel=0.05)
+    # both samplers produce well-formed traces over the full horizon
+    for t in batch:
+        assert t.horizon == horizon
+        assert np.all(np.diff(t.times) > 0)
+        assert np.all(t.prices >= m.grid)
+
+
+def test_synthetic_traces_batch_covers_catalog_slice():
+    types = catalog()[:6]
+    out = synthetic_traces_batch(types, horizon_days=3.0, base_seed=1, n_seeds=2)
+    assert set(out) == {it.name for it in types}
+    for it in types:
+        assert len(out[it.name]) == 2
+        for tr in out[it.name]:
+            assert isinstance(tr, PriceTrace)
+            assert tr.horizon == 3 * 24 * HOUR
+    # different types with the same base seed are decorrelated
+    a, b = out[types[0].name][0], out[types[1].name][0]
+    n = min(len(a.prices), len(b.prices)) - 1
+    assert not np.allclose(a.times[:n], b.times[:n])

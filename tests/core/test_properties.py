@@ -11,6 +11,9 @@ System invariants that must hold for *any* market trajectory:
 import math
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

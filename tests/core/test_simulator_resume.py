@@ -1,0 +1,115 @@
+"""Resume support: ``simulate(..., initial_saved_work=...)`` and the
+single-attempt primitive ``simulate_attempt`` used by the fleet migration
+engine."""
+
+import pytest
+
+from repro.core import (
+    Scheme,
+    SimParams,
+    Termination,
+    get_instance,
+    simulate,
+    simulate_attempt,
+    step_trace,
+    synthetic_trace,
+)
+
+P = SimParams()
+IT = get_instance("m1.xlarge")
+
+
+def test_default_behavior_unchanged():
+    tr = synthetic_trace(IT, 30, seed=3)
+    r1 = simulate(tr, Scheme.HOUR, 10 * 3600.0, 0.40, P)
+    r2 = simulate(tr, Scheme.HOUR, 10 * 3600.0, 0.40, P, initial_saved_work=0.0)
+    assert r1 == r2
+
+
+def test_resume_shortens_completion_and_cost():
+    tr = synthetic_trace(IT, 30, seed=3)
+    full = simulate(tr, Scheme.HOUR, 10 * 3600.0, 0.40, P)
+    resumed = simulate(tr, Scheme.HOUR, 10 * 3600.0, 0.40, P, initial_saved_work=5 * 3600.0)
+    assert full.completed and resumed.completed
+    assert resumed.completion_time < full.completion_time
+    assert resumed.cost <= full.cost
+
+
+def test_resume_rejects_out_of_range():
+    tr = synthetic_trace(IT, 30, seed=0)
+    with pytest.raises(ValueError):
+        simulate(tr, Scheme.HOUR, 3600.0, 0.40, P, initial_saved_work=-1.0)
+    with pytest.raises(ValueError):
+        simulate(tr, Scheme.HOUR, 3600.0, 0.40, P, initial_saved_work=7200.0)
+
+
+def test_resume_acc():
+    tr = synthetic_trace(IT, 30, seed=3)
+    full = simulate(tr, Scheme.ACC, 10 * 3600.0, 0.40, P)
+    resumed = simulate(tr, Scheme.ACC, 10 * 3600.0, 0.40, P, initial_saved_work=8 * 3600.0)
+    assert resumed.completed
+    assert resumed.completion_time <= full.completion_time
+
+
+@pytest.mark.parametrize("scheme", [Scheme.NONE, Scheme.HOUR, Scheme.EDGE, Scheme.ADAPT, Scheme.OPT])
+@pytest.mark.parametrize("seed", [0, 3, 5])
+def test_attempt_matches_first_run_of_simulate(scheme, seed):
+    tr = synthetic_trace(IT, 30, seed=seed)
+    for bid in (0.37, 0.39, 0.41):
+        full = simulate(tr, scheme, 20 * 3600.0, bid, P)
+        att = simulate_attempt(tr, scheme, 20 * 3600.0, bid, 0.0, P)
+        if not full.runs:
+            assert att is None or att.cost == 0.0
+            continue
+        r0 = full.runs[0]
+        assert att is not None
+        assert att.launch == pytest.approx(r0.launch)
+        assert att.end == pytest.approx(r0.end)
+        assert att.cost == pytest.approx(r0.cost)
+        assert att.completed == (r0.termination == Termination.USER)
+
+
+def test_attempt_chain_reproduces_simulate():
+    """Re-running attempts on the same trace, carrying the checkpoint forward,
+    must reproduce the multi-period simulate() outcome and cost exactly."""
+    tr = synthetic_trace(IT, 30, seed=3)
+    bid, work = 0.38, 40 * 3600.0
+    full = simulate(tr, Scheme.HOUR, work, bid, P)
+    saved, t, total_cost = 0.0, 0.0, 0.0
+    for _ in range(200):
+        att = simulate_attempt(tr, Scheme.HOUR, work, bid, t, P, initial_saved_work=saved)
+        if att is None:
+            break
+        total_cost += att.cost
+        assert att.saved_work_s >= saved  # checkpointed work never shrinks
+        if att.completed:
+            assert full.completed and att.end == pytest.approx(full.completion_time)
+            break
+        if not att.killed:
+            assert not full.completed
+            break
+        saved = att.saved_work_s
+        t = att.end + 1e-9
+    assert total_cost == pytest.approx(full.cost)
+
+
+def test_attempt_waits_for_availability():
+    tr = step_trace([(0.0, 1.0), (7200.0, 0.30)], horizon_s=40 * 3600.0)
+    att = simulate_attempt(tr, Scheme.HOUR, 3600.0, 0.40, 0.0, P)
+    assert att is not None
+    assert att.launch == 7200.0
+    assert att.completed
+
+
+def test_attempt_none_when_never_available():
+    tr = step_trace([(0.0, 1.0)], horizon_s=10 * 3600.0)
+    assert simulate_attempt(tr, Scheme.HOUR, 3600.0, 0.40, 0.0, P) is None
+    # available early, but not at/after start_t
+    tr2 = step_trace([(0.0, 0.30), (3600.0, 1.0)], horizon_s=10 * 3600.0)
+    assert simulate_attempt(tr2, Scheme.HOUR, 3600.0, 0.40, 5000.0, P) is None
+
+
+def test_attempt_rejects_acc():
+    tr = synthetic_trace(IT, 10, seed=0)
+    with pytest.raises(ValueError):
+        simulate_attempt(tr, Scheme.ACC, 3600.0, 0.40, 0.0, P)

@@ -1,0 +1,231 @@
+"""Fleet controller invariants and the diversification acceptance scenario.
+
+The deterministic two-region scenario: both regions quote a low base price,
+but region R1 (where the EET-optimal, highest-ECU type lives) spikes above
+every bid for two hours.  Per-job Algorithm 1 parks every job on that one
+type, so the spike kills the whole fleet at once and nothing progresses for
+the t_r recovery of the migration; the diversified policy keeps a replica
+computing in R2 throughout.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (
+    HOUR,
+    SLA,
+    Scheme,
+    SimParams,
+    Termination,
+    get_instance,
+    run_cost,
+    step_trace,
+)
+from repro.fleet import (
+    Algorithm1Policy,
+    DiversifiedPolicy,
+    EETGreedyPolicy,
+    FleetController,
+    Workload,
+)
+
+P = SimParams()
+HORIZON = 10 * 24 * HOUR
+
+
+def _two_region_setup(spike_start_h: float | None = 2.0, spike_len_h: float = 2.0):
+    """c1.xlarge in eu-west-1 (20 ECU, EET-optimal) vs m1.xlarge in us-east-1
+    (8 ECU).  The eval trace for c1.xlarge spikes above every bid during
+    [spike_start, spike_start+spike_len) (no spike when None); histories are
+    spike-free so every policy confidently picks c1.xlarge first."""
+    c1 = get_instance("c1.xlarge", "eu-west-1")
+    m1 = get_instance("m1.xlarge", "us-east-1")
+    if spike_start_h is None:
+        c1_segments = [(0.0, 0.40)]
+    else:
+        s0, s1 = spike_start_h * HOUR, (spike_start_h + spike_len_h) * HOUR
+        c1_segments = [(0.0, 0.40), (s0, 1.00), (s1, 0.40)]
+    traces = {
+        c1.name: step_trace(c1_segments, horizon_s=HORIZON),
+        m1.name: step_trace([(0.0, 0.35)], horizon_s=HORIZON),
+    }
+    histories = {
+        c1.name: step_trace([(0.0, 0.40)], horizon_s=HORIZON),
+        m1.name: step_trace([(0.0, 0.35)], horizon_s=HORIZON),
+    }
+    return [c1, m1], traces, histories
+
+
+def _workload(n_jobs=5, work_h=10.0):
+    return Workload.batch(n_jobs, work_h * HOUR, sla=SLA(min_compute_units=8.0, os="linux"))
+
+
+def _check_invariants(res, traces):
+    # 1. total fleet cost is exactly the sum of per-run corrected billing
+    assert res.total_cost == pytest.approx(sum(r.cost for r in res.records))
+    for r in res.records:
+        rebilled = run_cost(traces[r.instance], r.launch, r.end, r.termination, P.billing_period_s)
+        assert r.cost == pytest.approx(rebilled), r
+    # 2. a migrated job never loses checkpointed work
+    chains: dict[tuple[int, int], list] = {}
+    for r in res.records:
+        chains.setdefault((r.job_id, r.replica), []).append(r)
+    for chain in chains.values():
+        chain.sort(key=lambda r: r.launch)
+        for prev, nxt in zip(chain, chain[1:]):
+            assert nxt.initial_saved_ref >= prev.saved_after_ref - 1e-6
+        for r in chain:
+            assert r.saved_after_ref >= r.initial_saved_ref - 1e-6
+
+
+def test_algorithm1_fleet_migrates_and_completes():
+    cat, traces, histories = _two_region_setup()
+    ctrl = FleetController(cat, traces, Algorithm1Policy(), histories=histories)
+    res = ctrl.run(_workload())
+    assert res.n_completed == 5
+    _check_invariants(res, traces)
+    # every job started on the EET-optimal c1.xlarge, was killed by the spike,
+    # and resumed on the other region's type from its checkpoint
+    for o in res.outcomes.values():
+        assert o.n_kills == 1 and o.n_migrations == 1
+        first, second = o.attempts[0], o.attempts[1]
+        assert first.instance.startswith("c1.xlarge") and first.killed
+        assert second.instance.startswith("m1.xlarge") and second.completed
+        assert second.initial_saved_ref > 0.0  # checkpointed work carried over
+        # ECU-scaled resume: the remaining work ran at m1.xlarge speed
+        assert o.completion_time < HORIZON
+
+
+def test_diversified_strictly_fewer_whole_fleet_outages_than_algorithm1():
+    """Acceptance: on this seeded two-region scenario the diversified policy
+    has strictly fewer whole-fleet outage intervals than per-job Algorithm 1."""
+    cat, traces, histories = _two_region_setup()
+    wl = _workload()
+
+    res_a1 = FleetController(cat, traces, Algorithm1Policy(), histories=histories).run(wl)
+    res_div = FleetController(
+        cat, traces, DiversifiedPolicy(n_replicas=2), histories=histories
+    ).run(wl)
+
+    out_a1 = res_a1.outage_intervals()
+    out_div = res_div.outage_intervals()
+    # Algorithm 1: initial t_r stall + the correlated-kill stall at the spike
+    assert len(out_a1) == 2
+    spike_outage = out_a1[1]
+    assert spike_outage[0] == pytest.approx(2.0 * HOUR)
+    assert spike_outage[1] - spike_outage[0] == pytest.approx(P.t_r)
+    # Diversified: only the initial stall — the us-east replica computes
+    # straight through the eu-west spike
+    assert len(out_div) == 1
+    assert len(out_div) < len(out_a1)
+    assert res_div.n_completed == len(wl)
+    _check_invariants(res_div, traces)
+
+
+def test_replica_racing_bills_cancelled_siblings_until_cancellation():
+    cat, traces, histories = _two_region_setup(spike_start_h=None)
+    ctrl = FleetController(cat, traces, DiversifiedPolicy(n_replicas=2), histories=histories)
+    res = ctrl.run(Workload.batch(1, 10.0 * HOUR, sla=SLA(min_compute_units=8.0, os="linux")))
+    assert res.n_completed == 1
+    [o] = res.outcomes.values()
+    winners = [r for r in o.attempts if r.completed]
+    losers = [r for r in o.attempts if r.cancelled]
+    assert len(winners) == 1 and len(losers) == 1
+    # the cancelled replica is billed as a user termination ending exactly
+    # when the winner finished
+    assert losers[0].end == pytest.approx(winners[0].end)
+    assert losers[0].termination == Termination.USER
+    assert losers[0].cost > 0.0
+    _check_invariants(res, traces)
+
+
+def test_migrating_replica_avoids_sibling_type():
+    """A diversified replica migrating off a killed type must not land on the
+    type its sibling is already running on while a third type is free."""
+    c1 = get_instance("c1.xlarge", "eu-west-1")
+    m1 = get_instance("m1.xlarge", "us-east-1")
+    m2 = get_instance("m2.2xlarge", "us-west-1")
+    traces = {
+        # EET-best, killed by a spike at 2h
+        c1.name: step_trace([(0.0, 0.40), (2 * HOUR, 2.00), (4 * HOUR, 0.40)], horizon_s=HORIZON),
+        m1.name: step_trace([(0.0, 0.35)], horizon_s=HORIZON),
+        m2.name: step_trace([(0.0, 0.45)], horizon_s=HORIZON),
+    }
+    histories = {name: step_trace([(0.0, tr.prices[0])], horizon_s=HORIZON) for name, tr in traces.items()}
+    cat = [c1, m1, m2]
+    wl = Workload.batch(1, 10.0 * HOUR, sla=SLA(min_compute_units=8.0, os="linux"))
+    res = FleetController(cat, traces, DiversifiedPolicy(n_replicas=2), histories=histories).run(wl)
+    [o] = res.outcomes.values()
+    killed = [r for r in o.attempts if r.killed]
+    assert len(killed) == 1 and killed[0].instance == c1.name
+    # replicas: 0 on c1 (killed -> migrates), 1 on the next-ranked region.
+    # After the kill, the migrated attempt must avoid the sibling's type.
+    by_replica = {}
+    for r in o.attempts:
+        by_replica.setdefault(r.replica, []).append(r)
+    killed_replica = killed[0].replica
+    migrated = sorted(by_replica[killed_replica], key=lambda r: r.launch)[1]
+    sibling_types = {
+        r.instance for rep, recs in by_replica.items() if rep != killed_replica for r in recs
+    }
+    assert migrated.instance not in sibling_types
+    _check_invariants(res, traces)
+
+
+def test_adapt_scheme_fleet_smoke():
+    cat, traces, histories = _two_region_setup()
+    ctrl = FleetController(cat, traces, Algorithm1Policy(), histories=histories, scheme=Scheme.ADAPT)
+    res = ctrl.run(_workload(n_jobs=3))
+    assert res.n_completed == 3
+    _check_invariants(res, traces)
+
+
+def test_unplaceable_job_is_unfinished_with_zero_cost():
+    c1 = get_instance("c1.xlarge", "eu-west-1")
+    traces = {c1.name: step_trace([(0.0, 5.0)], horizon_s=HORIZON)}  # always above any bid
+    ctrl = FleetController([c1], traces, EETGreedyPolicy())
+    res = ctrl.run(Workload.batch(2, 4.0 * HOUR, sla=SLA(min_compute_units=8.0, os="linux")))
+    assert res.n_completed == 0
+    assert res.total_cost == 0.0
+    assert math.isinf(res.makespan)
+    for o in res.outcomes.values():
+        assert not o.completed and o.attempts == []
+
+
+def test_deadlines_reported():
+    cat, traces, histories = _two_region_setup(spike_start_h=None)
+    sla = SLA(min_compute_units=8.0, os="linux")
+    wl = Workload(
+        (
+            # generous deadline: met
+            Workload.batch(1, 4.0 * HOUR, sla=sla, deadline_s=2 * 24 * HOUR).jobs[0],
+            # impossible deadline: missed
+            type(Workload.batch(1, 4.0 * HOUR).jobs[0])(
+                id=1, arrival_s=0.0, work_s=4.0 * HOUR, deadline_s=60.0, sla=sla
+            ),
+        )
+    )
+    res = FleetController(cat, traces, EETGreedyPolicy(), histories=histories).run(wl)
+    assert res.outcomes[0].deadline_met is True
+    assert res.outcomes[1].deadline_met is False
+    # best-effort jobs report None
+    res2 = FleetController(cat, traces, EETGreedyPolicy(), histories=histories).run(
+        Workload.batch(1, 4.0 * HOUR, sla=sla)
+    )
+    assert res2.outcomes[0].deadline_met is None
+
+
+def test_migration_disabled_strands_killed_jobs():
+    cat, traces, histories = _two_region_setup()
+    ctrl = FleetController(cat, traces, Algorithm1Policy(), histories=histories, migrate=False)
+    res = ctrl.run(_workload())
+    assert res.n_completed == 0
+    assert res.n_migrations == 0
+    assert all(o.n_kills == 1 for o in res.outcomes.values())
+
+
+def test_acc_scheme_rejected():
+    cat, traces, histories = _two_region_setup()
+    with pytest.raises(ValueError):
+        FleetController(cat, traces, Algorithm1Policy(), histories=histories, scheme=Scheme.ACC)

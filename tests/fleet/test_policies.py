@@ -1,0 +1,73 @@
+"""Placement policies: paper parity, greedy choices, region diversification."""
+
+import pytest
+
+from repro.core import SLA, SimParams, algorithm1, catalog, synthetic_traces_batch
+from repro.fleet import (
+    Algorithm1Policy,
+    CostGreedyPolicy,
+    DiversifiedPolicy,
+    EETGreedyPolicy,
+    PlacementContext,
+    Workload,
+)
+
+SLA16 = SLA(min_compute_units=4.0, os="linux")
+
+
+def _setup(n_types=12):
+    feasible = [it for it in catalog() if SLA16.admits(it)][:n_types]
+    histories = {name: trs[0] for name, trs in synthetic_traces_batch(feasible, 10.0, 5).items()}
+    params = SimParams()
+    ctx = PlacementContext(histories=histories, params=params)
+    job = Workload.batch(1, 4 * 3600.0, sla=SLA16).jobs[0]
+    return feasible, histories, ctx, job
+
+
+def test_algorithm1_policy_matches_provision_algorithm1():
+    feasible, histories, ctx, job = _setup()
+    [p] = Algorithm1Policy().place(job, 0.0, job.work_s, feasible, ctx)
+    decision = algorithm1(
+        job.work_s, SLA16, feasible, histories, recovery_s=ctx.params.t_r, reference_ecu=ctx.reference_ecu
+    )
+    assert p.bid == pytest.approx(decision.a_bid)  # Eq. 7
+    assert p.instance.name == decision.instance.name  # Eq. 8
+
+
+def test_cost_greedy_picks_cheapest_per_ecu():
+    feasible, _, ctx, job = _setup()
+    [p] = CostGreedyPolicy().place(job, 0.0, job.work_s, feasible, ctx)
+    best = min(it.on_demand / it.compute_units for it in feasible)
+    assert p.instance.on_demand / p.instance.compute_units == pytest.approx(best)
+    assert p.bid == pytest.approx(ctx.bid_margin * p.instance.on_demand)
+
+
+def test_eet_greedy_prefers_currently_available():
+    feasible, _, ctx, job = _setup()
+    [p0] = EETGreedyPolicy().place(job, 0.0, job.work_s, feasible, ctx)
+    # quote the chosen type's current price above its bid: the policy must
+    # fall over to the next-best available type
+    ctx.spot_prices_now = {p0.instance.name: 10.0}
+    [p1] = EETGreedyPolicy().place(job, 0.0, job.work_s, feasible, ctx)
+    assert p1.instance.name != p0.instance.name
+
+
+def test_diversified_spreads_across_regions():
+    feasible, _, ctx, job = _setup()
+    regions = {it.region for it in feasible}
+    k = min(3, len(regions))
+    placements = DiversifiedPolicy(n_replicas=k).place(job, 0.0, job.work_s, feasible, ctx)
+    assert len(placements) == k
+    assert len({p.instance.region for p in placements}) == k
+    assert len({p.instance.name for p in placements}) == k
+
+
+def test_diversified_migration_places_single_replica():
+    feasible, _, ctx, job = _setup()
+    placements = DiversifiedPolicy(n_replicas=3).place(job, 0.0, job.work_s, feasible, ctx, k=1)
+    assert len(placements) == 1
+
+
+def test_diversified_rejects_bad_k():
+    with pytest.raises(ValueError):
+        DiversifiedPolicy(n_replicas=0)

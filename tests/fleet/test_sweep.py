@@ -1,0 +1,94 @@
+"""Sweep harness: batched traces, invariants over random scenarios, and the
+quick-study acceptance profile (>= 50 jobs, >= 16 types, >= 3 policies)."""
+
+import numpy as np
+import pytest
+
+from repro.core import HOUR, SLA, run_cost, SimParams
+from repro.fleet import SweepConfig, Workload, batched_fleet_traces, run_sweep, select_types, summarize
+
+P = SimParams()
+
+
+def test_select_types_spreads_regions():
+    sla = SLA(min_compute_units=4.0, os="linux")
+    types = select_types(sla, 16)
+    assert len(types) == 16
+    assert all(sla.admits(it) for it in types)
+    assert len({it.region for it in types}) >= 3  # diversification has room
+
+
+def test_batched_fleet_traces_shapes_and_independence():
+    types = select_types(SLA(os="linux"), 8)
+    out = batched_fleet_traces(types, [0, 1], horizon_days=3.0)
+    assert set(out) == {0, 1}
+    assert set(out[0]) == {it.name for it in types}
+    hist = batched_fleet_traces(types, [0], horizon_days=3.0, history=True)
+    # history streams are disjoint from eval streams of the same seed
+    a, b = out[0][types[0].name], hist[0][types[0].name]
+    n = min(len(a.prices), len(b.prices)) - 1
+    assert not np.allclose(a.times[:n], b.times[:n])
+
+
+def test_workload_poisson_properties():
+    wl = Workload.poisson(40, 1800.0, 4 * HOUR, seed=1, deadline_slack=3.0)
+    assert len(wl) == 40
+    arrivals = [j.arrival_s for j in wl]
+    assert arrivals == sorted(arrivals)
+    assert all(j.work_s >= 60.0 for j in wl)
+    assert all(j.deadline_s == pytest.approx(j.arrival_s + 3.0 * j.work_s) for j in wl)
+    # reproducible
+    wl2 = Workload.poisson(40, 1800.0, 4 * HOUR, seed=1, deadline_slack=3.0)
+    assert wl == wl2
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError):
+        Workload.batch(1, -5.0)
+    jobs = Workload.batch(2, 3600.0).jobs
+    with pytest.raises(ValueError):
+        Workload(jobs=(jobs[0], jobs[0]))  # duplicate ids
+    staggered = Workload.from_sizes([1.0, 2.0]).jobs
+    with pytest.raises(ValueError):
+        Workload(jobs=(staggered[1], staggered[0]))  # arrivals out of order
+
+
+def test_quick_sweep_acceptance_profile():
+    """The shape required of ``benchmarks/fleet_study.py --quick``: >= 50 jobs
+    across >= 16 types under >= 3 policies, and every cell satisfies the fleet
+    billing + checkpoint invariants."""
+    cfg = SweepConfig(
+        n_jobs=50,
+        mean_interarrival_s=0.4 * HOUR,
+        mean_work_h=4.0,
+        horizon_days=10.0,
+        n_types=16,
+        seeds=(0,),
+        sla=SLA(min_compute_units=4.0, os="linux"),
+    )
+    cells, results = run_sweep(cfg)
+    policies = {c.policy for c in cells}
+    assert len(policies) >= 3
+    assert all(c.n_jobs == 50 for c in cells)
+
+    types = select_types(cfg.sla, cfg.n_types)
+    assert len(types) >= 16
+    traces = batched_fleet_traces(types, cfg.seeds, cfg.horizon_days)[0]
+    for (policy, margin, seed), res in results.items():
+        # billing invariant on every record of every cell
+        assert res.total_cost == pytest.approx(sum(r.cost for r in res.records))
+        for r in res.records:
+            assert r.cost == pytest.approx(
+                run_cost(traces[r.instance], r.launch, r.end, r.termination, P.billing_period_s)
+            ), (policy, r)
+        # checkpoint monotonicity per replica chain
+        chains = {}
+        for r in res.records:
+            chains.setdefault((r.job_id, r.replica), []).append(r)
+        for chain in chains.values():
+            chain.sort(key=lambda r: r.launch)
+            for prev, nxt in zip(chain, chain[1:]):
+                assert nxt.initial_saved_ref >= prev.saved_after_ref - 1e-6
+
+    table = summarize(cells)
+    assert "algorithm1" in table and "diversified" in table
