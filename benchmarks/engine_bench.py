@@ -1,0 +1,121 @@
+"""Engine throughput: reference (scalar) vs batch (SoA) backends.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/engine_bench.py --quick [--min-speedup 10]
+
+Evaluates the §VII-style grid on both backends, verifies exact cross-backend
+parity on every cell, and writes ``BENCH_engine.json`` (cells/sec per
+backend, speedup).  ``--quick`` runs the acceptance grid — 16 instance types
+x 11 bids x 4 bid-limited schemes (x 4 seeds) — in a few seconds; the full
+grid covers the whole 64-type catalog at the paper's 41-bid resolution.
+``--min-speedup`` turns the run into a CI gate: exit non-zero when the batch
+backend falls below the given multiple of the reference throughput.
+
+Wall times are simulation-only (both backends share identical trace
+materialization, which is excluded by ``EngineResult.wall_s``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.core.market import catalog
+from repro.engine import (
+    BID_LIMITED_SCHEMES,
+    BatchEngine,
+    ReferenceEngine,
+    Scenario,
+    compare_engines,
+)
+
+
+def quick_scenario() -> Scenario:
+    """16 types x 11 bids x 4 schemes x 4 seeds, bids sweeping each type's
+    own band (0.50..0.60 x on-demand straddles the calibrated base band)."""
+    types = [it for it in catalog() if it.os == "linux"][:16]
+    return Scenario.grid(
+        work_s=24 * 3600.0,
+        bids=[round(0.50 + 0.01 * i, 3) for i in range(11)],
+        instances=types,
+        schemes=BID_LIMITED_SCHEMES,
+        horizon_days=30.0,
+        seeds=(0, 1, 2, 3),
+        bid_fractions=True,
+    )
+
+
+def full_scenario() -> Scenario:
+    """The full catalog at the paper's 41-bid resolution."""
+    return Scenario.grid(
+        work_s=24 * 3600.0,
+        bids=[round(0.50 + 0.0025 * i, 4) for i in range(41)],
+        schemes=BID_LIMITED_SCHEMES,
+        horizon_days=30.0,
+        seeds=(0, 1, 2, 3),
+        bid_fractions=True,
+    )
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="acceptance-sized grid (CI)")
+    ap.add_argument(
+        "--min-speedup",
+        type=float,
+        default=None,
+        help="fail unless batch >= this multiple of reference throughput",
+    )
+    ap.add_argument(
+        "--out", default="BENCH_engine.json", help="where to write the benchmark record"
+    )
+    args = ap.parse_args(argv)
+
+    scenario = quick_scenario() if args.quick else full_scenario()
+    print(
+        f"# engine bench: {len(scenario.instances)} types x {len(scenario.bids)} bids "
+        f"x {len(scenario.schemes)} schemes x {len(scenario.seeds)} seeds "
+        f"= {scenario.n_cells} cells"
+    )
+
+    report = compare_engines(scenario)  # runs both backends, diffs every cell
+    ref, bat = report.reference, report.batch
+    if not report.ok:
+        print(report)
+        return 2
+    speedup = ref.wall_s / bat.wall_s if bat.wall_s > 0 else float("inf")
+    print(f"reference: {ref.wall_s:8.3f}s  ({ref.cells_per_s:9.0f} cells/s)")
+    print(f"batch:     {bat.wall_s:8.3f}s  ({bat.cells_per_s:9.0f} cells/s)")
+    print(f"speedup:   {speedup:8.1f}x  (parity: exact on {ref.n_cells} cells)")
+
+    record = {
+        "grid": {
+            "n_types": len(scenario.instances),
+            "n_bids": len(scenario.bids),
+            "n_schemes": len(scenario.schemes),
+            "n_seeds": len(scenario.seeds),
+            "n_cells": scenario.n_cells,
+            "work_h": scenario.work_s / 3600.0,
+            "horizon_days": scenario.horizon_days,
+            "quick": bool(args.quick),
+        },
+        "reference": {"wall_s": ref.wall_s, "cells_per_s": ref.cells_per_s},
+        "batch": {"wall_s": bat.wall_s, "cells_per_s": bat.cells_per_s},
+        "speedup": speedup,
+        "parity_ok": report.ok,
+    }
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"wrote {out}")
+
+    if args.min_speedup is not None and speedup < args.min_speedup:
+        print(f"FAIL: speedup {speedup:.1f}x below required {args.min_speedup:.1f}x")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,8 @@ import time
 
 from repro.core.market import HOUR
 from repro.core.provision import SLA
-from repro.fleet import SweepConfig, run_sweep, summarize
+from repro.engine import FleetScenario, run_fleet
+from repro.fleet import SweepConfig, summarize
 
 
 def quick_config() -> SweepConfig:
@@ -54,7 +55,8 @@ def main(argv: list[str] | None = None) -> int:
 
     cfg = quick_config() if args.quick else full_config()
     t0 = time.perf_counter()
-    cells, results = run_sweep(cfg)
+    grid = run_fleet(FleetScenario.from_sweep_config(cfg))
+    cells, results = grid.cells, grid.results
     wall = time.perf_counter() - t0
 
     n_jobs_total = sum(c.n_jobs for c in cells)

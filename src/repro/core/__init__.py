@@ -40,7 +40,14 @@ from repro.core.schemes import (
     SimParams,
     decision_points,
 )
-from repro.core.simulator import AttemptResult, SimResult, simulate, simulate_attempt, sweep_bids
+from repro.core.simulator import (
+    AttemptResult,
+    SimResult,
+    simulate,
+    simulate_acc_attempt,
+    simulate_attempt,
+    sweep_bids,
+)
 
 __all__ = [
     "HOUR",
@@ -78,6 +85,7 @@ __all__ = [
     "sample_traces_batch",
     "shift_trace",
     "simulate",
+    "simulate_acc_attempt",
     "simulate_attempt",
     "spot_application",
     "step_trace",

@@ -224,11 +224,16 @@ def _run_period(trace, scheme, launch, start_work, b, saved, work_s, params, fai
 
 @dataclasses.dataclass(frozen=True)
 class AttemptResult:
-    """Outcome of one instance attempt (a single availability period).
+    """Outcome of one instance attempt (a single availability period, or —
+    for ACC — a single lease between launch and self-termination).
 
     All times are absolute on the given trace.  ``work_done_s`` and
     ``saved_work_s`` include ``initial_saved_work``; on a kill only
-    ``saved_work_s`` survives to the next attempt.
+    ``saved_work_s`` survives to the next attempt.  ``self_terminated`` marks
+    an ACC user termination at an hour boundary — like ``killed`` it ends the
+    attempt with the job unfinished, so a fleet controller treats either as a
+    migration trigger, but it is billed as a USER termination (full final
+    hour) per the paper's corrected billing.
     """
 
     launch: float
@@ -239,9 +244,12 @@ class AttemptResult:
     work_done_s: float
     saved_work_s: float
     n_checkpoints: int
+    self_terminated: bool = False  # ACC only
 
     def termination(self) -> Termination:
-        return Termination.USER if self.completed else Termination.OUT_OF_BID
+        if self.completed or self.self_terminated:
+            return Termination.USER
+        return Termination.OUT_OF_BID
 
 
 def simulate_attempt(
@@ -296,6 +304,59 @@ def simulate_attempt(
     return AttemptResult(launch, b, False, killed, cost, work_end, saved, took)
 
 
+def simulate_acc_attempt(
+    trace: PriceTrace,
+    work_s: float,
+    a_bid: float,
+    start_t: float = 0.0,
+    params: SimParams | None = None,
+    initial_saved_work: float = 0.0,
+) -> AttemptResult | None:
+    """Run a *single* ACC lease: launch at the first admissible instant at or
+    after ``start_t`` and walk hour boundaries to completion, self-termination
+    (``self_terminated=True``), or the horizon.
+
+    The ACC analogue of :func:`simulate_attempt`: ACC instances are never
+    provider-killed (S_bid ~ infinity), but a self-termination ends the lease
+    with the job unfinished exactly like an out-of-bid kill does for the
+    bid-limited schemes — so a fleet controller can re-provision the job onto
+    a different type from its last checkpoint.  Launch timing mirrors
+    :func:`simulate`'s ACC loop: immediate at ``start_t == 0`` when the price
+    already admits ``a_bid``, otherwise the next admissible poll tick; chain
+    attempts with ``start_t = previous.end + eps`` to reproduce the multi-
+    lease ``simulate`` outcome exactly (including the final lease, which is
+    billed OUT_OF_BID-style when it runs off the horizon).  Returns ``None``
+    when no admissible launch exists before the horizon.
+    """
+    params = params or SimParams()
+    if not 0.0 <= initial_saved_work <= work_s:
+        raise ValueError(f"initial_saved_work {initial_saved_work} outside [0, {work_s}]")
+
+    if start_t == 0.0 and trace.price_at(0.0) <= a_bid:
+        launch = 0.0
+    else:
+        launch = _next_launch_time(trace, start_t, a_bid, params.poll_s)
+    if launch is None or launch >= trace.horizon:
+        return None
+
+    done_at, terminated_at, work, saved, n_ckpt = _acc_lease(
+        trace, launch, work_s, a_bid, initial_saved_work, params
+    )
+    if done_at is not None:
+        cost = billing.run_cost(trace, launch, done_at, Termination.USER, params.billing_period_s)
+        return AttemptResult(launch, done_at, True, False, cost, work_s, saved, n_ckpt)
+    if terminated_at is None:  # ran off the horizon: billed OUT_OF_BID
+        # (full hours charged, partial final hour free), mirroring simulate()
+        cost = billing.run_cost(
+            trace, launch, trace.horizon, Termination.OUT_OF_BID, params.billing_period_s
+        )
+        return AttemptResult(launch, trace.horizon, False, False, cost, work, saved, n_ckpt)
+    cost = billing.run_cost(trace, launch, terminated_at, Termination.USER, params.billing_period_s)
+    return AttemptResult(
+        launch, terminated_at, False, False, cost, work, saved, n_ckpt, self_terminated=True
+    )
+
+
 # ---------------------------------------------------------------------------
 # ACC (paper §VI)
 # ---------------------------------------------------------------------------
@@ -312,6 +373,54 @@ def _next_launch_time(trace: PriceTrace, t_from: float, a_bid: float, poll_s: fl
         nxt_change = trace.next_change(t)
         t = max(t + poll_s, math.ceil(nxt_change / poll_s - _EPS) * poll_s)
     return None
+
+
+def _acc_lease(
+    trace: PriceTrace,
+    launch: float,
+    work_s: float,
+    a_bid: float,
+    saved: float,
+    params: SimParams,
+) -> tuple[float | None, float | None, float, float, int]:
+    """Walk one ACC lease from ``launch``: hour-by-hour checkpoint/terminate
+    decisions at the Eq. (3)-(4) decision points until completion,
+    self-termination, or the horizon.
+
+    Returns ``(done_at, terminated_at, work, saved, n_ckpt)``; exactly one of
+    ``done_at`` / ``terminated_at`` is set unless the lease runs off the
+    horizon (both ``None``).  Shared by :func:`simulate` (ACC) and the fleet
+    primitive :func:`simulate_acc_attempt` so the two can never drift.
+    """
+    L = launch
+    t = L + params.t_r
+    work = saved
+    k = 1
+    n_ckpt = 0
+    done_at = None
+    terminated_at = None
+    while True:
+        t_h = L + k * params.billing_period_s
+        t_cd, t_td = decision_points(t_h, params)
+        if t_h > trace.horizon:
+            break
+        take_ckpt = trace.price_at(t_cd) > a_bid
+        seg_end = (t_h - params.t_c) if take_ckpt else t_h
+        if seg_end > t:
+            if work + (seg_end - t) >= work_s - _EPS:
+                done_at = t + (work_s - work)
+                break
+            work += seg_end - t
+        t = seg_end
+        if take_ckpt:
+            saved = work  # snapshot at window start, completes exactly at t_h
+            n_ckpt += 1
+            t = t_h
+        if trace.price_at(t_td) > a_bid:
+            terminated_at = t_h
+            break
+        k += 1
+    return done_at, terminated_at, work, saved, n_ckpt
 
 
 def _simulate_acc(
@@ -332,39 +441,25 @@ def _simulate_acc(
 
     while launch_at is not None and launch_at < trace.horizon:
         L = launch_at
-        t = L + params.t_r
-        work = saved
-        k = 1
-        done_at = None
-        terminated_at = None
-        while True:
-            t_h = L + k * params.billing_period_s
-            t_cd, t_td = decision_points(t_h, params)
-            if t_h > trace.horizon:
-                break
-            take_ckpt = trace.price_at(t_cd) > a_bid
-            seg_end = (t_h - params.t_c) if take_ckpt else t_h
-            if seg_end > t:
-                if work + (seg_end - t) >= work_s - _EPS:
-                    done_at = t + (work_s - work)
-                    break
-                work += seg_end - t
-            t = seg_end
-            if take_ckpt:
-                saved = work  # snapshot at window start, completes exactly at t_h
-                n_ckpt += 1
-                t = t_h
-            if trace.price_at(t_td) > a_bid:
-                terminated_at = t_h
-                break
-            k += 1
+        done_at, terminated_at, work, saved, ckpts = _acc_lease(
+            trace, L, work_s, a_bid, saved, params
+        )
+        n_ckpt += ckpts
 
         if done_at is not None:
             cost = billing.run_cost(trace, L, done_at, Termination.USER, params.billing_period_s)
             runs.append(InstanceRun(L, done_at, Termination.USER, cost))
             return _result(Scheme.ACC, a_bid, work_s, True, done_at, runs, n_ckpt, 0, n_term, work_lost)
 
-        if terminated_at is None:  # ran off the horizon
+        if terminated_at is None:  # ran off the horizon: bill like the
+            # bid-limited schemes bill a horizon-truncated period (full hours
+            # charged, partial final hour free) so cross-scheme cost
+            # comparisons at non-completing bids aren't biased towards ACC
+            if trace.horizon > L:
+                cost = billing.run_cost(
+                    trace, L, trace.horizon, Termination.OUT_OF_BID, params.billing_period_s
+                )
+                runs.append(InstanceRun(L, trace.horizon, Termination.OUT_OF_BID, cost))
             break
 
         cost = billing.run_cost(trace, L, terminated_at, Termination.USER, params.billing_period_s)
@@ -404,15 +499,22 @@ def sweep_bids(
     schemes=tuple(Scheme),
     params: SimParams | None = None,
 ) -> dict[Scheme, list[SimResult]]:
-    params = params or SimParams()
-    out: dict[Scheme, list[SimResult]] = {s: [] for s in schemes}
-    pdf_cache: dict[float, FailurePdf] = {}
-    for bid in bids:
-        for s in schemes:
-            pdf = None
-            if s == Scheme.ADAPT:
-                if bid not in pdf_cache:
-                    pdf_cache[bid] = FailurePdf.from_trace(trace, bid)
-                pdf = pdf_cache[bid]
-            out[s].append(simulate(trace, s, work_s, bid, params, pdf))
-    return out
+    """Deprecated: thin adapter over :mod:`repro.engine`.
+
+    Build a :class:`repro.engine.Scenario` and call :func:`repro.engine.run`
+    instead — that surface covers multi-type/multi-seed grids and can use the
+    vectorized batch backend; this wrapper keeps the original single-trace
+    signature and return shape (``{scheme: [SimResult per bid]}``, run lists
+    included) on the scalar reference backend.
+    """
+    import warnings
+
+    warnings.warn(
+        "sweep_bids is deprecated; build a repro.engine.Scenario and call repro.engine.run",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.engine import ReferenceEngine, Scenario
+
+    scenario = Scenario.from_trace(trace, work_s, tuple(bids), tuple(schemes), params)
+    return ReferenceEngine(keep_runs=True).run(scenario).to_sweep_dict(0)

@@ -1,0 +1,65 @@
+"""One Scenario/Engine API: the declarative simulation surface.
+
+Everything the repo simulates — §VII bid sweeps, fleet studies, SpotTrainer
+markets — is described by a frozen scenario object and evaluated by an
+interchangeable engine backend:
+
+  * :class:`Scenario` / :class:`FleetScenario` — what to simulate
+    (market, workload, schemes, bid grid, params, seeds), never how.
+  * :class:`ReferenceEngine` — the scalar event loop, cell by cell;
+    semantically canonical.
+  * :class:`BatchEngine` — structure-of-arrays NumPy lockstep over the
+    whole (type × bid × seed) grid for the bid-limited schemes, bit-identical
+    to the reference (see :mod:`repro.engine.parity`); falls back to the
+    scalar path for ADAPT/ACC cells.
+  * :func:`run` / :func:`run_fleet` — the one-call entry points.
+
+Legacy surfaces (``repro.core.simulator.sweep_bids``,
+``repro.fleet.sweep.run_sweep``) remain as thin deprecation shims over this
+package; see docs/engine.md for the migration table.
+"""
+
+from repro.engine.base import (
+    PARITY_FIELDS,
+    Engine,
+    EngineResult,
+    get_engine,
+    run,
+)
+from repro.engine.batch import BatchEngine
+from repro.engine.fleetgrid import FleetGridResult, policy_registry, resolve_policies, run_fleet
+from repro.engine.parity import (
+    CellMismatch,
+    ParityReport,
+    assert_parity,
+    compare_engines,
+)
+from repro.engine.reference import ReferenceEngine
+from repro.engine.scenario import (
+    BID_LIMITED_SCHEMES,
+    FleetScenario,
+    MarketCell,
+    Scenario,
+)
+
+__all__ = [
+    "BID_LIMITED_SCHEMES",
+    "PARITY_FIELDS",
+    "BatchEngine",
+    "CellMismatch",
+    "Engine",
+    "EngineResult",
+    "FleetGridResult",
+    "FleetScenario",
+    "MarketCell",
+    "ParityReport",
+    "ReferenceEngine",
+    "Scenario",
+    "assert_parity",
+    "compare_engines",
+    "get_engine",
+    "policy_registry",
+    "resolve_policies",
+    "run",
+    "run_fleet",
+]

@@ -1,0 +1,159 @@
+"""Engine protocol and the structure-of-arrays result container.
+
+An :class:`Engine` consumes a :class:`~repro.engine.scenario.Scenario` and
+returns an :class:`EngineResult` — per-cell outcome arrays shaped
+``(n_markets, n_bids, n_schemes)``.  Two interchangeable backends ship:
+
+  * :class:`~repro.engine.reference.ReferenceEngine` — wraps the scalar
+    event loop of :func:`repro.core.simulator.simulate`; the semantic anchor.
+  * :class:`~repro.engine.batch.BatchEngine` — lowers the bid-limited
+    schemes onto lockstep NumPy ops; bit-identical to the reference on
+    ``cost`` / ``completion_time`` / ``n_kills`` / ``n_checkpoints``
+    (enforced by :mod:`repro.engine.parity` and the CI benchmark gate).
+
+``run(scenario)`` is the one-call surface; ``engine="auto"`` picks the batch
+backend (which itself falls back to the reference for ADAPT/ACC cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.schemes import Scheme
+from repro.core.simulator import SimResult
+from repro.engine.scenario import MarketCell, Scenario
+
+#: SimResult fields every backend must agree on, cell for cell.
+PARITY_FIELDS = ("completed", "completion_time", "cost", "n_checkpoints", "n_kills")
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """SoA outcome grid: axis 0 markets, axis 1 bids, axis 2 schemes.
+
+    ``sim_results`` is populated by the reference backend only (it is the one
+    that materializes per-run records); the batch backend leaves it ``None``
+    and :meth:`cell` reconstructs a run-less :class:`SimResult`.
+    """
+
+    scenario: Scenario
+    engine: str
+    markets: list[MarketCell]
+    bids: tuple[float, ...]
+    schemes: tuple[Scheme, ...]
+    completed: np.ndarray  # bool  (M, B, S)
+    completion_time: np.ndarray  # float64, inf when unfinished
+    cost: np.ndarray  # float64 $
+    n_checkpoints: np.ndarray  # int64
+    n_kills: np.ndarray  # int64
+    n_self_terminations: np.ndarray  # int64 (ACC only)
+    work_lost_s: np.ndarray  # float64
+    wall_s: float = 0.0
+    sim_results: dict[tuple[int, int, int], SimResult] | None = None
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return self.cost.shape
+
+    @property
+    def n_cells(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def cells_per_s(self) -> float:
+        return self.n_cells / self.wall_s if self.wall_s > 0 else math.inf
+
+    def scheme_index(self, scheme: Scheme) -> int:
+        return self.schemes.index(scheme)
+
+    def cell(self, market: int, bid: int, scheme: Scheme | int) -> SimResult:
+        """Reconstruct one cell as a :class:`SimResult` (runs only when the
+        backend kept them)."""
+        s = scheme if isinstance(scheme, int) else self.scheme_index(scheme)
+        if self.sim_results is not None and (market, bid, s) in self.sim_results:
+            return self.sim_results[(market, bid, s)]
+        return SimResult(
+            scheme=self.schemes[s],
+            bid=self.scenario.market_bids(self.markets[market])[bid],
+            work_s=self.scenario.work_s,
+            completed=bool(self.completed[market, bid, s]),
+            completion_time=float(self.completion_time[market, bid, s]),
+            cost=float(self.cost[market, bid, s]),
+            n_checkpoints=int(self.n_checkpoints[market, bid, s]),
+            n_kills=int(self.n_kills[market, bid, s]),
+            n_self_terminations=int(self.n_self_terminations[market, bid, s]),
+            work_lost_s=float(self.work_lost_s[market, bid, s]),
+            runs=[],
+        )
+
+    def by_scheme(self, scheme: Scheme) -> dict[str, np.ndarray]:
+        """(M, B) slices of every outcome array for one scheme."""
+        s = self.scheme_index(scheme)
+        return {
+            "completed": self.completed[:, :, s],
+            "completion_time": self.completion_time[:, :, s],
+            "cost": self.cost[:, :, s],
+            "n_checkpoints": self.n_checkpoints[:, :, s],
+            "n_kills": self.n_kills[:, :, s],
+            "n_self_terminations": self.n_self_terminations[:, :, s],
+            "work_lost_s": self.work_lost_s[:, :, s],
+        }
+
+    def to_sweep_dict(self, market: int = 0) -> dict[Scheme, list[SimResult]]:
+        """Legacy ``sweep_bids`` shape: ``{scheme: [result per bid]}``."""
+        out: dict[Scheme, list[SimResult]] = {}
+        for s, scheme in enumerate(self.schemes):
+            out[scheme] = [self.cell(market, b, s) for b in range(len(self.bids))]
+        return out
+
+
+def empty_result(scenario: Scenario, markets: list[MarketCell], engine: str) -> EngineResult:
+    """Allocate an all-unfinished result grid for ``scenario``."""
+    shape = (len(markets), len(scenario.bids), len(scenario.schemes))
+    return EngineResult(
+        scenario=scenario,
+        engine=engine,
+        markets=markets,
+        bids=scenario.bids,
+        schemes=scenario.schemes,
+        completed=np.zeros(shape, dtype=bool),
+        completion_time=np.full(shape, np.inf),
+        cost=np.zeros(shape),
+        n_checkpoints=np.zeros(shape, dtype=np.int64),
+        n_kills=np.zeros(shape, dtype=np.int64),
+        n_self_terminations=np.zeros(shape, dtype=np.int64),
+        work_lost_s=np.zeros(shape),
+    )
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Anything that can evaluate a Scenario into an EngineResult."""
+
+    name: str
+
+    def run(self, scenario: Scenario) -> EngineResult: ...
+
+
+def get_engine(name: str = "auto") -> Engine:
+    """Resolve an engine by name: ``"reference"``, ``"batch"``, or ``"auto"``
+    (currently the batch backend, which is parity-checked against the
+    reference and falls back to it per-cell for ADAPT/ACC)."""
+    from repro.engine.batch import BatchEngine
+    from repro.engine.reference import ReferenceEngine
+
+    if name in ("auto", "batch"):
+        return BatchEngine()
+    if name == "reference":
+        return ReferenceEngine()
+    raise ValueError(f"unknown engine {name!r}; expected auto|batch|reference")
+
+
+def run(scenario: Scenario, engine: str | Engine = "auto") -> EngineResult:
+    """Evaluate ``scenario`` on the selected backend."""
+    eng = get_engine(engine) if isinstance(engine, str) else engine
+    return eng.run(scenario)

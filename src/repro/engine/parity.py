@@ -1,0 +1,95 @@
+"""Cross-backend parity: the redesign's correctness anchor.
+
+The batch backend is only trusted because this module can prove, scenario by
+scenario, that it reproduces the scalar reference **exactly** — same cost,
+completion_time, n_kills and n_checkpoints in every (market, bid, scheme)
+cell.  The engines share no simulation code (one walks events in Python, one
+walks SoA arrays), so agreement is strong evidence both are right; the float
+expressions are mirrored by construction, so the comparison is ``==``, not
+``allclose``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.engine.base import EngineResult
+from repro.engine.batch import BatchEngine
+from repro.engine.reference import ReferenceEngine
+from repro.engine.scenario import Scenario
+
+#: Array fields compared cell-for-cell (exact equality, inf == inf).
+COMPARED = ("completed", "completion_time", "cost", "n_checkpoints", "n_kills", "n_self_terminations")
+
+
+@dataclasses.dataclass
+class CellMismatch:
+    field: str
+    market: str
+    seed: int
+    bid: float
+    scheme: str
+    reference: float
+    batch: float
+
+
+@dataclasses.dataclass
+class ParityReport:
+    scenario: Scenario
+    reference: EngineResult
+    batch: EngineResult
+    mismatches: list[CellMismatch]
+
+    @property
+    def ok(self) -> bool:
+        return not self.mismatches
+
+    def __str__(self) -> str:
+        if self.ok:
+            return f"parity OK over {self.reference.n_cells} cells"
+        lines = [f"parity FAILED: {len(self.mismatches)} mismatching cells"]
+        for mm in self.mismatches[:20]:
+            lines.append(
+                f"  {mm.field}[{mm.market} seed={mm.seed} bid={mm.bid:.3f} {mm.scheme}] "
+                f"reference={mm.reference!r} batch={mm.batch!r}"
+            )
+        if len(self.mismatches) > 20:
+            lines.append(f"  ... and {len(self.mismatches) - 20} more")
+        return "\n".join(lines)
+
+
+def compare_engines(scenario: Scenario) -> ParityReport:
+    """Run both backends on ``scenario`` and diff every compared field."""
+    ref = ReferenceEngine(keep_runs=False).run(scenario)
+    bat = BatchEngine().run(scenario)
+    mismatches: list[CellMismatch] = []
+    for field in COMPARED:
+        r = getattr(ref, field)
+        b = getattr(bat, field)
+        # exact equality (inf == inf holds; a NaN would rightly flag itself)
+        eq = r == b
+        for m, bi, si in zip(*np.nonzero(~eq)):
+            cellm = ref.markets[m]
+            mismatches.append(
+                CellMismatch(
+                    field=field,
+                    market=cellm.label,
+                    seed=cellm.seed,
+                    bid=ref.bids[bi],
+                    scheme=ref.schemes[si].value,
+                    reference=r[m, bi, si],
+                    batch=b[m, bi, si],
+                )
+            )
+    return ParityReport(scenario=scenario, reference=ref, batch=bat, mismatches=mismatches)
+
+
+def assert_parity(scenario: Scenario) -> ParityReport:
+    """Raise ``AssertionError`` (with per-cell detail) unless both backends
+    agree exactly; returns the report otherwise."""
+    report = compare_engines(scenario)
+    if not report.ok:
+        raise AssertionError(str(report))
+    return report

@@ -11,7 +11,11 @@ jobs, in the direction named by Qu et al. and Voorsluys et al. (PAPERS.md):
   * :mod:`~repro.fleet.controller` — discrete-event loop over concurrent jobs,
                                      corrected billing, checkpoint-preserving
                                      cross-type migration on out-of-bid kills
-  * :mod:`~repro.fleet.sweep`      — NumPy-batched (policy x bid x seed) studies
+                                     and ACC self-terminations
+  * :mod:`~repro.fleet.sweep`      — batched trace generation + the deprecated
+                                     ``run_sweep`` shim; declare studies as a
+                                     :class:`repro.engine.FleetScenario` and
+                                     run them with :func:`repro.engine.run_fleet`
 """
 
 from repro.fleet.controller import AttemptRecord, FleetController, FleetResult, JobOutcome

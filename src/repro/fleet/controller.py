@@ -4,11 +4,13 @@
 jobs across a catalog of instance types with one price trace per type.  Each
 job replica advances through *attempts* — single availability periods
 simulated by :func:`repro.core.simulator.simulate_attempt` under the chosen
-checkpointing scheme, billed by :mod:`repro.core.billing`.  On an out-of-bid
-kill the migration engine re-runs the placement policy over the surviving
-catalog and resumes the job on a (usually different) type from its last
-checkpoint, scaling remaining work by the ECU ratio exactly as Algorithm 1
-scales work when ranking types.
+checkpointing scheme (single ACC leases via
+:func:`~repro.core.simulator.simulate_acc_attempt`), billed by
+:mod:`repro.core.billing`.  On an out-of-bid kill — or an ACC
+self-termination, which evicts the job the same way — the migration engine
+re-runs the placement policy over the surviving catalog and resumes the job
+on a (usually different) type from its last checkpoint, scaling remaining
+work by the ECU ratio exactly as Algorithm 1 scales work when ranking types.
 
 The event loop holds a heap of (time, event) pairs; attempts are simulated
 eagerly into the future and cancelled lazily (stale tokens), which keeps the
@@ -26,7 +28,8 @@ from repro.core import billing
 from repro.core.billing import Termination
 from repro.core.market import InstanceType, PriceTrace
 from repro.core.schemes import Scheme, SimParams
-from repro.core.simulator import simulate_attempt
+from repro.core.schemes import FailurePdf
+from repro.core.simulator import simulate_acc_attempt, simulate_attempt
 from repro.fleet.policies import Placement, PlacementContext, PlacementPolicy
 from repro.fleet.workload import Job, Workload
 
@@ -58,6 +61,7 @@ class AttemptRecord:
     killed: bool
     completed: bool
     cancelled: bool  # sibling replica finished first; run truncated at its end
+    self_terminated: bool = False  # ACC user termination (migration trigger)
 
 
 @dataclasses.dataclass
@@ -100,6 +104,11 @@ class FleetResult:
     @property
     def n_migrations(self) -> int:
         return sum(o.n_migrations for o in self.outcomes.values())
+
+    @property
+    def n_self_terminations(self) -> int:
+        """ACC user terminations across all records (0 for bid-limited schemes)."""
+        return sum(1 for r in self.records if r.self_terminated)
 
     @property
     def kill_rate(self) -> float:
@@ -213,8 +222,6 @@ class FleetController:
         missing = [it.name for it in catalog if it.name not in traces]
         if missing:
             raise ValueError(f"no trace for catalog types: {missing[:4]}...")
-        if scheme == Scheme.ACC:
-            raise ValueError("fleet attempts are bid-limited; ACC has no out-of-bid kill to migrate on")
         self.catalog = list(catalog)
         self.traces = dict(traces)
         self.policy = policy
@@ -231,6 +238,10 @@ class FleetController:
             reference_ecu=reference_ecu,
             bid_margin=bid_margin,
         )
+        # ADAPT pdfs built from *evaluation* traces when a type has no
+        # history: cached here so re-provisioning the same (type, bid) across
+        # migrations doesn't rebuild the pdf inside every simulate_attempt
+        self._eval_pdf_cache: dict[tuple[str, float], FailurePdf] = {}
 
     # -- helpers ------------------------------------------------------------
 
@@ -243,6 +254,18 @@ class FleetController:
     def _scale(self, it: InstanceType) -> float:
         """reference-ECU seconds -> wall seconds on ``it`` (and back by /)."""
         return self.reference_ecu / it.compute_units
+
+    def _adapt_pdf(self, name: str, bid: float) -> FailurePdf:
+        """ADAPT failure pdf for (type, bid): from history via the shared
+        placement-context cache, else built once from the evaluation trace
+        (and cached) — never rebuilt per migration attempt."""
+        pdf = self.ctx.pdf(name, bid)
+        if pdf is not None:
+            return pdf
+        key = (name, round(bid, 6))
+        if key not in self._eval_pdf_cache:
+            self._eval_pdf_cache[key] = FailurePdf.from_trace(self.traces[name], bid)
+        return self._eval_pdf_cache[key]
 
     # -- main loop ----------------------------------------------------------
 
@@ -263,21 +286,33 @@ class FleetController:
             rep = st.replicas[r_idx]
             trace = self.traces[placement.instance.name]
             scale = self._scale(placement.instance)
-            # ADAPT's hazard estimate must come from history, not from the
-            # future of the very trace being simulated (and is cached).
-            failure_pdf = None
-            if self.scheme == Scheme.ADAPT:
-                failure_pdf = self.ctx.pdf(placement.instance.name, placement.bid)
-            att = simulate_attempt(
-                trace,
-                self.scheme,
-                st.job.work_s * scale,
-                placement.bid,
-                start_t=now,
-                params=self.params,
-                failure_pdf=failure_pdf,
-                initial_saved_work=rep.saved_ref * scale,
-            )
+            if self.scheme == Scheme.ACC:
+                # ACC lease: never provider-killed; a self-termination at an
+                # hour boundary drives migration like an out-of-bid kill does
+                att = simulate_acc_attempt(
+                    trace,
+                    st.job.work_s * scale,
+                    placement.bid,
+                    start_t=now,
+                    params=self.params,
+                    initial_saved_work=rep.saved_ref * scale,
+                )
+            else:
+                # ADAPT's hazard estimate must come from history, not from the
+                # future of the very trace being simulated (and is cached).
+                failure_pdf = None
+                if self.scheme == Scheme.ADAPT:
+                    failure_pdf = self._adapt_pdf(placement.instance.name, placement.bid)
+                att = simulate_attempt(
+                    trace,
+                    self.scheme,
+                    st.job.work_s * scale,
+                    placement.bid,
+                    start_t=now,
+                    params=self.params,
+                    failure_pdf=failure_pdf,
+                    initial_saved_work=rep.saved_ref * scale,
+                )
             if att is None:  # type never available again under this bid
                 rep.done = True
                 return
@@ -310,6 +345,7 @@ class FleetController:
             st: _JobState, r_idx: int, att, placement: Placement, initial_ref: float,
             end: float, termination: Termination, cost: float,
             killed: bool, completed: bool, cancelled: bool, saved_after_ref: float,
+            self_terminated: bool = False,
         ) -> None:
             work_start = min(att.launch + self.params.t_r, end)
             records.append(
@@ -328,6 +364,7 @@ class FleetController:
                     killed=killed,
                     completed=completed,
                     cancelled=cancelled,
+                    self_terminated=self_terminated,
                 )
             )
 
@@ -399,11 +436,14 @@ class FleetController:
             record_attempt(
                 st, r_idx, att, placement, initial_ref, att.end,
                 att.termination(), att.cost, att.killed, False, False, saved_after_ref,
+                self_terminated=att.self_terminated,
             )
             rep.saved_ref = saved_after_ref
-            if att.killed and self.migrate and rep.n_migrations < self.max_migrations_per_replica:
+            # out-of-bid kills and ACC self-terminations both re-enter placement
+            evicted = att.killed or att.self_terminated
+            if evicted and self.migrate and rep.n_migrations < self.max_migrations_per_replica:
                 rep.n_migrations += 1
-                replace(st, r_idx, att.end, frozenset({placement.instance.name}))
+                replace(st, r_idx, att.end + _EPS, frozenset({placement.instance.name}))
             else:
                 rep.done = True
 

@@ -1,26 +1,24 @@
-"""Vectorized sweep harness: (policy x bid-margin x seed) fleet studies.
+"""Legacy sweep surface: (policy x bid-margin x seed) fleet studies.
 
-Trace generation — the dominant cost of a naive sweep — is done in a single
-NumPy-batched :func:`repro.core.market.sample_traces_batch` call covering
-every (instance type, seed) cell, with :func:`repro.core.market.ensemble_seed`
-decorrelating streams across types (same-seed traces of different types are
-otherwise near-proportional, which would fake perfectly correlated markets).
-Policy histories are drawn from a disjoint seed block so no policy sees the
-future of the traces it is evaluated on.
+The sweep loop itself now lives in :mod:`repro.engine.fleetgrid` (declare a
+:class:`repro.engine.FleetScenario`, call :func:`repro.engine.run_fleet`);
+this module keeps the building blocks it shares with the engine — type
+selection and the NumPy-batched, :func:`repro.core.market.ensemble_seed`-
+decorrelated trace generation (policy histories from a disjoint seed block so
+no policy sees the future of the traces it is evaluated on) — plus the
+deprecated :func:`run_sweep` adapter with its original signature.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Sequence
 
 from repro.core.market import HOUR, InstanceType, PriceTrace, catalog, ensemble_seed, sample_traces_batch, TraceModel
 from repro.core.provision import SLA
-from repro.core.schemes import Scheme, SimParams
-from repro.fleet.controller import FleetController, FleetResult
+from repro.core.schemes import Scheme
+from repro.fleet.controller import FleetResult
 from repro.fleet.policies import PlacementPolicy, default_policies
-from repro.fleet.workload import Workload
 
 _HISTORY_SEED_OFFSET = 7_654_321  # disjoint stream block for policy histories
 
@@ -106,55 +104,26 @@ def run_sweep(
     cfg: SweepConfig,
     policies: Sequence[PlacementPolicy] | None = None,
 ) -> tuple[list[SweepCell], dict[tuple[str, float, int], FleetResult]]:
-    """Evaluate every (policy, bid_margin, seed) cell of the study."""
-    policies = list(policies) if policies is not None else default_policies(cfg.n_replicas)
-    types = select_types(cfg.sla, cfg.n_types)
-    traces_by_seed = batched_fleet_traces(types, cfg.seeds, cfg.horizon_days)
-    hist_by_seed = batched_fleet_traces(types, cfg.seeds, cfg.horizon_days, history=True)
+    """Deprecated: thin adapter over :func:`repro.engine.run_fleet`.
 
-    cells: list[SweepCell] = []
-    results: dict[tuple[str, float, int], FleetResult] = {}
-    for seed in cfg.seeds:
-        workload = Workload.poisson(
-            cfg.n_jobs,
-            cfg.mean_interarrival_s,
-            cfg.mean_work_h * HOUR,
-            seed=seed,
-            sla=cfg.sla,
-            deadline_slack=cfg.deadline_slack,
-        )
-        for margin in cfg.bid_margins:
-            for policy in policies:
-                t0 = time.perf_counter()
-                controller = FleetController(
-                    types,
-                    traces_by_seed[seed],
-                    policy,
-                    histories=hist_by_seed[seed],
-                    scheme=cfg.scheme,
-                    bid_margin=margin,
-                )
-                res = controller.run(workload)
-                wall = time.perf_counter() - t0
-                results[(policy.name, margin, seed)] = res
-                cells.append(
-                    SweepCell(
-                        policy=policy.name,
-                        bid_margin=margin,
-                        seed=seed,
-                        total_cost=res.total_cost,
-                        makespan_h=res.makespan / HOUR,
-                        mean_completion_h=res.mean_completion_s() / HOUR,
-                        kill_rate=res.kill_rate,
-                        n_kills=res.n_kills,
-                        n_migrations=res.n_migrations,
-                        n_completed=res.n_completed,
-                        n_jobs=len(res.outcomes),
-                        n_outages=len(res.outage_intervals()),
-                        wall_s=wall,
-                    )
-                )
-    return cells, results
+    Build a :class:`repro.engine.FleetScenario` and call
+    :func:`repro.engine.run_fleet` instead; this wrapper keeps the original
+    ``(cells, results)`` return shape.
+    """
+    import warnings
+
+    warnings.warn(
+        "run_sweep is deprecated; build a repro.engine.FleetScenario and call "
+        "repro.engine.run_fleet",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.engine import FleetScenario, run_fleet
+
+    scenario = FleetScenario.from_sweep_config(cfg)
+    policies = list(policies) if policies is not None else default_policies(cfg.n_replicas)
+    grid = run_fleet(scenario, policies=policies)
+    return grid.cells, grid.results
 
 
 def summarize(cells: Sequence[SweepCell]) -> str:

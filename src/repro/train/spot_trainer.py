@@ -94,6 +94,47 @@ class SpotTrainer:
         self.lifecycle = Lifecycle()
         self.t_c_estimate = cfg.sim.t_c  # refined after the first save
 
+    @classmethod
+    def from_scenario(
+        cls,
+        scenario,
+        *,
+        ckpt_dir: str,
+        train_step: Callable,
+        init_params: Callable[[], tuple],
+        data,
+        market: int = 0,
+        bid_index: int = 0,
+        relaunch_shardings=None,
+        on_straggler: Callable | None = None,
+        **config_overrides,
+    ) -> "SpotTrainer":
+        """Drive the trainer from a declarative :class:`repro.engine.Scenario`.
+
+        The scenario supplies the market (``market`` indexes its materialized
+        (type, seed) cells), the A_bid (``bid_index`` into the scenario's bid
+        grid, on-demand-scaled when ``bid_fractions`` is set) and the
+        :class:`SimParams`; everything else of :class:`SpotTrainerConfig` can
+        be overridden via keyword.  This makes a live training campaign just
+        one more backend for the same scenario the simulation engines sweep —
+        e.g. simulate the full bid grid with ``repro.engine.run`` first, then
+        replay the chosen cell against real training state here.
+        """
+        cellm = scenario.materialize_cell(market)
+        a_bid = scenario.market_bids(cellm)[bid_index]
+        cfg = SpotTrainerConfig(
+            a_bid=a_bid, ckpt_dir=ckpt_dir, sim=scenario.params, **config_overrides
+        )
+        return cls(
+            cfg,
+            train_step=train_step,
+            init_params=init_params,
+            data=data,
+            trace=cellm.trace,
+            relaunch_shardings=relaunch_shardings,
+            on_straggler=on_straggler,
+        )
+
     # ------------------------------------------------------------------
     def _state_bytes(self, params, opt_state) -> int:
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves((params, opt_state)))

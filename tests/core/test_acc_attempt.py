@@ -1,0 +1,112 @@
+"""The ACC single-attempt primitive (``simulate_acc_attempt``).
+
+One ACC lease at a time, returning control at each self-termination so a
+fleet controller can migrate — chaining attempts on one trace must reproduce
+the multi-lease ``simulate(Scheme.ACC, ...)`` outcome exactly.
+"""
+
+import pytest
+
+from repro.core import (
+    HOUR,
+    Scheme,
+    SimParams,
+    Termination,
+    get_instance,
+    simulate,
+    simulate_acc_attempt,
+    step_trace,
+    synthetic_trace,
+)
+
+P = SimParams()
+IT = get_instance("m1.xlarge")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 3, 5])
+@pytest.mark.parametrize("bid", [0.36, 0.37, 0.40])
+def test_attempt_chain_reproduces_simulate_acc(seed, bid):
+    tr = synthetic_trace(IT, 30, seed=seed)
+    work = 60 * 3600.0
+    full = simulate(tr, Scheme.ACC, work, bid, P)
+    saved, t, total_cost, ckpts, terms = 0.0, 0.0, 0.0, 0, 0
+    for _ in range(500):
+        att = simulate_acc_attempt(tr, work, bid, t, P, initial_saved_work=saved)
+        if att is None:
+            break
+        total_cost += att.cost
+        ckpts += att.n_checkpoints
+        assert att.saved_work_s >= saved  # checkpointed work never shrinks
+        assert not att.killed  # ACC is never provider-killed
+        if att.completed:
+            assert full.completed
+            assert att.end == pytest.approx(full.completion_time, abs=1e-9)
+            break
+        if not att.self_terminated:  # ran off the horizon
+            assert not full.completed
+            break
+        terms += 1
+        saved = att.saved_work_s
+        t = att.end + 1e-9
+    assert total_cost == pytest.approx(full.cost, abs=1e-9)
+    assert ckpts == full.n_checkpoints
+    assert terms == full.n_self_terminations
+
+
+def test_self_termination_is_user_billed():
+    """Price above A_bid at the terminate decision point: lease ends at the
+    hour boundary, billed as a USER termination (full final hour)."""
+    # in-bid for the first hour, then a long excursion above the bid
+    tr = step_trace([(0.0, 0.30), (0.9 * HOUR, 1.0), (5 * HOUR, 0.30)], horizon_s=40 * HOUR)
+    att = simulate_acc_attempt(tr, 100 * 3600.0, 0.40, 0.0, P)
+    assert att is not None
+    assert att.self_terminated and not att.completed and not att.killed
+    assert att.end == pytest.approx(HOUR)
+    assert att.termination() == Termination.USER
+    assert att.cost == pytest.approx(0.30)  # hour-start price, full hour
+
+
+def test_relaunch_waits_for_poll_tick_below_bid():
+    tr = step_trace([(0.0, 1.0), (2 * HOUR + 30.0, 0.30)], horizon_s=40 * HOUR)
+    att = simulate_acc_attempt(tr, 3600.0, 0.40, 0.0, P)
+    assert att is not None
+    # price drops mid-poll-interval; launch lands on the next 60 s tick
+    assert att.launch == pytest.approx(2 * HOUR + 60.0)
+    assert att.completed
+
+
+def test_none_when_never_admissible():
+    tr = step_trace([(0.0, 1.0)], horizon_s=10 * HOUR)
+    assert simulate_acc_attempt(tr, 3600.0, 0.40, 0.0, P) is None
+    # admissible early but not at/after start_t
+    tr2 = step_trace([(0.0, 0.30), (HOUR, 1.0)], horizon_s=10 * HOUR)
+    assert simulate_acc_attempt(tr2, 3600.0, 0.40, 2 * HOUR, P) is None
+
+
+def test_horizon_lease_billed_like_simulate():
+    """A lease that runs off the horizon mirrors simulate(): billed
+    OUT_OF_BID-style (two full hours charged, partial final half hour free),
+    no self-termination flag — and the record rebills consistently."""
+    from repro.core import run_cost
+
+    tr = step_trace([(0.0, 0.30)], horizon_s=2.5 * HOUR)
+    att = simulate_acc_attempt(tr, 1000 * 3600.0, 0.40, 0.0, P)
+    assert att is not None
+    assert not att.completed and not att.self_terminated and not att.killed
+    assert att.end == pytest.approx(2.5 * HOUR)
+    assert att.cost == pytest.approx(2 * 0.30)
+    assert att.termination() == Termination.OUT_OF_BID
+    # record consistency: cost == rebilling with the record's own termination
+    assert att.cost == pytest.approx(
+        run_cost(tr, att.launch, att.end, att.termination(), P.billing_period_s)
+    )
+    full = simulate(tr, Scheme.ACC, 1000 * 3600.0, 0.40, P)
+    assert full.cost == att.cost
+
+
+def test_rejects_bad_initial_saved_work():
+    tr = synthetic_trace(IT, 5, seed=0)
+    with pytest.raises(ValueError):
+        simulate_acc_attempt(tr, 3600.0, 0.40, 0.0, P, initial_saved_work=-1.0)
+    with pytest.raises(ValueError):
+        simulate_acc_attempt(tr, 3600.0, 0.40, 0.0, P, initial_saved_work=7200.0)

@@ -1,0 +1,87 @@
+"""Legacy entry points as thin adapters over the engine surface.
+
+``sweep_bids`` and ``fleet.sweep.run_sweep`` must keep their original
+signatures and results (deprecation shims), and the engine-native paths they
+delegate to must agree with the pre-redesign behavior.
+"""
+
+import math
+
+import pytest
+
+from repro.core import HOUR, SLA, Scheme, SimParams, get_instance, simulate, synthetic_trace
+from repro.core.schemes import FailurePdf
+from repro.core.simulator import sweep_bids
+from repro.engine import FleetScenario, Scenario, run, run_fleet
+from repro.fleet import SweepConfig
+from repro.fleet.sweep import run_sweep
+
+IT = get_instance("m1.xlarge")
+
+
+def test_sweep_bids_emits_deprecation_and_matches_simulate():
+    tr = synthetic_trace(IT, 30, seed=3)
+    bids = [0.36, 0.37, 0.38]
+    with pytest.warns(DeprecationWarning):
+        out = sweep_bids(tr, 10 * 3600.0, bids, schemes=(Scheme.HOUR, Scheme.ADAPT))
+    assert set(out) == {Scheme.HOUR, Scheme.ADAPT}
+    for scheme in out:
+        assert len(out[scheme]) == len(bids)
+        for bid, res in zip(bids, out[scheme]):
+            pdf = FailurePdf.from_trace(tr, bid) if scheme == Scheme.ADAPT else None
+            direct = simulate(tr, scheme, 10 * 3600.0, bid, SimParams(), pdf)
+            assert res == direct  # full SimResult equality, run lists included
+
+
+def test_run_auto_engine_matches_sweep_bids_fields():
+    tr = synthetic_trace(IT, 30, seed=5)
+    bids = [0.36, 0.37]
+    sc = Scenario.from_trace(tr, 10 * 3600.0, bids, schemes=(Scheme.HOUR,))
+    res = run(sc)  # auto -> batch
+    assert res.engine == "batch"
+    with pytest.warns(DeprecationWarning):
+        legacy = sweep_bids(tr, 10 * 3600.0, bids, schemes=(Scheme.HOUR,))
+    for b, r in enumerate(legacy[Scheme.HOUR]):
+        assert res.cost[0, b, 0] == r.cost
+        assert res.completion_time[0, b, 0] == r.completion_time
+        assert res.n_kills[0, b, 0] == r.n_kills
+        assert res.n_checkpoints[0, b, 0] == r.n_checkpoints
+
+
+def _tiny_cfg():
+    return SweepConfig(
+        n_jobs=6,
+        mean_interarrival_s=0.5 * HOUR,
+        mean_work_h=2.0,
+        horizon_days=4.0,
+        n_types=4,
+        seeds=(0,),
+        bid_margins=(0.56,),
+        sla=SLA(min_compute_units=4.0, os="linux"),
+        n_replicas=2,
+    )
+
+
+def test_run_sweep_emits_deprecation_and_matches_run_fleet():
+    cfg = _tiny_cfg()
+    with pytest.warns(DeprecationWarning):
+        cells, results = run_sweep(cfg)
+    grid = run_fleet(FleetScenario.from_sweep_config(cfg))
+    assert len(cells) == len(grid.cells)
+    by_key = {(c.policy, c.bid_margin, c.seed): c for c in grid.cells}
+    for c in cells:
+        g = by_key[(c.policy, c.bid_margin, c.seed)]
+        assert c.total_cost == pytest.approx(g.total_cost)
+        assert c.n_kills == g.n_kills
+        assert c.n_migrations == g.n_migrations
+        assert c.n_completed == g.n_completed
+    assert set(results) == set(grid.results)
+
+
+def test_run_fleet_result_summary():
+    grid = run_fleet(FleetScenario.from_sweep_config(_tiny_cfg(), policies=("cost_greedy",)))
+    assert grid.scenario.policies == ("cost_greedy",)
+    text = grid.summary()
+    assert "cost_greedy" in text
+    assert all(c.policy == "cost_greedy" for c in grid.cells)
+    assert all(math.isfinite(c.total_cost) for c in grid.cells)

@@ -1,0 +1,167 @@
+"""Reference ↔ batch engine parity: the redesign's correctness anchor.
+
+The two backends share no simulation code (scalar event walk vs SoA lockstep
+arrays), so exact agreement on every cell is strong evidence both are right.
+Equality here is ``==`` on floats, not approx — the batch kernels mirror the
+scalar float expressions by construction.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Scheme, SimParams, get_instance, simulate, step_trace, synthetic_trace
+from repro.engine import (
+    BID_LIMITED_SCHEMES,
+    BatchEngine,
+    ReferenceEngine,
+    Scenario,
+    assert_parity,
+    compare_engines,
+)
+
+IT = get_instance("m1.xlarge")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("work_h", [5.0, 40.0, 200.0])
+def test_parity_synthetic_trace(seed, work_h):
+    tr = synthetic_trace(IT, 30, seed=seed)
+    sc = Scenario.from_trace(
+        tr,
+        work_h * 3600.0,
+        bids=[0.36 + 0.001 * i for i in range(11)],
+        schemes=BID_LIMITED_SCHEMES,
+    )
+    assert_parity(sc)
+
+
+def test_parity_extreme_bids_and_resume():
+    """Never-available, always-available, and mid-job resume cells."""
+    tr = synthetic_trace(IT, 30, seed=7)
+    sc = Scenario.from_trace(
+        tr,
+        30 * 3600.0,
+        bids=[0.01, 0.30, 0.345, 0.36, 0.40, 5.0],
+        schemes=BID_LIMITED_SCHEMES,
+        initial_saved_work=10 * 3600.0,
+        params=SimParams(t_c=450.0, t_r=900.0),
+    )
+    assert_parity(sc)
+
+
+def test_parity_generated_grid_with_fractional_bids():
+    """(type x seed x bid x scheme) grid, bids scaled per type's on-demand."""
+    from repro.core import catalog
+
+    types = [it for it in catalog() if it.os == "linux"][:6]
+    sc = Scenario.grid(
+        work_s=24 * 3600.0,
+        bids=[round(0.50 + 0.02 * i, 3) for i in range(6)],
+        instances=types,
+        schemes=BID_LIMITED_SCHEMES,
+        horizon_days=20.0,
+        seeds=(0, 1),
+        bid_fractions=True,
+    )
+    report = assert_parity(sc)
+    assert report.reference.shape == (12, 6, 4)
+
+
+def test_parity_random_step_traces():
+    """Deterministic mini-fuzz: random step traces, params and work sizes."""
+    rng = np.random.default_rng(123)
+    for trial in range(25):
+        n_seg = int(rng.integers(1, 40))
+        t = np.sort(rng.uniform(0, 20 * 24 * 3600.0, n_seg - 1)) if n_seg > 1 else np.array([])
+        starts = np.concatenate([[0.0], t])
+        prices = np.round(rng.uniform(0.05, 1.2, n_seg), 3)
+        tr = step_trace(list(zip(starts, prices)), horizon_s=20 * 24 * 3600.0)
+        work = float(rng.uniform(600.0, 100 * 3600.0))
+        bids = sorted(set(round(float(x), 3) for x in rng.uniform(0.0, 1.3, 5)))
+        bp = float(rng.choice([3600.0, 1800.0, 600.0]))
+        params = SimParams(
+            t_c=float(rng.uniform(0.0, 0.15) * bp),
+            t_r=float(rng.uniform(0.0, 2400.0)),
+            billing_period_s=bp,
+        )
+        init = float(rng.uniform(0, work)) if trial % 3 == 0 else 0.0
+        sc = Scenario.from_trace(
+            tr, work, bids, schemes=BID_LIMITED_SCHEMES, params=params, initial_saved_work=init
+        )
+        assert_parity(sc)
+
+
+def test_parity_all_schemes_via_fallback():
+    """ADAPT/ACC cells fall back to the scalar path inside BatchEngine, so a
+    full-scheme scenario still agrees cell-for-cell."""
+    tr = synthetic_trace(IT, 20, seed=1)
+    sc = Scenario.from_trace(tr, 30 * 3600.0, [0.36, 0.37, 0.38], schemes=tuple(Scheme))
+    assert_parity(sc)
+
+
+def test_mismatch_is_reported_with_cell_detail():
+    tr = synthetic_trace(IT, 20, seed=0)
+    sc = Scenario.from_trace(tr, 10 * 3600.0, [0.36, 0.37], schemes=(Scheme.HOUR,))
+    report = compare_engines(sc)
+    assert report.ok
+    # corrupt one batch cell and check the report pinpoints it
+    report.batch.cost[0, 1, 0] += 1.0
+    from repro.engine.parity import ParityReport, COMPARED, CellMismatch
+
+    mismatches = []
+    for field in COMPARED:
+        r, b = getattr(report.reference, field), getattr(report.batch, field)
+        for m, bi, si in zip(*np.nonzero(~(r == b))):
+            mismatches.append(
+                CellMismatch(field, "t", 0, report.reference.bids[bi],
+                             report.reference.schemes[si].value, r[m, bi, si], b[m, bi, si])
+            )
+    bad = ParityReport(sc, report.reference, report.batch, mismatches)
+    assert not bad.ok
+    assert "bid=0.370" in str(bad)
+
+
+def test_reference_matches_direct_simulate():
+    """The reference engine is literally the scalar loop: cells equal
+    simulate() calls field by field, including run lists."""
+    tr = synthetic_trace(IT, 30, seed=2)
+    bids = [0.36, 0.38]
+    sc = Scenario.from_trace(tr, 20 * 3600.0, bids, schemes=(Scheme.HOUR, Scheme.NONE))
+    res = ReferenceEngine(keep_runs=True).run(sc)
+    for b, bid in enumerate(bids):
+        for s, scheme in enumerate(sc.schemes):
+            direct = simulate(tr, scheme, 20 * 3600.0, bid, sc.params)
+            assert res.cell(0, b, s) == direct
+
+
+def test_parity_on_jax_substrate(monkeypatch):
+    """With REPRO_ENGINE_XP=jax the stateless kernels run on jax.numpy (x64);
+    single elementwise float64 ops are IEEE-exact on CPU, so parity must
+    still be bitwise."""
+    pytest.importorskip("jax")
+    monkeypatch.setenv("REPRO_ENGINE_XP", "jax")
+    tr = synthetic_trace(IT, 20, seed=3)
+    sc = Scenario.from_trace(
+        tr, 40 * 3600.0, bids=[0.355 + 0.005 * i for i in range(4)], schemes=BID_LIMITED_SCHEMES
+    )
+    assert_parity(sc)
+
+
+def test_batch_cells_per_s_exceeds_reference():
+    """Not the CI perf gate (that's benchmarks/engine_bench.py) — just a
+    sanity check that the SoA path is actually faster on a real grid."""
+    from repro.core import catalog
+
+    types = [it for it in catalog() if it.os == "linux"][:8]
+    sc = Scenario.grid(
+        work_s=24 * 3600.0,
+        bids=[round(0.50 + 0.02 * i, 3) for i in range(6)],
+        instances=types,
+        schemes=BID_LIMITED_SCHEMES,
+        horizon_days=15.0,
+        seeds=(0, 1),
+        bid_fractions=True,
+    )
+    ref = ReferenceEngine(keep_runs=False).run(sc)
+    bat = BatchEngine().run(sc)
+    assert bat.wall_s < ref.wall_s

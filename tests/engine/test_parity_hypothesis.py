@@ -1,0 +1,65 @@
+"""Property-based reference ↔ batch parity (hypothesis).
+
+Draws random synthetic step traces, bid grids and work sizes and asserts the
+batch backend reproduces the scalar reference exactly — cost,
+completion_time, n_kills and n_checkpoints — for every bid-limited scheme,
+as the ISSUE's acceptance criteria require.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HOUR, SimParams, step_trace
+from repro.engine import BID_LIMITED_SCHEMES, Scenario, assert_parity
+
+
+@st.composite
+def traces(draw):
+    """Random piecewise-constant traces on the $0.001 grid."""
+    n = draw(st.integers(min_value=1, max_value=30))
+    prices = [draw(st.integers(min_value=1, max_value=1200)) / 1000.0 for _ in range(n)]
+    gaps = [draw(st.integers(min_value=60, max_value=8 * 3600)) for _ in range(n - 1)]
+    starts = [0.0]
+    for g in gaps:
+        starts.append(starts[-1] + g)
+    horizon = starts[-1] + draw(st.integers(min_value=10, max_value=300)) * HOUR
+    return step_trace(list(zip(starts, prices)), horizon_s=horizon)
+
+
+@st.composite
+def bid_grids(draw):
+    n = draw(st.integers(min_value=1, max_value=6))
+    return sorted({draw(st.integers(min_value=0, max_value=1300)) / 1000.0 for _ in range(n)})
+
+
+works = st.integers(min_value=600, max_value=120 * 3600).map(float)
+t_cs = st.integers(min_value=0, max_value=500).map(float)
+t_rs = st.integers(min_value=0, max_value=2400).map(float)
+
+
+@given(traces(), bid_grids(), works, t_cs, t_rs)
+@settings(max_examples=40, deadline=None)
+def test_batch_equals_reference_on_random_scenarios(trace, bids, work, t_c, t_r):
+    sc = Scenario.from_trace(
+        trace,
+        work,
+        bids,
+        schemes=BID_LIMITED_SCHEMES,
+        params=SimParams(t_c=t_c, t_r=t_r),
+    )
+    assert_parity(sc)
+
+
+@given(traces(), bid_grids(), works)
+@settings(max_examples=15, deadline=None)
+def test_parity_with_resume(trace, bids, work):
+    sc = Scenario.from_trace(
+        trace,
+        work,
+        bids,
+        schemes=BID_LIMITED_SCHEMES,
+        initial_saved_work=work / 3.0,
+    )
+    assert_parity(sc)

@@ -1,0 +1,123 @@
+"""Scenario / FleetScenario: validation, materialization, bid scaling."""
+
+import numpy as np
+import pytest
+
+from repro.core import SLA, Scheme, SimParams, catalog, get_instance, synthetic_trace
+from repro.engine import FleetScenario, Scenario, get_engine, policy_registry, resolve_policies
+
+IT = get_instance("m1.xlarge")
+
+
+def test_requires_exactly_one_market_source():
+    tr = synthetic_trace(IT, 5, seed=0)
+    with pytest.raises(ValueError):
+        Scenario(work_s=3600.0, bids=(0.4,))  # neither
+    with pytest.raises(ValueError):
+        Scenario(work_s=3600.0, bids=(0.4,), traces=(tr,), instances=(IT,))  # both
+
+
+def test_validation_errors():
+    tr = synthetic_trace(IT, 5, seed=0)
+    with pytest.raises(ValueError):
+        Scenario(work_s=-1.0, bids=(0.4,), traces=(tr,))
+    with pytest.raises(ValueError):
+        Scenario(work_s=3600.0, bids=(), traces=(tr,))
+    with pytest.raises(ValueError):
+        Scenario(work_s=3600.0, bids=(0.4,), schemes=(), traces=(tr,))
+    with pytest.raises(ValueError):
+        Scenario(work_s=3600.0, bids=(0.4,), traces=(tr,), initial_saved_work=7200.0)
+    with pytest.raises(ValueError):
+        # fractional bids need on-demand prices, i.e. a generated market
+        Scenario(work_s=3600.0, bids=(0.5,), traces=(tr,), bid_fractions=True)
+
+
+def test_materialize_explicit_traces():
+    tr1 = synthetic_trace(IT, 5, seed=0)
+    tr2 = synthetic_trace(IT, 5, seed=1)
+    sc = Scenario(work_s=3600.0, bids=(0.4,), traces=(tr1, tr2), labels=("a", "b"))
+    cells = sc.materialize()
+    assert [c.label for c in cells] == ["a", "b"]
+    assert cells[0].trace is tr1 and cells[1].trace is tr2
+    assert sc.n_markets == 2 and sc.n_cells == 2 * 1 * len(sc.schemes)
+
+
+def test_materialize_generated_market_is_deterministic():
+    types = [it for it in catalog() if it.os == "linux"][:3]
+    sc = Scenario.grid(work_s=3600.0, bids=(0.4,), instances=types, seeds=(0, 1), horizon_days=3.0)
+    cells1 = sc.materialize()
+    cells2 = sc.materialize()
+    assert len(cells1) == 6  # 3 types x 2 seeds
+    for c1, c2 in zip(cells1, cells2):
+        assert c1.label == c2.label and c1.seed == c2.seed
+        np.testing.assert_array_equal(c1.trace.prices, c2.trace.prices)
+        np.testing.assert_array_equal(c1.trace.times, c2.trace.times)
+
+
+def test_materialize_cell_matches_full_grid():
+    types = [it for it in catalog() if it.os == "linux"][:3]
+    sc = Scenario.grid(work_s=3600.0, bids=(0.4,), instances=types, seeds=(0, 1), horizon_days=3.0)
+    full = sc.materialize()
+    for m in range(len(full)):
+        single = sc.materialize_cell(m)
+        assert single.label == full[m].label and single.seed == full[m].seed
+        assert single.on_demand == full[m].on_demand
+        np.testing.assert_array_equal(single.trace.prices, full[m].trace.prices)
+        np.testing.assert_array_equal(single.trace.times, full[m].trace.times)
+    tr = synthetic_trace(IT, 5, seed=0)
+    sc2 = Scenario(work_s=3600.0, bids=(0.4,), traces=(tr,), labels=("x",))
+    assert sc2.materialize_cell(0).trace is tr
+
+
+def test_grid_applies_sla_filter():
+    sla = SLA(min_compute_units=8.0, os="linux")
+    sc = Scenario.grid(work_s=3600.0, bids=(0.4,), sla=sla, horizon_days=2.0)
+    assert all(it.compute_units >= 8.0 and it.os == "linux" for it in sc.instances)
+    with pytest.raises(ValueError):
+        Scenario.grid(work_s=3600.0, bids=(0.4,), sla=SLA(min_compute_units=1e9))
+
+
+def test_market_bids_fractional_scaling():
+    types = [it for it in catalog() if it.os == "linux"][:2]
+    sc = Scenario.grid(
+        work_s=3600.0, bids=(0.5, 0.6), instances=types, bid_fractions=True, horizon_days=2.0
+    )
+    for cellm in sc.materialize():
+        bids = sc.market_bids(cellm)
+        assert bids == tuple(round(f * cellm.on_demand, 3) for f in (0.5, 0.6))
+    # absolute bids pass through untouched
+    sc2 = Scenario.grid(work_s=3600.0, bids=(0.5, 0.6), instances=types, horizon_days=2.0)
+    assert sc2.market_bids(sc2.materialize()[0]) == (0.5, 0.6)
+
+
+def test_get_engine_names():
+    assert get_engine("reference").name == "reference"
+    assert get_engine("batch").name == "batch"
+    assert get_engine("auto").name == "batch"
+    with pytest.raises(ValueError):
+        get_engine("quantum")
+
+
+def test_fleet_scenario_defaults_and_policies():
+    fs = FleetScenario(n_jobs=5, seeds=(0,))
+    policies = resolve_policies(fs)
+    assert [p.name for p in policies] == ["algorithm1", "cost_greedy", "eet_greedy", "diversified2"]
+    with pytest.raises(KeyError):
+        resolve_policies(FleetScenario(policies=("nope",)))
+    assert "diversified2" in policy_registry(2)
+
+
+def test_fleet_scenario_from_sweep_config():
+    from repro.fleet import SweepConfig
+
+    cfg = SweepConfig(n_jobs=7, seeds=(3,), bid_margins=(0.5, 0.6), scheme=Scheme.EDGE)
+    fs = FleetScenario.from_sweep_config(cfg)
+    assert fs.n_jobs == 7 and fs.seeds == (3,) and fs.bid_margins == (0.5, 0.6)
+    assert fs.scheme == Scheme.EDGE
+
+
+def test_params_flow_through():
+    tr = synthetic_trace(IT, 5, seed=0)
+    p = SimParams(t_c=120.0)
+    sc = Scenario.from_trace(tr, 3600.0, [0.4], params=p)
+    assert sc.params.t_c == 120.0

@@ -225,7 +225,20 @@ def test_migration_disabled_strands_killed_jobs():
     assert all(o.n_kills == 1 for o in res.outcomes.values())
 
 
-def test_acc_scheme_rejected():
+def test_acc_fleet_migrates_on_self_termination():
+    """ACC in the fleet: the c1.xlarge spike makes the terminate-decision
+    price exceed A_bid, so the replica self-terminates at the hour boundary
+    and the migration engine re-homes it — no provider kill ever happens."""
     cat, traces, histories = _two_region_setup()
-    with pytest.raises(ValueError):
-        FleetController(cat, traces, Algorithm1Policy(), histories=histories, scheme=Scheme.ACC)
+    ctrl = FleetController(cat, traces, Algorithm1Policy(), histories=histories, scheme=Scheme.ACC)
+    res = ctrl.run(_workload())
+    _check_invariants(res, traces)
+    assert res.n_completed == len(res.outcomes)
+    assert res.n_kills == 0  # ACC is never provider-killed
+    assert res.n_self_terminations > 0
+    assert res.n_migrations > 0
+    for r in res.records:
+        if r.self_terminated:
+            # user termination: the final partial hour is billed in full
+            assert r.termination == Termination.USER
+            assert not r.killed and not r.completed

@@ -1,0 +1,68 @@
+"""Regression: ADAPT failure pdfs are built once per (type, bid), not once
+per migration attempt.
+
+When a type has no price *history*, the controller must fall back to a pdf
+built from the evaluation trace — and cache it, mirroring the pdf cache the
+placement context keeps for histories.  Without the cache every re-provision
+of the same (type, bid) recomputed ``FailurePdf.from_trace`` inside
+``simulate_attempt``.
+"""
+
+from repro.core import HOUR, SLA, Scheme, get_instance, step_trace
+from repro.core.schemes import FailurePdf
+from repro.fleet import CostGreedyPolicy, FleetController, Workload
+
+HORIZON = 10 * 24 * HOUR
+
+
+def _bouncing_market():
+    """Two types whose alternating spikes bounce a job back and forth, so the
+    same (type, bid) pairs are re-provisioned many times."""
+    a = get_instance("m1.xlarge", "us-east-1")
+    b = get_instance("m1.xlarge", "eu-west-1")
+    spikes_a = [(0.0, 0.30)]
+    spikes_b = [(0.0, 0.30)]
+    for h in range(2, 200, 4):
+        spikes_a += [(h * HOUR, 1.5), ((h + 1) * HOUR, 0.30)]
+        spikes_b += [((h + 2) * HOUR, 1.5), ((h + 3) * HOUR, 0.30)]
+    traces = {
+        a.name: step_trace(spikes_a, horizon_s=HORIZON),
+        b.name: step_trace(spikes_b, horizon_s=HORIZON),
+    }
+    return [a, b], traces
+
+
+def test_adapt_pdf_built_once_per_type_bid(monkeypatch):
+    cat, traces = _bouncing_market()
+    calls: list[tuple[float, float]] = []
+    real = FailurePdf.from_trace
+
+    def counting(trace, bid, *args, **kwargs):
+        calls.append((float(trace.horizon), float(bid)))
+        return real(trace, bid, *args, **kwargs)
+
+    monkeypatch.setattr(FailurePdf, "from_trace", staticmethod(counting))
+
+    # empty histories: the context pdf cache can't serve, forcing the
+    # controller's evaluation-trace fallback cache
+    ctrl = FleetController(cat, traces, CostGreedyPolicy(), histories={}, scheme=Scheme.ADAPT)
+    workload = Workload.batch(2, 30 * HOUR, sla=SLA(min_compute_units=8.0, os="linux"))
+    res = ctrl.run(workload)
+
+    # jobs really did bounce between the two types repeatedly...
+    assert res.n_migrations >= 4
+    # ...yet each (type, bid) pdf was built at most once
+    assert len(calls) == len(set(calls))
+    assert len(calls) <= 2 * 1  # two types, one bid each (cost-greedy margin)
+
+
+def test_history_pdfs_still_preferred(monkeypatch):
+    """With histories present, the context cache serves ADAPT pdfs and the
+    evaluation-trace fallback is never consulted."""
+    cat, traces = _bouncing_market()
+    histories = {name: step_trace([(0.0, 0.30)], horizon_s=HORIZON) for name in traces}
+    ctrl = FleetController(cat, traces, CostGreedyPolicy(), histories=histories, scheme=Scheme.ADAPT)
+    workload = Workload.batch(1, 10 * HOUR, sla=SLA(min_compute_units=8.0, os="linux"))
+    ctrl.run(workload)
+    assert not ctrl._eval_pdf_cache  # fallback never used
+    assert ctrl.ctx._pdf_cache  # history cache did the work

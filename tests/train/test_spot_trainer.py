@@ -129,3 +129,34 @@ def test_model_size_aware_t_c(tmp_path):
     cfg_q = dataclasses.replace(trainer.cfg, codec="int8")
     trainer.cfg = cfg_q
     assert trainer._virtual_t_c(params, opt) < bytes_ / 2e9 / 2
+
+
+def test_from_scenario_plumbing(tmp_path):
+    """SpotTrainer.from_scenario: the scenario supplies market, A_bid and
+    SimParams; config overrides pass through.  Construction only — no
+    training step is run, so this works without a functional accelerator."""
+    from repro.core import get_instance
+    from repro.engine import Scenario
+
+    it = get_instance("m1.xlarge")
+    sc = Scenario.grid(
+        work_s=3600.0,
+        bids=(0.5, 0.6),
+        instances=(it,),
+        horizon_days=2.0,
+        bid_fractions=True,
+        params=SimParams(t_c=120.0),
+    )
+    trainer = SpotTrainer.from_scenario(
+        sc,
+        ckpt_dir=str(tmp_path),
+        train_step=lambda *a: None,
+        init_params=lambda: (None, None),
+        data=None,
+        bid_index=1,
+        max_steps=5,
+    )
+    assert trainer.cfg.a_bid == round(0.6 * it.on_demand, 3)
+    assert trainer.cfg.sim.t_c == 120.0
+    assert trainer.cfg.max_steps == 5
+    assert trainer.trace.horizon == sc.materialize()[0].trace.horizon
