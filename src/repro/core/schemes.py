@@ -70,14 +70,24 @@ class FailurePdf:
     bid) lasts between ``k`` and ``k+1`` bins of ``bin_s`` seconds.  A period
     that survives to the trace horizon is censored and counted in the tail
     mass ``censored``.
+
+    Survival queries go through a lazily-built *binned survival table*
+    (:meth:`survival_table`), the shared numeric source for the scalar ADAPT
+    loop, the provisioning math, and the batched ADAPT kernel
+    (:mod:`repro.engine.kernels`) — one table, so the per-step "checkpoint
+    now?" decision is the same bit pattern on every backend.
     """
+
+    #: default binning of :meth:`from_trace` (one minute bins, a 7-day range)
+    DEFAULT_BIN_S = 60.0
+    DEFAULT_MAX_BINS = 7 * 24 * 60
 
     bin_s: float
     pdf: np.ndarray  # (K,)
     censored: float  # mass of periods that never failed in-history
 
     @staticmethod
-    def from_trace(trace: PriceTrace, bid: float, bin_s: float = 60.0, max_bins: int = 7 * 24 * 60) -> "FailurePdf":
+    def from_trace(trace: PriceTrace, bid: float, bin_s: float = DEFAULT_BIN_S, max_bins: int = DEFAULT_MAX_BINS) -> "FailurePdf":
         periods = trace.available_periods(bid)
         durations = []
         censored_n = 0
@@ -95,12 +105,45 @@ class FailurePdf:
             pdf[k] += 1.0 / n
         return FailurePdf(bin_s=bin_s, pdf=pdf, censored=censored_n / n)
 
+    def survival_table(self) -> np.ndarray:
+        """``(K+1,)`` binned survival values: entry ``k < K`` is
+        P(period outlives ``k`` full bins) = ``1 - cumsum(pdf)[k-1]``
+        (``1.0`` at ``k=0``); entry ``K`` is the censored tail mass.
+
+        Built once per pdf and cached — every :meth:`survival` query (and the
+        batched ADAPT decision table derived from it) reads these exact
+        floats, so scalar and lockstep hazard decisions can never diverge.
+        """
+        tab = getattr(self, "_survival_table", None)
+        if tab is None:
+            K = len(self.pdf)
+            tab = np.empty(K + 1)
+            tab[0] = 1.0
+            tab[1:K] = 1.0 - np.cumsum(self.pdf)[: K - 1]
+            tab[K] = self.censored
+            object.__setattr__(self, "_survival_table", tab)  # frozen-safe cache
+        return tab
+
+    def compact_survival(self) -> tuple[np.ndarray, int]:
+        """``(values, top)`` — the survival table with its constant plateau
+        folded away.  ``values[k]`` for ``k <= top`` are the leading survival
+        entries, ``values[top + 1]`` is the censored tail; ages binned past
+        ``top`` (but below ``len(pdf)``) read the plateau value ``values[top]``
+        because the cumulative sum is bitwise constant once the pdf runs out
+        of mass.  This is what the batch/jax ADAPT kernels pack per (market,
+        bid) cell — a 7-day pdf compresses from 10081 entries to the observed
+        failure range.
+        """
+        tab = self.survival_table()
+        K = len(self.pdf)
+        nz = np.nonzero(self.pdf)[0]
+        top = int(min(nz[-1] + 1 if nz.size else 0, K - 1))
+        return np.concatenate([tab[: top + 1], [self.censored]]), top
+
     def survival(self, age_s: float) -> float:
         """P(period lasts longer than ``age_s``)."""
         k = int(age_s / self.bin_s)
-        if k >= len(self.pdf):
-            return self.censored
-        return float(1.0 - np.sum(self.pdf[:k])) if k > 0 else 1.0
+        return float(self.survival_table()[min(k, len(self.pdf))])
 
     def hazard(self, age_s: float, window_s: float) -> float:
         """P(fail within ``window_s`` | survived to ``age_s``)."""

@@ -9,9 +9,13 @@ interchangeable engine backend:
   * :class:`ReferenceEngine` — the scalar event loop, cell by cell;
     semantically canonical.
   * :class:`BatchEngine` — structure-of-arrays NumPy lockstep over the
-    whole (type × bid × seed) grid for the bid-limited schemes, bit-identical
-    to the reference (see :mod:`repro.engine.parity`); falls back to the
-    scalar path for ADAPT/ACC cells.
+    whole (type × bid × seed) grid for every bid-limited scheme — ADAPT
+    included, its hazard decision precomputed into binned survival tables —
+    bit-identical to the reference (see :mod:`repro.engine.parity`); only
+    ACC cells fall back to the scalar path.
+  * :class:`JaxEngine` — the same pure kernels (:mod:`repro.engine.kernels`)
+    jit-compiled under ``lax.scan`` on ``jax.numpy`` with x64; explicit
+    opt-in via ``engine="jax"``, same exact-parity contract.
   * :func:`run` / :func:`run_fleet` — the one-call entry points.
 
 Legacy surfaces (``repro.core.simulator.sweep_bids``,
@@ -28,6 +32,7 @@ from repro.engine.base import (
 )
 from repro.engine.batch import BatchEngine
 from repro.engine.fleetgrid import FleetGridResult, policy_registry, resolve_policies, run_fleet
+from repro.engine.jax_backend import JaxEngine, have_jax
 from repro.engine.parity import (
     CellMismatch,
     ParityReport,
@@ -36,6 +41,7 @@ from repro.engine.parity import (
 )
 from repro.engine.reference import ReferenceEngine
 from repro.engine.scenario import (
+    BATCHED_SCHEMES,
     BID_LIMITED_SCHEMES,
     FleetScenario,
     MarketCell,
@@ -43,9 +49,12 @@ from repro.engine.scenario import (
 )
 
 __all__ = [
+    "BATCHED_SCHEMES",
     "BID_LIMITED_SCHEMES",
     "PARITY_FIELDS",
     "BatchEngine",
+    "JaxEngine",
+    "have_jax",
     "CellMismatch",
     "Engine",
     "EngineResult",

@@ -6,13 +6,17 @@ returns an :class:`EngineResult` — per-cell outcome arrays shaped
 
   * :class:`~repro.engine.reference.ReferenceEngine` — wraps the scalar
     event loop of :func:`repro.core.simulator.simulate`; the semantic anchor.
-  * :class:`~repro.engine.batch.BatchEngine` — lowers the bid-limited
-    schemes onto lockstep NumPy ops; bit-identical to the reference on
-    ``cost`` / ``completion_time`` / ``n_kills`` / ``n_checkpoints``
-    (enforced by :mod:`repro.engine.parity` and the CI benchmark gate).
+  * :class:`~repro.engine.batch.BatchEngine` — lowers every bid-limited
+    scheme (ADAPT included, via binned hazard tables) onto lockstep NumPy
+    ops; bit-identical to the reference on ``cost`` / ``completion_time`` /
+    ``n_kills`` / ``n_checkpoints`` (enforced by :mod:`repro.engine.parity`
+    and the CI benchmark gate).
+  * :class:`~repro.engine.jax_backend.JaxEngine` — the same kernels jitted
+    under ``lax.scan`` on ``jax.numpy`` with x64; explicit opt-in
+    (``engine="jax"``), same parity contract.
 
 ``run(scenario)`` is the one-call surface; ``engine="auto"`` picks the batch
-backend (which itself falls back to the reference for ADAPT/ACC cells).
+backend (which itself falls back to the reference for ACC cells only).
 """
 
 from __future__ import annotations
@@ -140,9 +144,14 @@ class Engine(Protocol):
 
 
 def get_engine(name: str = "auto") -> Engine:
-    """Resolve an engine by name: ``"reference"``, ``"batch"``, or ``"auto"``
-    (currently the batch backend, which is parity-checked against the
-    reference and falls back to it per-cell for ADAPT/ACC)."""
+    """Resolve an engine by name: ``"reference"``, ``"batch"``, ``"jax"``, or
+    ``"auto"`` (currently the batch backend, which is parity-checked against
+    the reference and falls back to it per-cell for ACC only).
+
+    Backend choice is explicit: ``"jax"`` raises :class:`ImportError` with an
+    install hint when jax is missing rather than silently running on NumPy
+    (the old ``REPRO_ENGINE_XP`` env hack is gone).
+    """
     from repro.engine.batch import BatchEngine
     from repro.engine.reference import ReferenceEngine
 
@@ -150,7 +159,11 @@ def get_engine(name: str = "auto") -> Engine:
         return BatchEngine()
     if name == "reference":
         return ReferenceEngine()
-    raise ValueError(f"unknown engine {name!r}; expected auto|batch|reference")
+    if name == "jax":
+        from repro.engine.jax_backend import JaxEngine
+
+        return JaxEngine()
+    raise ValueError(f"unknown engine {name!r}; expected auto|batch|reference|jax")
 
 
 def run(scenario: Scenario, engine: str | Engine = "auto") -> EngineResult:

@@ -1,94 +1,98 @@
 """Batch backend: structure-of-arrays lockstep evaluation of a Scenario.
 
-Lowers the bid-limited schemes (NONE / OPT / HOUR / EDGE) onto NumPy ops over
-the flattened ``(market, bid)`` cell axis: availability periods are padded
-into ``(cells, periods)`` arrays, and the engine walks *period index* (outer)
-and *checkpoint-window index* (inner) sequentially while every cell of the
-grid advances in lockstep.  Nested Python loops over cells disappear; what
-remains is O(max periods × max windows) vector steps over the whole grid.
+Lowers every bid-limited scheme (NONE / OPT / HOUR / EDGE / ADAPT) onto NumPy
+ops over the flattened ``(market, bid)`` cell axis: availability periods are
+padded into ``(cells, periods)`` arrays, and the engine walks *period index*
+(outer) and *checkpoint-window / decision-tick index* (inner) sequentially
+while every cell of the grid advances in lockstep.  Nested Python loops over
+cells disappear; what remains is O(max periods × max windows) vector steps
+over the whole grid.
 
-Exactness is the design contract, not an aspiration: every floating-point
-expression below mirrors the scalar reference (`repro.core.simulator`) in
-both formula *and association order* — ``work + (s - t)``, ``t + (work_s -
-work)``, hour prices accumulated in hour order — so IEEE-754 evaluation is
-bit-identical and :mod:`repro.engine.parity` can assert ``==`` rather than
-``allclose``.  When editing, change the scalar engine first, then mirror.
+The per-scheme math lives in :mod:`repro.engine.kernels` as pure functions
+that take their array namespace as an argument; this module owns the NumPy
+driver — the period grid, the compressed active-cell bookkeeping, and the
+vectorized billing.  ADAPT's per-step hazard decision is precomputed into
+binned survival tables per (market, bid) cell (:class:`AdaptTables`), so it
+advances in lockstep like the other schemes instead of falling back to the
+scalar loop.  Only ACC — a different control loop entirely (bid-unlimited
+leases, poll-driven relaunch) — still runs on the per-cell scalar path shared
+with :class:`~repro.engine.reference.ReferenceEngine`.
 
-ADAPT makes per-step hazard decisions and ACC is a different control loop;
-cells of those schemes fall back to the scalar reference per cell (with the
-same per-(market, bid) pdf cache the reference uses).
-
-JAX: the stateless per-period kernels (NONE/OPT) dispatch through the
-configured array substrate — set ``REPRO_ENGINE_XP=jax`` to run them on
-``jax.numpy`` with x64 enabled (single elementwise float64 ops are IEEE-exact
-on CPU, so parity holds there too); the window walks and billing scatters are
-NumPy-side bookkeeping either way.
+Exactness is the design contract, not an aspiration (see
+:mod:`repro.engine.kernels` and :mod:`repro.engine.parity`): parity with the
+scalar reference is asserted ``==``, not ``allclose``.
 """
 
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
 
 from repro.core.schemes import Scheme
 from repro.engine.base import EngineResult, empty_result
-from repro.engine.scenario import BID_LIMITED_SCHEMES, MarketCell, Scenario
+from repro.engine.kernels import (
+    _EPS,
+    AdaptTables,
+    _kernel_none,
+    _kernel_opt,
+    _kernel_windows,
+)
+from repro.engine.scenario import BATCHED_SCHEMES, MarketCell, Scenario
 
-_EPS = 1e-9  # must equal repro.core.simulator._EPS
 
+def run_batched(scenario: Scenario, engine_name: str, run_scheme) -> EngineResult:
+    """Shared driver for the array backends (batch and jax).
 
-def _xp():
-    """Array substrate: NumPy, or jax.numpy when REPRO_ENGINE_XP=jax."""
-    if os.environ.get("REPRO_ENGINE_XP") == "jax":
-        try:
-            import jax
-            import jax.numpy as jnp
+    Materializes the market, splits schemes into the batched set and the
+    scalar fallback (ACC only), builds the period grid + ADAPT decision
+    tables once, dispatches each batched scheme to ``run_scheme(scheme, grid,
+    scenario, adapt_tables)``, and scalar-fills the rest — so the two
+    backends can never drift in their orchestration, only in their kernels.
+    """
+    markets = scenario.materialize()
+    t0 = time.perf_counter()  # wall_s measures simulation, not trace gen
+    res = empty_result(scenario, markets, engine_name)
 
-            jax.config.update("jax_enable_x64", True)
-            return jnp
-        except Exception:  # pragma: no cover - jax missing/broken
-            return np
-    return np
+    batched = [s for s in scenario.schemes if s in BATCHED_SCHEMES]
+    fallback = [s for s in scenario.schemes if s not in BATCHED_SCHEMES]
+
+    if batched:
+        grid = _PeriodGrid.build(markets, scenario)
+        adapt_tables = (
+            AdaptTables.build(markets, scenario, grid) if Scheme.ADAPT in batched else None
+        )
+        for scheme in batched:
+            out = run_scheme(scheme, grid, scenario, adapt_tables)
+            s = scenario.schemes.index(scheme)
+            M, B = len(markets), len(scenario.bids)
+            res.completed[:, :, s] = out["completed"].reshape(M, B)
+            res.completion_time[:, :, s] = out["completion_time"].reshape(M, B)
+            res.cost[:, :, s] = out["cost"].reshape(M, B)
+            res.n_checkpoints[:, :, s] = out["n_checkpoints"].reshape(M, B)
+            res.n_kills[:, :, s] = out["n_kills"].reshape(M, B)
+            res.work_lost_s[:, :, s] = out["work_lost_s"].reshape(M, B)
+
+    if fallback:
+        # ACC is a different control loop (bid-unlimited leases): run it
+        # on the scalar path shared with ReferenceEngine, never drifting
+        from repro.engine.reference import scalar_fill
+
+        scalar_fill(scenario, markets, res, fallback)
+
+    res.wall_s = time.perf_counter() - t0
+    return res
 
 
 class BatchEngine:
     """Vectorized evaluation; bit-identical to :class:`ReferenceEngine` on
-    cost / completion_time / n_kills / n_checkpoints for NONE/OPT/HOUR/EDGE."""
+    cost / completion_time / n_kills / n_checkpoints for every bid-limited
+    scheme (NONE/OPT/HOUR/EDGE/ADAPT)."""
 
     name = "batch"
 
     def run(self, scenario: Scenario) -> EngineResult:
-        markets = scenario.materialize()
-        t0 = time.perf_counter()  # wall_s measures simulation, not trace gen
-        res = empty_result(scenario, markets, self.name)
-
-        batched = [s for s in scenario.schemes if s in BID_LIMITED_SCHEMES]
-        fallback = [s for s in scenario.schemes if s not in BID_LIMITED_SCHEMES]
-
-        if batched:
-            grid = _PeriodGrid.build(markets, scenario)
-            for scheme in batched:
-                out = _run_scheme(scheme, grid, scenario)
-                s = scenario.schemes.index(scheme)
-                M, B = len(markets), len(scenario.bids)
-                res.completed[:, :, s] = out["completed"].reshape(M, B)
-                res.completion_time[:, :, s] = out["completion_time"].reshape(M, B)
-                res.cost[:, :, s] = out["cost"].reshape(M, B)
-                res.n_checkpoints[:, :, s] = out["n_checkpoints"].reshape(M, B)
-                res.n_kills[:, :, s] = out["n_kills"].reshape(M, B)
-                res.work_lost_s[:, :, s] = out["work_lost_s"].reshape(M, B)
-
-        if fallback:
-            # ADAPT/ACC make dynamic per-step decisions: run them on the
-            # scalar path shared with ReferenceEngine so they can never drift
-            from repro.engine.reference import scalar_fill
-
-            scalar_fill(scenario, markets, res, fallback)
-
-        res.wall_s = time.perf_counter() - t0
-        return res
+        return run_batched(scenario, self.name, _run_scheme)
 
 
 # ---------------------------------------------------------------------------
@@ -213,11 +217,23 @@ def _periods_all_bids(trace, bids) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
-# Scheme kernels — each mirrors one branch of simulator._run_period
+# NumPy driver — walks periods, dispatching to the pure kernels
 # ---------------------------------------------------------------------------
 
 
-def _run_scheme(scheme: Scheme, grid: _PeriodGrid, scenario: Scenario) -> dict[str, np.ndarray]:
+def _run_scheme(
+    scheme: Scheme,
+    grid: _PeriodGrid,
+    scenario: Scenario,
+    adapt_tables: AdaptTables | None = None,
+) -> dict[str, np.ndarray]:
+    if scheme == Scheme.ADAPT:
+        # ADAPT's decision cadence (~10 min) makes its periods an order of
+        # magnitude more iterations than HOUR's windows, so it gets a
+        # cell-decoupled driver: every cell walks its *own* (period, tick)
+        # cursor and the loop count is the busiest cell's tick total, not the
+        # per-period maximum summed over the padded period axis.
+        return _run_adapt(grid, scenario, adapt_tables)
     params = scenario.params
     work_s = scenario.work_s
     t_r, t_c, delta = params.t_r, params.t_c, params.billing_period_s
@@ -260,16 +276,16 @@ def _run_scheme(scheme: Scheme, grid: _PeriodGrid, scenario: Scenario) -> dict[s
                 continue
         sv = saved[act]
         if scheme == Scheme.NONE:
-            out = _kernel_none(b, start_work, sv, work_s)
+            out = _kernel_none(np, b, start_work, sv, work_s)
         elif scheme == Scheme.OPT:
-            out = _kernel_opt(b, start_work, sv, work_s, t_c)
+            out = _kernel_opt(np, b, start_work, sv, work_s, t_c)
         elif scheme == Scheme.HOUR:
-            out = _kernel_windows(a, b, start_work, sv, work_s, t_c, hour_delta=delta)
+            out = _kernel_windows(np, a, b, start_work, sv, work_s, t_c, hour_delta=delta)
         elif scheme == Scheme.EDGE:
             out = _kernel_windows(
-                a, b, start_work, sv, work_s, t_c, edge_state=grid.edge_state(act, p, t_r)
+                np, a, b, start_work, sv, work_s, t_c, edge_state=grid.edge_state(act, p, t_r)
             )
-        else:  # pragma: no cover - guarded by BID_LIMITED_SCHEMES
+        else:  # pragma: no cover - guarded by BATCHED_SCHEMES
             raise ValueError(f"no batch kernel for {scheme}")
         done_now, done_at, work_end, saved_out, ckpt_add = out
 
@@ -303,141 +319,173 @@ def _run_scheme(scheme: Scheme, grid: _PeriodGrid, scenario: Scenario) -> dict[s
     }
 
 
-def _kernel_none(b, start_work, saved, work_s):
-    """NONE: no checkpoint windows; one straight work segment per period.
-    Stateless elementwise math: runs on the configured array substrate."""
-    xp = _xp()
-    b, start_work, saved = xp.asarray(b), xp.asarray(start_work), xp.asarray(saved)
-    lhs = saved + (b - start_work)  # work + (b - t)
-    done_now = lhs >= (work_s - _EPS)
-    done_at = start_work + (work_s - saved)  # t + (work_s - work)
-    return (
-        np.asarray(done_now),
-        np.asarray(done_at),
-        np.asarray(lhs),
-        np.asarray(saved),
-        np.zeros(len(b), dtype=np.int64),
-    )
+# ---------------------------------------------------------------------------
+# ADAPT driver — cell-decoupled lockstep over (period, decision-tick) cursors
+# ---------------------------------------------------------------------------
 
 
-def _kernel_opt(b, start_work, saved, work_s, t_c):
-    """OPT oracle: checkpoint exactly once, just before the kill — iff the
-    kill precedes completion.  Stateless elementwise math: runs on the
-    configured array substrate (NumPy, or jax.numpy with x64)."""
-    xp = _xp()
-    b, start_work, saved = xp.asarray(b), xp.asarray(start_work), xp.asarray(saved)
-    remaining = work_s - saved
-    completes_at = start_work + remaining
-    oracle = completes_at <= (b + _EPS)
-    s = b - t_c
-    has_s = (~oracle) & (s > start_work)
+def _run_adapt(
+    grid: _PeriodGrid, scenario: Scenario, tables: AdaptTables
+) -> dict[str, np.ndarray]:
+    """Walk every ADAPT cell through its own periods and decision ticks in
+    one lockstep loop.
 
-    # no-window path (oracle completion or window before recovery finished)
-    lhsB = saved + (b - start_work)
-    doneB = lhsB >= (work_s - _EPS)
-    done_atB = start_work + (work_s - saved)
-
-    # window path
-    w_at_s = saved + (s - start_work)  # work + (s - t)
-    doneA1 = w_at_s >= (work_s - _EPS)
-    done_atA1 = start_work + (work_s - saved)
-    ckpt_ok = (s + t_c) <= (b + _EPS)
-    work1 = w_at_s
-    saved1 = xp.where(ckpt_ok, work1, saved)
-    t1 = s + t_c
-    ended = t1 >= b
-    lhsA2 = work1 + (b - t1)
-    doneA2 = (~ended) & (lhsA2 >= (work_s - _EPS))
-    done_atA2 = t1 + (work_s - work1)
-    work_endA = xp.where(ended, work1, lhsA2)
-
-    done_now = xp.where(has_s, doneA1 | doneA2, doneB)
-    done_at = xp.where(has_s, xp.where(doneA1, done_atA1, done_atA2), done_atB)
-    work_end = xp.where(has_s, work_endA, lhsB)
-    saved_out = xp.where(has_s & ~doneA1, saved1, saved)
-    ckpt_add = (has_s & ~doneA1 & ckpt_ok).astype(xp.int64)
-    return (
-        np.asarray(done_now),
-        np.asarray(done_at),
-        np.asarray(work_end),
-        np.asarray(saved_out),
-        np.asarray(ckpt_add),
-    )
-
-
-def _kernel_windows(
-    a,
-    b,
-    start_work,
-    saved,
-    work_s,
-    t_c,
-    hour_delta: float | None = None,
-    edge_state: tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray] | None = None,
-):
-    """HOUR / EDGE: walk scheduled checkpoint windows in lockstep.
-
-    The inner loop advances one window index per iteration for every active
-    cell simultaneously; a cell drops out when it completes, is billed out at
-    ``t >= b``, or runs out of windows (tail segment).  Window start times
-    come from hour boundaries (``hour_delta``) or the trace's rising edges
-    (``edge_state`` = per-cell views into the flattened edge arrays).
+    Unlike the shared period-synchronized driver (where iteration count is
+    the per-period tick *maximum summed over the padded period axis*), each
+    cell here advances its own ``(period, tick)`` cursor, so the loop runs
+    for the busiest single cell's tick total — ~5x fewer iterations on
+    catalog grids.  The per-tick float expressions are
+    :func:`repro.engine.kernels.adapt_decision` and the same masked updates
+    as :func:`~repro.engine.kernels.adapt_tick`, so results stay bit-identical
+    to the scalar reference.  The active set is compacted as cells finish.
     """
-    C = b.shape[0]
-    work = saved.copy()
-    t = start_work.copy()
-    sv = saved.copy()
-    done_now = np.zeros(C, dtype=bool)
-    done_at = np.full(C, np.nan)
-    ckpt_add = np.zeros(C, dtype=np.int64)
-    tail = np.zeros(C, dtype=bool)
-    in_loop = np.ones(C, dtype=bool)
-    if edge_state is not None:
-        edges_flat, base, n_edges, ptr = edge_state
-        ptr = ptr.copy()
+    from repro.engine.kernels import adapt_decision
 
-    k = 1
-    while in_loop.any():
-        if edge_state is None:
-            s = a + k * hour_delta - t_c  # launch + k*Δ - t_c
-            no_more = in_loop & ~(s < b)
-            window = in_loop & (s < b) & (s > start_work)
-            # s <= start_work windows are skipped but the walk continues
-        else:
-            have = in_loop & (ptr < n_edges)
-            idx = np.where(have, base + ptr, 0)
-            s = np.where(have, edges_flat[idx], np.inf)
-            no_more = in_loop & (~have | ~(s < b))
-            window = in_loop & have & (s < b)
-        tail |= no_more
-        in_loop &= ~no_more
+    params = scenario.params
+    work_s = scenario.work_s
+    t_r, t_c, delta = params.t_r, params.t_c, params.billing_period_s
+    interval = params.adapt_interval_s
+    C, P = grid.A.shape
 
-        if window.any():
-            w_at = work + (s - t)
-            d = window & (w_at >= (work_s - _EPS))
-            done_now |= d
-            done_at = np.where(d, t + (work_s - work), done_at)
-            in_loop &= ~d
-            window &= ~d
+    done = np.zeros(C, dtype=bool)
+    comp_time = np.full(C, np.inf)
+    n_ckpt = np.zeros(C, dtype=np.int64)
+    work_lost = np.zeros(C)
+    # flat run records (period, cell, launch, end, user) — order-free billing
+    Rp: list[np.ndarray] = []
+    Rc: list[np.ndarray] = []
+    Ra: list[np.ndarray] = []
+    Re: list[np.ndarray] = []
+    Ru: list[np.ndarray] = []
 
-            work = np.where(window, w_at, work)
-            ckpt_ok = window & ((s + t_c) <= (b + _EPS))
-            sv = np.where(ckpt_ok, work, sv)
-            ckpt_add += ckpt_ok
-            t = np.where(window, s + t_c, t)
-            billed_out = window & (t >= b)
-            in_loop &= ~billed_out
-        if edge_state is not None:
-            ptr = ptr + window  # only consumed edges advance
-        k += 1
+    def record(pv, cv, av, ev, user: bool) -> None:
+        Rp.append(pv)
+        Rc.append(cv)
+        Ra.append(av)
+        Re.append(ev)
+        Ru.append(np.full(len(cv), user, dtype=bool))
 
-    # tail segment: work to b, maybe completing
-    lhs = work + (b - t)
-    d2 = tail & (lhs >= (work_s - _EPS))
-    done_now |= d2
-    done_at = np.where(d2, t + (work_s - work), done_at)
-    work_end = np.where(tail, lhs, work)
-    return done_now, done_at, work_end, sv, ckpt_add
+    counts = grid.valid.sum(axis=1)
+    idx = np.nonzero(counts > 0)[0]  # global cell ids of the active set
+    N = len(idx)
+    if N:
+        cnt = counts[idx]
+        hor = grid.horizon[idx]
+        off = tables.off[idx]
+        top = tables.top[idx]
+        saved = np.full(N, float(scenario.initial_saved_work))
+        p = np.zeros(N, dtype=np.int64)  # per-cell period cursor
+        alive = np.ones(N, dtype=bool)
+        entering = np.ones(N, dtype=bool)  # needs period-entry processing
+        t = np.zeros(N)
+        work = np.zeros(N)
+        sv = np.zeros(N)
+        next_dec = np.zeros(N)
+        a_cur = np.zeros(N)
+        b_cur = np.zeros(N)
+
+        while alive.any():
+            # -- enter cells into their next live period (consuming shorts)
+            ent = alive & entering
+            while ent.any():
+                no_more = ent & (p >= cnt)
+                alive &= ~no_more
+                ent &= ~no_more
+                if not ent.any():
+                    break
+                pc = np.minimum(p, cnt - 1)  # masked rows gather safely
+                a = grid.A[idx, pc]
+                b = grid.B[idx, pc]
+                start_work = a + t_r
+                short = ent & (start_work >= b)
+                shortk = short & (b < hor)
+                if shortk.any():
+                    # killed before recovery finished: billed, no progress
+                    record(p[shortk], idx[shortk], a[shortk], b[shortk], False)
+                go = ent & ~short
+                t = np.where(go, start_work, t)
+                work = np.where(go, saved, work)
+                sv = np.where(go, saved, sv)
+                next_dec = np.where(go, start_work + interval, next_dec)
+                a_cur = np.where(go, a, a_cur)
+                b_cur = np.where(go, b, b_cur)
+                entering &= ~go
+                p = np.where(short, p + 1, p)
+                ent = short  # short cells try their next period
+            live = alive & ~entering
+            if not live.any():
+                continue
+
+            # -- one decision tick (mirrors kernels.adapt_tick / the scalar)
+            seg_end = np.minimum(next_dec, b_cur)
+            fin = live & (work + (seg_end - t) >= work_s - _EPS)
+            if fin.any():
+                d_at = t + (work_s - work)
+                rows = idx[fin]
+                comp_time[rows] = d_at[fin]
+                done[rows] = True
+                record(p[fin], rows, a_cur[fin], d_at[fin], True)
+                alive &= ~fin
+                live &= ~fin
+            work = np.where(live, work + (seg_end - t), work)
+            t = np.where(live, seg_end, t)
+            kill1 = live & (t >= b_cur)
+            live &= ~kill1
+            age = t - a_cur
+            take = live & adapt_decision(
+                np, age, work - sv, tables.flat, off, top,
+                tables.bin_s, tables.n_bins, t_c, t_r, interval,
+            )
+            ck = take & ((t + t_c) <= (b_cur + _EPS))
+            if ck.any():
+                sv = np.where(ck, work, sv)
+                n_ckpt[idx[ck]] += 1
+            t = np.where(take, np.minimum(t + t_c, b_cur), t)
+            kill2 = take & (t >= b_cur)
+            live &= ~kill2
+            next_dec = np.where(live, t + interval, next_dec)
+
+            kl = kill1 | kill2
+            if kl.any():
+                rows = idx[kl]
+                record(p[kl], rows, a_cur[kl], b_cur[kl], False)
+                work_lost[rows] += work[kl] - sv[kl]
+                saved = np.where(kl, sv, saved)
+                p = np.where(kl, p + 1, p)
+                entering |= kl
+
+            # -- compact: drop finished cells so the tail runs on small arrays
+            na = int(alive.sum())
+            if na and na <= N // 2:
+                keep = alive
+                idx, cnt, hor, off, top = idx[keep], cnt[keep], hor[keep], off[keep], top[keep]
+                saved, p, t, work, sv = saved[keep], p[keep], t[keep], work[keep], sv[keep]
+                next_dec, a_cur, b_cur = next_dec[keep], a_cur[keep], b_cur[keep]
+                entering = entering[keep]
+                alive = np.ones(na, dtype=bool)
+                N = na
+
+    if Rc:
+        total, n_kills = _bill_runs_flat(
+            grid,
+            np.concatenate(Rp),
+            np.concatenate(Rc),
+            np.concatenate(Ra),
+            np.concatenate(Re),
+            np.concatenate(Ru),
+            delta,
+        )
+    else:
+        total, n_kills = np.zeros(C), np.zeros(C, dtype=np.int64)
+
+    return {
+        "completed": done & np.isfinite(comp_time),
+        "completion_time": comp_time,
+        "cost": total,
+        "n_checkpoints": n_ckpt,
+        "n_kills": n_kills,
+        "work_lost_s": work_lost,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -450,28 +498,49 @@ def _bill_runs(
     runs: list[tuple[int, np.ndarray, np.ndarray, np.ndarray, bool]],
     delta: float,
 ) -> tuple[np.ndarray, np.ndarray]:
+    """Bill per-period run groups (``(period, cells, launch, end, user)``) —
+    flattens and delegates to :func:`_bill_runs_flat`."""
+    if not runs:
+        C = grid.A.shape[0]
+        return np.zeros(C), np.zeros(C, dtype=np.int64)
+    sizes = np.asarray([len(r[1]) for r in runs])
+    return _bill_runs_flat(
+        grid,
+        np.repeat([r[0] for r in runs], sizes),
+        np.concatenate([r[1] for r in runs]),
+        np.concatenate([r[2] for r in runs]),
+        np.concatenate([r[3] for r in runs]),
+        np.repeat(np.asarray([r[4] for r in runs], dtype=bool), sizes),
+        delta,
+    )
+
+
+def _bill_runs_flat(
+    grid: _PeriodGrid,
+    p_all: np.ndarray,
+    cells: np.ndarray,
+    launch: np.ndarray,
+    end: np.ndarray,
+    user: np.ndarray,
+    delta: float,
+) -> tuple[np.ndarray, np.ndarray]:
     """Bill every recorded run and fold into per-cell totals.
 
-    Runs are grouped per market so price lookups share one (times, prices)
-    pair; within a run, hour prices accumulate in hour order (hour 0, then 1,
-    ...) and across a cell's runs costs accumulate in period (= chronological)
-    order, so each cell's total is the exact left-to-right sum the scalar
-    ``run_cost`` / ``sum(r.cost for r in runs)`` produces.  Also derives
-    ``n_kills`` (non-user-terminated recorded runs, exactly the scalar
-    count).  Runs are sorted by billed-hour count per market so hour ``k``
-    only touches the runs that actually reach hour ``k``.
+    Runs arrive as flat parallel arrays (one entry per billed instance run,
+    in any order — a cell records at most one run per period, which is what
+    makes order irrelevant here).  Runs are grouped per market so price
+    lookups share one (times, prices) pair; within a run, hour prices
+    accumulate in hour order (hour 0, then 1, ...) and across a cell's runs
+    costs accumulate in period (= chronological) order, so each cell's total
+    is the exact left-to-right sum the scalar ``run_cost`` / ``sum(r.cost for
+    r in runs)`` produces.  Also derives ``n_kills`` (non-user-terminated
+    recorded runs, exactly the scalar count).
     """
     C, P = grid.A.shape
     total = np.zeros(C)
     n_kills = np.zeros(C, dtype=np.int64)
-    if not runs:
+    if len(cells) == 0:
         return total, n_kills
-    sizes = np.asarray([len(r[1]) for r in runs])
-    p_all = np.repeat([r[0] for r in runs], sizes)
-    cells = np.concatenate([r[1] for r in runs])
-    launch = np.concatenate([r[2] for r in runs])
-    end = np.concatenate([r[3] for r in runs])
-    user = np.repeat(np.asarray([r[4] for r in runs], dtype=bool), sizes)
     m_of = cells // grid.n_bids
 
     run_cost = np.zeros(len(cells))

@@ -4,8 +4,12 @@ The fleet event loop (many jobs, migration, placement policies) is inherently
 sequential per (policy, margin, seed) cell, so it always runs on the scalar
 :class:`~repro.fleet.controller.FleetController`; what the engine layer adds
 is the declarative scenario, the NumPy-batched trace generation shared with
-single-job Scenarios, and one result object.  The legacy
-``repro.fleet.sweep.run_sweep`` is a deprecation shim over this module.
+single-job Scenarios, and one result object.  ADAPT fleet cells share the
+engine's binned-hazard formulation: every per-step decision inside an attempt
+reads the cached :meth:`~repro.core.schemes.FailurePdf.survival_table` — the
+same numbers the batched kernels gather — instead of summing pdf prefixes.
+The legacy ``repro.fleet.sweep.run_sweep`` is a deprecation shim over this
+module.
 """
 
 from __future__ import annotations

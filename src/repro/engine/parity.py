@@ -1,12 +1,14 @@
 """Cross-backend parity: the redesign's correctness anchor.
 
-The batch backend is only trusted because this module can prove, scenario by
-scenario, that it reproduces the scalar reference **exactly** — same cost,
-completion_time, n_kills and n_checkpoints in every (market, bid, scheme)
-cell.  The engines share no simulation code (one walks events in Python, one
-walks SoA arrays), so agreement is strong evidence both are right; the float
-expressions are mirrored by construction, so the comparison is ``==``, not
-``allclose``.
+An array backend (batch or jax) is only trusted because this module can
+prove, scenario by scenario, that it reproduces the scalar reference
+**exactly** — same cost, completion_time, n_kills and n_checkpoints in every
+(market, bid, scheme) cell.  The engines share no simulation *control flow*
+(one walks events in Python, the others walk SoA arrays in lockstep), so
+agreement is strong evidence both are right; the float expressions are
+mirrored by construction (see :mod:`repro.engine.kernels`), so the comparison
+is ``==``, not ``allclose`` — ADAPT's binned-hazard decisions included, since
+every backend reads the same cached survival tables.
 """
 
 from __future__ import annotations
@@ -15,8 +17,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.engine.base import EngineResult
-from repro.engine.batch import BatchEngine
+from repro.engine.base import Engine, EngineResult, get_engine
 from repro.engine.reference import ReferenceEngine
 from repro.engine.scenario import Scenario
 
@@ -32,14 +33,14 @@ class CellMismatch:
     bid: float
     scheme: str
     reference: float
-    batch: float
+    candidate: float
 
 
 @dataclasses.dataclass
 class ParityReport:
     scenario: Scenario
     reference: EngineResult
-    batch: EngineResult
+    candidate: EngineResult
     mismatches: list[CellMismatch]
 
     @property
@@ -47,29 +48,30 @@ class ParityReport:
         return not self.mismatches
 
     def __str__(self) -> str:
+        name = self.candidate.engine
         if self.ok:
-            return f"parity OK over {self.reference.n_cells} cells"
-        lines = [f"parity FAILED: {len(self.mismatches)} mismatching cells"]
+            return f"parity OK over {self.reference.n_cells} cells ({name} vs reference)"
+        lines = [f"parity FAILED ({name} vs reference): {len(self.mismatches)} mismatching cells"]
         for mm in self.mismatches[:20]:
             lines.append(
                 f"  {mm.field}[{mm.market} seed={mm.seed} bid={mm.bid:.3f} {mm.scheme}] "
-                f"reference={mm.reference!r} batch={mm.batch!r}"
+                f"reference={mm.reference!r} {name}={mm.candidate!r}"
             )
         if len(self.mismatches) > 20:
             lines.append(f"  ... and {len(self.mismatches) - 20} more")
         return "\n".join(lines)
 
 
-def compare_engines(scenario: Scenario) -> ParityReport:
-    """Run both backends on ``scenario`` and diff every compared field."""
-    ref = ReferenceEngine(keep_runs=False).run(scenario)
-    bat = BatchEngine().run(scenario)
+def compare_results(
+    scenario: Scenario, ref: EngineResult, cand: EngineResult
+) -> ParityReport:
+    """Diff two already-computed results cell-for-cell (exact equality)."""
     mismatches: list[CellMismatch] = []
     for field in COMPARED:
         r = getattr(ref, field)
-        b = getattr(bat, field)
+        c = getattr(cand, field)
         # exact equality (inf == inf holds; a NaN would rightly flag itself)
-        eq = r == b
+        eq = r == c
         for m, bi, si in zip(*np.nonzero(~eq)):
             cellm = ref.markets[m]
             mismatches.append(
@@ -80,16 +82,26 @@ def compare_engines(scenario: Scenario) -> ParityReport:
                     bid=ref.bids[bi],
                     scheme=ref.schemes[si].value,
                     reference=r[m, bi, si],
-                    batch=b[m, bi, si],
+                    candidate=c[m, bi, si],
                 )
             )
-    return ParityReport(scenario=scenario, reference=ref, batch=bat, mismatches=mismatches)
+    return ParityReport(scenario=scenario, reference=ref, candidate=cand, mismatches=mismatches)
 
 
-def assert_parity(scenario: Scenario) -> ParityReport:
+def compare_engines(scenario: Scenario, engine: str | Engine = "batch") -> ParityReport:
+    """Run the reference and ``engine`` on ``scenario``, diff every compared
+    field.  ``engine`` may be a backend name (``"batch"``, ``"jax"``) or an
+    engine instance."""
+    ref = ReferenceEngine(keep_runs=False).run(scenario)
+    eng = get_engine(engine) if isinstance(engine, str) else engine
+    cand = eng.run(scenario)
+    return compare_results(scenario, ref, cand)
+
+
+def assert_parity(scenario: Scenario, engine: str | Engine = "batch") -> ParityReport:
     """Raise ``AssertionError`` (with per-cell detail) unless both backends
     agree exactly; returns the report otherwise."""
-    report = compare_engines(scenario)
+    report = compare_engines(scenario, engine)
     if not report.ok:
         raise AssertionError(str(report))
     return report

@@ -34,9 +34,15 @@ from repro.core.market import (
 from repro.core.provision import SLA
 from repro.core.schemes import Scheme, SimParams
 
-#: Schemes the batch backend lowers onto structure-of-arrays ops.  ADAPT and
-#: ACC make dynamic per-step decisions and fall back to the scalar reference.
-BID_LIMITED_SCHEMES = (Scheme.NONE, Scheme.OPT, Scheme.HOUR, Scheme.EDGE)
+#: The bid-limited schemes (an instance lives until its spot price exceeds
+#: the bid): everything except ACC, whose instances are never provider-killed.
+BID_LIMITED_SCHEMES = (Scheme.NONE, Scheme.OPT, Scheme.HOUR, Scheme.EDGE, Scheme.ADAPT)
+
+#: Schemes the array backends (batch / jax) lower onto structure-of-arrays
+#: lockstep ops.  Since ADAPT's hazard decision became a binned-table lookup
+#: this is every bid-limited scheme; only ACC — a different control loop
+#: (bid-unlimited leases, poll-driven relaunch) — stays on the scalar path.
+BATCHED_SCHEMES = BID_LIMITED_SCHEMES
 
 
 @dataclasses.dataclass(frozen=True)

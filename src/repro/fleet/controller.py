@@ -29,11 +29,10 @@ from repro.core.billing import Termination
 from repro.core.market import InstanceType, PriceTrace
 from repro.core.schemes import Scheme, SimParams
 from repro.core.schemes import FailurePdf
-from repro.core.simulator import simulate_acc_attempt, simulate_attempt
+from repro.core.simulator import _EPS, simulate_acc_attempt, simulate_attempt
 from repro.fleet.policies import Placement, PlacementContext, PlacementPolicy
 from repro.fleet.workload import Job, Workload
 
-_EPS = 1e-9
 _ARRIVAL, _END = 0, 1
 
 
@@ -258,14 +257,20 @@ class FleetController:
     def _adapt_pdf(self, name: str, bid: float) -> FailurePdf:
         """ADAPT failure pdf for (type, bid): from history via the shared
         placement-context cache, else built once from the evaluation trace
-        (and cached) — never rebuilt per migration attempt."""
+        (and cached) — never rebuilt per migration attempt.
+
+        The returned pdf's binned survival table is materialized here, so
+        every per-step hazard decision inside ``simulate_attempt`` is the
+        same O(1) table lookup the batched engine kernels use (one numeric
+        source; the attempt loop never pays per-decision prefix sums)."""
         pdf = self.ctx.pdf(name, bid)
-        if pdf is not None:
-            return pdf
-        key = (name, round(bid, 6))
-        if key not in self._eval_pdf_cache:
-            self._eval_pdf_cache[key] = FailurePdf.from_trace(self.traces[name], bid)
-        return self._eval_pdf_cache[key]
+        if pdf is None:
+            key = (name, round(bid, 6))
+            if key not in self._eval_pdf_cache:
+                self._eval_pdf_cache[key] = FailurePdf.from_trace(self.traces[name], bid)
+            pdf = self._eval_pdf_cache[key]
+        pdf.survival_table()
+        return pdf
 
     # -- main loop ----------------------------------------------------------
 

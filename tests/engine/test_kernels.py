@@ -1,0 +1,167 @@
+"""Kernel-layer invariants: survival tables and their packed form.
+
+The whole batched-ADAPT design rests on one claim: the binned survival
+numbers are the *same floats* no matter how they are produced — scalar
+``FailurePdf`` queries, the cached full table, the compact packed table, or
+the grid-vectorized batch build.  These tests pin that claim down directly
+(the parity suite then checks the consequences end to end).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import get_instance, synthetic_trace
+from repro.core.schemes import FailurePdf
+from repro.engine import Scenario
+from repro.engine.batch import _PeriodGrid
+from repro.engine.kernels import AdaptTables, _survival_at, adapt_decision
+
+IT = get_instance("m1.xlarge")
+
+
+def test_survival_table_matches_pointwise_definition():
+    """Table entries equal the historical `1 - sum(pdf[:k])` definition."""
+    tr = synthetic_trace(IT, 30, seed=0)
+    for bid in (0.01, 0.35, 0.36, 0.40, 5.0):
+        pdf = FailurePdf.from_trace(tr, bid)
+        K = len(pdf.pdf)
+        tab = pdf.survival_table()
+        assert tab.shape == (K + 1,)
+        assert tab[0] == 1.0 and tab[K] == pdf.censored
+        for k in (1, 2, 10, 100, K - 1):
+            assert tab[k] == 1.0 - np.cumsum(pdf.pdf)[k - 1]
+        # survival() itself reads the table, bins clamped at the censored tail
+        assert pdf.survival(0.0) == 1.0
+        assert pdf.survival(1e12) == pdf.censored
+
+
+def test_compact_survival_reproduces_full_table():
+    """Compact (plateau-folded) lookups equal every full-table entry."""
+    tr = synthetic_trace(IT, 30, seed=1)
+    for bid in (0.33, 0.36, 0.40):
+        pdf = FailurePdf.from_trace(tr, bid)
+        tab = pdf.survival_table()
+        vals, top = pdf.compact_survival()
+        K = len(pdf.pdf)
+        for k in range(0, K + 10, 7):
+            idx = top + 1 if k >= K else min(k, top)
+            assert vals[idx] == tab[min(k, K)]
+
+
+@pytest.mark.parametrize("bid_fractions", [False, True])
+def test_adapt_tables_grid_build_is_bit_identical(bid_fractions):
+    """The vectorized (per-market) table build equals the per-cell scalar
+    build bit for bit — offsets, plateaus, and every survival float."""
+    from repro.core import catalog
+
+    types = [it for it in catalog() if it.os == "linux"][:4]
+    kwargs = dict(bids=(0.5, 0.55) if bid_fractions else (0.33, 0.36, 0.40))
+    sc = Scenario.grid(
+        work_s=10 * 3600.0,
+        instances=types,
+        horizon_days=12.0,
+        seeds=(0, 1),
+        bid_fractions=bid_fractions,
+        **kwargs,
+    )
+    markets = sc.materialize()
+    grid = _PeriodGrid.build(markets, sc)
+    scalar = AdaptTables.build(markets, sc)
+    vec = AdaptTables.build(markets, sc, grid)
+    np.testing.assert_array_equal(scalar.off, vec.off)
+    np.testing.assert_array_equal(scalar.top, vec.top)
+    np.testing.assert_array_equal(scalar.flat, vec.flat)
+    assert scalar.bin_s == vec.bin_s and scalar.n_bins == vec.n_bins
+
+
+def test_adapt_decision_matches_scalar_rule():
+    """The elementwise table-lookup decision equals adapt_should_checkpoint
+    for a sweep of ages and unsaved-work values."""
+    from repro.core.schemes import SimParams, adapt_should_checkpoint
+
+    tr = synthetic_trace(IT, 30, seed=2)
+    sc = Scenario.from_trace(tr, 10 * 3600.0, [0.345, 0.36, 0.38])
+    markets = sc.materialize()
+    grid = _PeriodGrid.build(markets, sc)
+    tables = AdaptTables.build(markets, sc, grid)
+    params = SimParams()
+    ages = np.linspace(0.0, 3 * 86400.0, 97)
+    unsaved = np.linspace(0.0, 8 * 3600.0, 97)
+    for c, bid in enumerate(sc.bids):
+        pdf = FailurePdf.from_trace(tr, bid)
+        got = adapt_decision(
+            np, ages, unsaved,
+            tables.flat, tables.off[np.full(97, c)], tables.top[np.full(97, c)],
+            tables.bin_s, tables.n_bins, params.t_c, params.t_r, params.adapt_interval_s,
+        )
+        want = [
+            adapt_should_checkpoint(pdf, float(a), float(u), params)
+            for a, u in zip(ages, unsaved)
+        ]
+        assert list(got) == want
+
+
+def test_kernel_adapt_matches_scalar_run_period():
+    """The generic per-period ADAPT kernel (`_kernel_adapt`, the template the
+    JAX while_loop body mirrors) must reproduce the scalar `_run_period` walk
+    exactly on every availability period: completion instant, end-of-period
+    work, surviving checkpoint, and checkpoint count."""
+    from repro.core.schemes import SimParams
+    from repro.core.simulator import _run_period
+    from repro.core.schemes import Scheme
+    from repro.engine.kernels import _kernel_adapt
+
+    tr = synthetic_trace(IT, 30, seed=5)
+    params = SimParams()
+    work_s = 30 * 3600.0
+    sc = Scenario.from_trace(tr, work_s, [0.345, 0.36, 0.38, 0.40])
+    markets = sc.materialize()
+    grid = _PeriodGrid.build(markets, sc)
+    tables = AdaptTables.build(markets, sc, grid)
+
+    checked = 0
+    for c, bid in enumerate(sc.bids):
+        pdf = FailurePdf.from_trace(tr, bid)
+        saved = 0.0
+        for p in range(grid.A.shape[1]):
+            if not grid.valid[c, p]:
+                break
+            a, b = grid.A[c, p], grid.B[c, p]
+            start_work = a + params.t_r
+            if start_work >= b:
+                continue
+            done_at, work_end, saved_out, n_ckpt = _run_period(
+                tr, Scheme.ADAPT, a, start_work, b, saved, work_s, params, pdf
+            )
+            k_done, k_at, k_work, k_sv, k_ck = _kernel_adapt(
+                np,
+                np.array([a]), np.array([b]), np.array([start_work]),
+                np.array([saved]), work_s, params.t_c, params.t_r,
+                params.adapt_interval_s, tables, np.array([c]),
+            )
+            assert bool(k_done[0]) == (done_at is not None)
+            if done_at is not None:
+                assert k_at[0] == done_at
+                break
+            assert k_work[0] == work_end
+            assert k_sv[0] == saved_out
+            assert int(k_ck[0]) == n_ckpt
+            saved = saved_out
+            checked += 1
+    assert checked > 3  # the grid must actually exercise multi-period cells
+
+
+def test_survival_at_clamps_to_plateau_and_censored_tail():
+    tr = synthetic_trace(IT, 30, seed=3)
+    sc = Scenario.from_trace(tr, 10 * 3600.0, [0.36])
+    markets = sc.materialize()
+    grid = _PeriodGrid.build(markets, sc)
+    tables = AdaptTables.build(markets, sc, grid)
+    pdf = FailurePdf.from_trace(tr, 0.36)
+    ks = np.array([0, 1, 5, tables.n_bins - 1, tables.n_bins, tables.n_bins + 999])
+    got = _survival_at(
+        np, ks, tables.flat, tables.off[np.zeros(len(ks), dtype=int)],
+        tables.top[np.zeros(len(ks), dtype=int)], tables.n_bins,
+    )
+    want = [pdf.survival(k * tables.bin_s) for k in ks]
+    np.testing.assert_array_equal(got, want)

@@ -64,7 +64,7 @@ def test_parity_generated_grid_with_fractional_bids():
         bid_fractions=True,
     )
     report = assert_parity(sc)
-    assert report.reference.shape == (12, 6, 4)
+    assert report.reference.shape == (12, 6, 5)
 
 
 def test_parity_random_step_traces():
@@ -91,12 +91,52 @@ def test_parity_random_step_traces():
         assert_parity(sc)
 
 
-def test_parity_all_schemes_via_fallback():
-    """ADAPT/ACC cells fall back to the scalar path inside BatchEngine, so a
-    full-scheme scenario still agrees cell-for-cell."""
+def test_parity_all_schemes_acc_via_fallback():
+    """ACC cells (the one remaining scalar scheme) fall back to the scalar
+    path inside BatchEngine, so a full-scheme scenario still agrees
+    cell-for-cell."""
     tr = synthetic_trace(IT, 20, seed=1)
     sc = Scenario.from_trace(tr, 30 * 3600.0, [0.36, 0.37, 0.38], schemes=tuple(Scheme))
     assert_parity(sc)
+
+
+def test_adapt_is_batched_not_scalar(monkeypatch):
+    """ADAPT cells must run through the SoA lockstep kernel: BatchEngine may
+    only reach scalar_fill for ACC (the ISSUE's acceptance criterion)."""
+    import repro.engine.reference as reference
+
+    seen: list[tuple] = []
+    orig = reference.scalar_fill
+
+    def spy(scenario, markets, res, schemes):
+        seen.append(tuple(schemes))
+        return orig(scenario, markets, res, schemes)
+
+    monkeypatch.setattr(reference, "scalar_fill", spy)
+    tr = synthetic_trace(IT, 20, seed=4)
+    sc = Scenario.from_trace(tr, 20 * 3600.0, [0.36, 0.38], schemes=tuple(Scheme))
+    BatchEngine().run(sc)
+    assert seen == [(Scheme.ACC,)]
+
+    seen.clear()
+    sc2 = Scenario.from_trace(tr, 20 * 3600.0, [0.36, 0.38], schemes=BID_LIMITED_SCHEMES)
+    BatchEngine().run(sc2)
+    assert seen == []  # no scalar fallback at all without ACC
+
+
+def test_adapt_parity_across_decision_cadences():
+    """Binned-hazard ADAPT must match the scalar loop for cadences that do
+    and do not divide the survival-table bin width."""
+    tr = synthetic_trace(IT, 30, seed=6)
+    for interval in (60.0, 450.0, 600.0, 731.0, 3600.0):
+        sc = Scenario.from_trace(
+            tr,
+            30 * 3600.0,
+            [0.345, 0.36, 0.38],
+            schemes=(Scheme.ADAPT,),
+            params=SimParams(adapt_interval_s=interval),
+        )
+        assert_parity(sc)
 
 
 def test_mismatch_is_reported_with_cell_detail():
@@ -104,19 +144,19 @@ def test_mismatch_is_reported_with_cell_detail():
     sc = Scenario.from_trace(tr, 10 * 3600.0, [0.36, 0.37], schemes=(Scheme.HOUR,))
     report = compare_engines(sc)
     assert report.ok
-    # corrupt one batch cell and check the report pinpoints it
-    report.batch.cost[0, 1, 0] += 1.0
+    # corrupt one candidate cell and check the report pinpoints it
+    report.candidate.cost[0, 1, 0] += 1.0
     from repro.engine.parity import ParityReport, COMPARED, CellMismatch
 
     mismatches = []
     for field in COMPARED:
-        r, b = getattr(report.reference, field), getattr(report.batch, field)
+        r, b = getattr(report.reference, field), getattr(report.candidate, field)
         for m, bi, si in zip(*np.nonzero(~(r == b))):
             mismatches.append(
                 CellMismatch(field, "t", 0, report.reference.bids[bi],
                              report.reference.schemes[si].value, r[m, bi, si], b[m, bi, si])
             )
-    bad = ParityReport(sc, report.reference, report.batch, mismatches)
+    bad = ParityReport(sc, report.reference, report.candidate, mismatches)
     assert not bad.ok
     assert "bid=0.370" in str(bad)
 
@@ -132,19 +172,6 @@ def test_reference_matches_direct_simulate():
         for s, scheme in enumerate(sc.schemes):
             direct = simulate(tr, scheme, 20 * 3600.0, bid, sc.params)
             assert res.cell(0, b, s) == direct
-
-
-def test_parity_on_jax_substrate(monkeypatch):
-    """With REPRO_ENGINE_XP=jax the stateless kernels run on jax.numpy (x64);
-    single elementwise float64 ops are IEEE-exact on CPU, so parity must
-    still be bitwise."""
-    pytest.importorskip("jax")
-    monkeypatch.setenv("REPRO_ENGINE_XP", "jax")
-    tr = synthetic_trace(IT, 20, seed=3)
-    sc = Scenario.from_trace(
-        tr, 40 * 3600.0, bids=[0.355 + 0.005 * i for i in range(4)], schemes=BID_LIMITED_SCHEMES
-    )
-    assert_parity(sc)
 
 
 def test_batch_cells_per_s_exceeds_reference():

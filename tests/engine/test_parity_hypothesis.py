@@ -3,7 +3,10 @@
 Draws random synthetic step traces, bid grids and work sizes and asserts the
 batch backend reproduces the scalar reference exactly — cost,
 completion_time, n_kills and n_checkpoints — for every bid-limited scheme,
-as the ISSUE's acceptance criteria require.
+as the ISSUE's acceptance criteria require.  ``BID_LIMITED_SCHEMES`` includes
+ADAPT, so the general fuzz exercises the binned-hazard lockstep kernel on
+every example; a dedicated ADAPT fuzz additionally varies the decision
+cadence against the survival-table bin width.
 """
 
 import pytest
@@ -11,8 +14,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import HOUR, SimParams, step_trace
+from repro.core import HOUR, Scheme, SimParams, step_trace
 from repro.engine import BID_LIMITED_SCHEMES, Scenario, assert_parity
+
+assert Scheme.ADAPT in BID_LIMITED_SCHEMES  # the fuzz below must cover ADAPT
 
 
 @st.composite
@@ -61,5 +66,23 @@ def test_parity_with_resume(trace, bids, work):
         bids,
         schemes=BID_LIMITED_SCHEMES,
         initial_saved_work=work / 3.0,
+    )
+    assert_parity(sc)
+
+
+adapt_intervals = st.integers(min_value=120, max_value=2 * 3600).map(float)
+
+
+@given(traces(), bid_grids(), works, t_cs, t_rs, adapt_intervals)
+@settings(max_examples=25, deadline=None)
+def test_batched_adapt_equals_reference(trace, bids, work, t_c, t_r, interval):
+    """The binned-hazard ADAPT kernel vs the scalar decision loop, with the
+    decision cadence free to land on / off the 60 s survival-bin grid."""
+    sc = Scenario.from_trace(
+        trace,
+        work,
+        bids,
+        schemes=(Scheme.ADAPT,),
+        params=SimParams(t_c=t_c, t_r=t_r, adapt_interval_s=interval),
     )
     assert_parity(sc)
