@@ -1,27 +1,37 @@
-"""Engine throughput: reference (scalar) vs batch (SoA NumPy) vs jax backends.
+"""Engine throughput: reference (scalar) vs batch (SoA NumPy) vs jax/pallas.
 
 Usage::
 
-    PYTHONPATH=src python benchmarks/engine_bench.py --quick [--min-speedup 10]
+    PYTHONPATH=src python benchmarks/engine_bench.py --quick \
+        [--min-speedup 10] [--require-jax-ge-batch] [--profile] [--pallas]
 
 Evaluates the §VII-style grid on every available backend, verifies exact
-cross-backend parity on every cell, and writes ``BENCH_engine.json``
-(cells/sec and speedup per backend).  The scheme set is every bid-limited
-scheme — **ADAPT included**, now that its binned-hazard decision runs in
-lockstep — so the sweeps the paper's headline figures need are the ones being
-gated.  ``--quick`` runs the acceptance grid — 32 instance types x 11 bids x
-5 schemes x 4 seeds — in seconds; the full grid covers the whole 64-type
-catalog at the paper's 41-bid resolution.  ``--min-speedup`` turns
-the run into a CI gate: exit non-zero when the batch backend falls below the
-given multiple of the reference throughput.
+cross-backend parity on every cell, and writes ``BENCH_engine.json`` (one
+``backends`` map: wall time, cells/sec and speedup per backend).  The scheme
+set is every bid-limited scheme — **ADAPT included** — so the sweeps the
+paper's headline figures need are the ones being gated.  ``--quick`` runs the
+acceptance grid — 32 instance types x 11 bids x 5 schemes x 4 seeds — in
+seconds; the full grid covers the whole 64-type catalog at the paper's 41-bid
+resolution.
+
+CI gates: ``--min-speedup`` fails the run when the batch backend drops below
+the given multiple of reference throughput; ``--require-jax-ge-batch`` fails
+it when the one-compile jax program does not at least match the batch
+backend's speedup.
+
+``--profile`` prints each array backend's phase breakdown (grid build,
+per-scheme simulation vs billing) from ``EngineResult.timings``.
 
 The jax backend is benchmarked when jax is importable (skipped otherwise, or
-with ``--skip-jax``).  Every candidate backend gets one untimed warm-up run
-(allocator pools, jit compilation) before ``--repeats`` timed runs, of which
-the fastest is reported — the gate measures steady-state throughput, not
-cold-start noise.  Wall times are simulation-only (all backends share
-identical trace materialization, which is excluded by
-``EngineResult.wall_s``).
+with ``--skip-jax``).  The Pallas sweep kernel gets a ``pallas`` row when
+``--pallas`` asks for it (interpreter mode — exact, but far too slow for the
+CI grid, hence opt-in; its CI coverage is the interpret-mode parity suite in
+``tests/kernels/test_spot_sweep.py``).  Every candidate
+backend gets one untimed warm-up run (allocator pools, jit compilation)
+before ``--repeats`` timed runs, of which the fastest is reported — the gates
+measure steady-state throughput, not cold-start noise.  Wall times are
+simulation-only (all backends share identical trace materialization, which is
+excluded by ``EngineResult.wall_s``).
 """
 
 from __future__ import annotations
@@ -71,6 +81,24 @@ def full_scenario() -> Scenario:
     )
 
 
+def print_profile(name: str, timings: dict | None) -> None:
+    """Render an array backend's phase breakdown (sim vs billing)."""
+    if not timings:
+        print(f"  [{name}] no timings recorded")
+        return
+    parts = [f"grid={timings.get('grid_s', 0.0) * 1e3:.1f}ms"]
+    if "impl" in timings:
+        parts.append(f"impl={timings['impl']}")
+    if "sim_s" in timings:  # fused device program: one sim phase, all schemes
+        parts.append(f"sim(all schemes)={timings['sim_s'] * 1e3:.1f}ms")
+    if "scalar_s" in timings:
+        parts.append(f"scalar_fill={timings['scalar_s'] * 1e3:.1f}ms")
+    print(f"  [{name}] " + "  ".join(parts))
+    for scheme, t in timings.get("per_scheme", {}).items():
+        cols = "  ".join(f"{k.removesuffix('_s')}={v * 1e3:7.1f}ms" for k, v in t.items())
+        print(f"  [{name}]   {scheme:6s} {cols}")
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="acceptance-sized grid (CI)")
@@ -80,13 +108,36 @@ def main(argv: list[str] | None = None) -> int:
         default=None,
         help="fail unless the batch backend >= this multiple of reference throughput",
     )
+    ap.add_argument(
+        "--require-jax-ge-batch",
+        action="store_true",
+        help="fail unless the jax backend's speedup >= the batch backend's",
+    )
+    ap.add_argument(
+        "--jax-ge-batch-tol",
+        type=float,
+        default=0.95,
+        help="scheduling-jitter allowance for the relative gate: fail only "
+        "when jax < TOL * batch (the reported speedups stay unadjusted)",
+    )
     ap.add_argument("--skip-jax", action="store_true", help="do not benchmark the jax backend")
+    ap.add_argument(
+        "--pallas",
+        action="store_true",
+        help="benchmark the Pallas sweep kernel (interpreter mode: exact but "
+        "very slow — use a small grid)",
+    )
+    ap.add_argument(
+        "--profile",
+        action="store_true",
+        help="print per-scheme and per-phase (sim vs billing) timing breakdowns",
+    )
     ap.add_argument(
         "--repeats",
         type=int,
         default=2,
         help="runs per backend; the fastest is reported (amortizes allocator "
-        "and jit warm-up so the CI gate measures steady-state throughput)",
+        "and jit warm-up so the CI gates measure steady-state throughput)",
     )
     ap.add_argument(
         "--out", default="BENCH_engine.json", help="where to write the benchmark record"
@@ -107,6 +158,11 @@ def main(argv: list[str] | None = None) -> int:
     backends = ["batch"]
     if not args.skip_jax and have_jax():
         backends.append("jax")
+        if args.pallas:
+            backends.append("pallas")
+    elif args.pallas:
+        print("FAIL: --pallas needs jax available and not --skip-jax")
+        return 2
 
     record = {
         "grid": {
@@ -149,20 +205,28 @@ def main(argv: list[str] | None = None) -> int:
             f"{name + ':':10s} {res.wall_s:8.3f}s  ({res.cells_per_s:9.0f} cells/s)"
             f"  {speedups[name]:6.1f}x  (parity: exact on {res.n_cells} cells)"
         )
-
-    # legacy top-level fields (the CI gate and older tooling read these)
-    record["reference"] = record["backends"]["reference"]
-    record["batch"] = record["backends"]["batch"]
-    record["speedup"] = speedups["batch"]
+        if args.profile:
+            print_profile(name, res.timings)
 
     out = pathlib.Path(args.out)
     out.write_text(json.dumps(record, indent=2) + "\n")
     print(f"wrote {out}")
 
+    rc = 0
     if args.min_speedup is not None and speedups["batch"] < args.min_speedup:
         print(f"FAIL: batch speedup {speedups['batch']:.1f}x below required {args.min_speedup:.1f}x")
-        return 1
-    return 0
+        rc = 1
+    if args.require_jax_ge_batch:
+        if "jax" not in speedups:
+            print("FAIL: --require-jax-ge-batch but the jax backend was not benchmarked")
+            rc = 1
+        elif speedups["jax"] < args.jax_ge_batch_tol * speedups["batch"]:
+            print(
+                f"FAIL: jax speedup {speedups['jax']:.1f}x below "
+                f"{args.jax_ge_batch_tol:.2f} x batch ({speedups['batch']:.1f}x)"
+            )
+            rc = 1
+    return rc
 
 
 if __name__ == "__main__":

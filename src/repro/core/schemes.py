@@ -133,12 +133,20 @@ class FailurePdf:
         of mass.  This is what the batch/jax ADAPT kernels pack per (market,
         bid) cell — a 7-day pdf compresses from 10081 entries to the observed
         failure range.
+
+        Cached per pdf like :meth:`survival_table`: every consumer in one
+        process (scalar ADAPT, provisioning, the engine backends' decision
+        tables) shares the same array object.
         """
-        tab = self.survival_table()
-        K = len(self.pdf)
-        nz = np.nonzero(self.pdf)[0]
-        top = int(min(nz[-1] + 1 if nz.size else 0, K - 1))
-        return np.concatenate([tab[: top + 1], [self.censored]]), top
+        cached = getattr(self, "_compact_survival", None)
+        if cached is None:
+            tab = self.survival_table()
+            K = len(self.pdf)
+            nz = np.nonzero(self.pdf)[0]
+            top = int(min(nz[-1] + 1 if nz.size else 0, K - 1))
+            cached = np.concatenate([tab[: top + 1], [self.censored]]), top
+            object.__setattr__(self, "_compact_survival", cached)  # frozen-safe
+        return cached
 
     def survival(self, age_s: float) -> float:
         """P(period lasts longer than ``age_s``)."""

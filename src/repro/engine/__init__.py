@@ -13,9 +13,15 @@ interchangeable engine backend:
     included, its hazard decision precomputed into binned survival tables —
     bit-identical to the reference (see :mod:`repro.engine.parity`); only
     ACC cells fall back to the scalar path.
-  * :class:`JaxEngine` — the same pure kernels (:mod:`repro.engine.kernels`)
-    jit-compiled under ``lax.scan`` on ``jax.numpy`` with x64; explicit
-    opt-in via ``engine="jax"``, same exact-parity contract.
+  * :class:`JaxEngine` — the fused spot-sweep program
+    (:mod:`repro.kernels.spot_sweep`): every scheme in **one** jit-compiled
+    ``lax.scan``/``lax.while_loop`` program on ``jax.numpy`` with x64,
+    billing inputs accumulated on-device; explicit opt-in via
+    ``engine="jax"``, same exact-parity contract, >= batch throughput
+    (CI-gated).
+  * :class:`PallasEngine` — the same step as a fused Pallas TPU kernel
+    (``engine="pallas"``): interpreter mode by default, native compilation
+    an explicit opt-in.
   * :func:`run` / :func:`run_fleet` — the one-call entry points.
 
 Legacy surfaces (``repro.core.simulator.sweep_bids``,
@@ -32,7 +38,7 @@ from repro.engine.base import (
 )
 from repro.engine.batch import BatchEngine
 from repro.engine.fleetgrid import FleetGridResult, policy_registry, resolve_policies, run_fleet
-from repro.engine.jax_backend import JaxEngine, have_jax
+from repro.engine.jax_backend import JaxEngine, PallasEngine, have_jax
 from repro.engine.parity import (
     CellMismatch,
     ParityReport,
@@ -54,6 +60,7 @@ __all__ = [
     "PARITY_FIELDS",
     "BatchEngine",
     "JaxEngine",
+    "PallasEngine",
     "have_jax",
     "CellMismatch",
     "Engine",

@@ -11,9 +11,13 @@ returns an :class:`EngineResult` — per-cell outcome arrays shaped
     ops; bit-identical to the reference on ``cost`` / ``completion_time`` /
     ``n_kills`` / ``n_checkpoints`` (enforced by :mod:`repro.engine.parity`
     and the CI benchmark gate).
-  * :class:`~repro.engine.jax_backend.JaxEngine` — the same kernels jitted
-    under ``lax.scan`` on ``jax.numpy`` with x64; explicit opt-in
-    (``engine="jax"``), same parity contract.
+  * :class:`~repro.engine.jax_backend.JaxEngine` — the fused multi-scheme
+    spot-sweep program (one jit compile for the whole scheme set) on
+    ``jax.numpy`` with x64; explicit opt-in (``engine="jax"``), same parity
+    contract.
+  * :class:`~repro.engine.jax_backend.PallasEngine` — the same step as a
+    fused Pallas TPU kernel (``engine="pallas"``); interpreter mode by
+    default (native TPU compilation is an explicit f32-pending opt-in).
 
 ``run(scenario)`` is the one-call surface; ``engine="auto"`` picks the batch
 backend (which itself falls back to the reference for ACC cells only).
@@ -58,6 +62,9 @@ class EngineResult:
     work_lost_s: np.ndarray  # float64
     wall_s: float = 0.0
     sim_results: dict[tuple[int, int, int], SimResult] | None = None
+    #: phase-timing breakdown (grid build, per-scheme sim vs billing, scalar
+    #: fill) populated by the array backends; ``engine_bench --profile`` view
+    timings: dict | None = None
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -144,13 +151,16 @@ class Engine(Protocol):
 
 
 def get_engine(name: str = "auto") -> Engine:
-    """Resolve an engine by name: ``"reference"``, ``"batch"``, ``"jax"``, or
-    ``"auto"`` (currently the batch backend, which is parity-checked against
-    the reference and falls back to it per-cell for ACC only).
+    """Resolve an engine by name: ``"reference"``, ``"batch"``, ``"jax"``,
+    ``"pallas"`` (the fused Pallas sweep kernel, interpreter mode — exact
+    but slow), or ``"auto"`` (currently the batch backend,
+    which is parity-checked against the reference and falls back to it
+    per-cell for ACC only).
 
-    Backend choice is explicit: ``"jax"`` raises :class:`ImportError` with an
-    install hint when jax is missing rather than silently running on NumPy
-    (the old ``REPRO_ENGINE_XP`` env hack is gone).
+    Backend choice is explicit: ``"jax"`` / ``"pallas"`` raise
+    :class:`ImportError` with an install hint when jax is missing rather
+    than silently running on NumPy (the old ``REPRO_ENGINE_XP`` env hack is
+    gone).
     """
     from repro.engine.batch import BatchEngine
     from repro.engine.reference import ReferenceEngine
@@ -163,7 +173,13 @@ def get_engine(name: str = "auto") -> Engine:
         from repro.engine.jax_backend import JaxEngine
 
         return JaxEngine()
-    raise ValueError(f"unknown engine {name!r}; expected auto|batch|reference|jax")
+    if name == "pallas":
+        from repro.engine.jax_backend import PallasEngine
+
+        return PallasEngine()
+    raise ValueError(
+        f"unknown engine {name!r}; expected auto|batch|reference|jax|pallas"
+    )
 
 
 def run(scenario: Scenario, engine: str | Engine = "auto") -> EngineResult:

@@ -11,7 +11,12 @@ over the whole grid.
 The per-scheme math lives in :mod:`repro.engine.kernels` as pure functions
 that take their array namespace as an argument; this module owns the NumPy
 driver — the period grid, the compressed active-cell bookkeeping, and the
-vectorized billing.  ADAPT's per-step hazard decision is precomputed into
+fully vectorized billing (runs sorted by (cell, period), ``np.add.at``
+accumulating the scalar's chronological cost sums bit-exactly — no
+per-period host loop).  The period grid and ADAPT tables are cached per
+scenario object (:func:`grid_and_tables`) and shared by every array backend
+in the process; this driver doubles as the ``impl="ref"`` path of the
+:mod:`repro.kernels.spot_sweep` triad.  ADAPT's per-step hazard decision is precomputed into
 binned survival tables per (market, bid) cell (:class:`AdaptTables`), so it
 advances in lockstep like the other schemes instead of falling back to the
 scalar loop.  Only ACC — a different control loop entirely (bid-unlimited
@@ -26,6 +31,7 @@ scalar reference is asserted ``==``, not ``allclose``.
 from __future__ import annotations
 
 import time
+import weakref
 
 import numpy as np
 
@@ -40,32 +46,60 @@ from repro.engine.kernels import (
 )
 from repro.engine.scenario import BATCHED_SCHEMES, MarketCell, Scenario
 
+#: Per-scenario cache of the derived simulation inputs (period grid, ADAPT
+#: decision tables) shared by *every* array backend in the process: running
+#: the same Scenario object on batch, then jax, then pallas builds the grid
+#: and tables exactly once.  Keys are weak — the cache dies with the scenario.
+_SCENARIO_CACHE: "weakref.WeakKeyDictionary[Scenario, dict]" = weakref.WeakKeyDictionary()
 
-def run_batched(scenario: Scenario, engine_name: str, run_scheme) -> EngineResult:
-    """Shared driver for the array backends (batch and jax).
+
+def grid_and_tables(
+    scenario: Scenario, markets: list[MarketCell], need_adapt: bool
+) -> tuple["_PeriodGrid", AdaptTables | None]:
+    """The (cached) period grid + ADAPT tables for a scenario.
+
+    Both are pure functions of the scenario (materialization is
+    deterministic), so one build serves every backend and every re-run in the
+    process."""
+    entry = _SCENARIO_CACHE.setdefault(scenario, {})
+    if "grid" not in entry:
+        entry["grid"] = _PeriodGrid.build(markets, scenario)
+    if need_adapt and "tables" not in entry:
+        entry["tables"] = AdaptTables.build(markets, scenario, entry["grid"])
+    return entry["grid"], entry.get("tables")
+
+
+def run_batched(scenario: Scenario, engine_name: str, run_schemes) -> EngineResult:
+    """Shared driver for the array backends (batch, jax, pallas).
 
     Materializes the market, splits schemes into the batched set and the
-    scalar fallback (ACC only), builds the period grid + ADAPT decision
-    tables once, dispatches each batched scheme to ``run_scheme(scheme, grid,
-    scenario, adapt_tables)``, and scalar-fills the rest — so the two
-    backends can never drift in their orchestration, only in their kernels.
+    scalar fallback (ACC only), resolves the cached period grid + ADAPT
+    decision tables, dispatches the whole batched set to
+    ``run_schemes(schemes, grid, scenario, adapt_tables)`` — one call, so a
+    backend may evaluate every scheme in a single compiled program — and
+    scalar-fills the rest.  The backends can never drift in their
+    orchestration, only in their kernels.
+
+    ``run_schemes`` returns ``(outs, timings)``: per-scheme output dicts plus
+    a free-form phase-timing dict merged into ``EngineResult.timings``.
     """
     markets = scenario.materialize()
     t0 = time.perf_counter()  # wall_s measures simulation, not trace gen
     res = empty_result(scenario, markets, engine_name)
+    timings: dict = {}
 
     batched = [s for s in scenario.schemes if s in BATCHED_SCHEMES]
     fallback = [s for s in scenario.schemes if s not in BATCHED_SCHEMES]
 
     if batched:
-        grid = _PeriodGrid.build(markets, scenario)
-        adapt_tables = (
-            AdaptTables.build(markets, scenario, grid) if Scheme.ADAPT in batched else None
-        )
-        for scheme in batched:
-            out = run_scheme(scheme, grid, scenario, adapt_tables)
+        tg = time.perf_counter()
+        grid, adapt_tables = grid_and_tables(scenario, markets, Scheme.ADAPT in batched)
+        timings["grid_s"] = time.perf_counter() - tg
+        outs, sub = run_schemes(tuple(batched), grid, scenario, adapt_tables)
+        timings.update(sub)
+        M, B = len(markets), len(scenario.bids)
+        for scheme, out in outs.items():
             s = scenario.schemes.index(scheme)
-            M, B = len(markets), len(scenario.bids)
             res.completed[:, :, s] = out["completed"].reshape(M, B)
             res.completion_time[:, :, s] = out["completion_time"].reshape(M, B)
             res.cost[:, :, s] = out["cost"].reshape(M, B)
@@ -78,10 +112,28 @@ def run_batched(scenario: Scenario, engine_name: str, run_scheme) -> EngineResul
         # on the scalar path shared with ReferenceEngine, never drifting
         from repro.engine.reference import scalar_fill
 
+        ts = time.perf_counter()
         scalar_fill(scenario, markets, res, fallback)
+        timings["scalar_s"] = time.perf_counter() - ts
 
     res.wall_s = time.perf_counter() - t0
+    res.timings = timings
     return res
+
+
+def run_schemes_numpy(schemes, grid, scenario, adapt_tables):
+    """NumPy evaluation of a batched scheme set, one driver pass per scheme.
+    Also the ``impl="ref"`` path of the ``spot_sweep`` kernel triad."""
+    outs: dict[Scheme, dict] = {}
+    per_scheme: dict[str, dict] = {}
+    for scheme in schemes:
+        ts = time.perf_counter()
+        out = _run_scheme(scheme, grid, scenario, adapt_tables)
+        total = time.perf_counter() - ts
+        bill = out.pop("bill_s")
+        per_scheme[scheme.value] = {"sim_s": total - bill, "bill_s": bill}
+        outs[scheme] = out
+    return outs, {"per_scheme": per_scheme}
 
 
 class BatchEngine:
@@ -92,7 +144,7 @@ class BatchEngine:
     name = "batch"
 
     def run(self, scenario: Scenario) -> EngineResult:
-        return run_batched(scenario, self.name, _run_scheme)
+        return run_batched(scenario, self.name, run_schemes_numpy)
 
 
 # ---------------------------------------------------------------------------
@@ -307,6 +359,7 @@ def _run_scheme(
                 work_lost[kl_idx] += work_end[kl] - saved_out[kl]
                 saved[kl_idx] = saved_out[kl]
 
+    tb = time.perf_counter()
     total, n_kills = _bill_runs(grid, runs, delta)
 
     return {
@@ -316,6 +369,7 @@ def _run_scheme(
         "n_checkpoints": n_ckpt,
         "n_kills": n_kills,
         "work_lost_s": work_lost,
+        "bill_s": time.perf_counter() - tb,
     }
 
 
@@ -334,12 +388,12 @@ def _run_adapt(
     the per-period tick *maximum summed over the padded period axis*), each
     cell here advances its own ``(period, tick)`` cursor, so the loop runs
     for the busiest single cell's tick total — ~5x fewer iterations on
-    catalog grids.  The per-tick float expressions are
-    :func:`repro.engine.kernels.adapt_decision` and the same masked updates
-    as :func:`~repro.engine.kernels.adapt_tick`, so results stay bit-identical
-    to the scalar reference.  The active set is compacted as cells finish.
+    catalog grids.  The per-tick math is the one shared body
+    :func:`repro.engine.kernels.adapt_tick_core`, so results stay
+    bit-identical to the scalar reference.  The active set is compacted as
+    cells finish.
     """
-    from repro.engine.kernels import adapt_decision
+    from repro.engine.kernels import adapt_tick_core
 
     params = scenario.params
     work_s = scenario.work_s
@@ -416,36 +470,20 @@ def _run_adapt(
             if not live.any():
                 continue
 
-            # -- one decision tick (mirrors kernels.adapt_tick / the scalar)
-            seg_end = np.minimum(next_dec, b_cur)
-            fin = live & (work + (seg_end - t) >= work_s - _EPS)
+            # -- one decision tick (kernels.adapt_tick_core, the shared body)
+            live, t, work, sv, next_dec, d_at, fin, ck, kl = adapt_tick_core(
+                np, live, t, work, sv, next_dec, a_cur, b_cur, work_s, t_c,
+                t_r, interval, tables.flat, off, top, tables.bin_s, tables.n_bins,
+            )
             if fin.any():
-                d_at = t + (work_s - work)
                 rows = idx[fin]
                 comp_time[rows] = d_at[fin]
                 done[rows] = True
                 record(p[fin], rows, a_cur[fin], d_at[fin], True)
                 alive &= ~fin
-                live &= ~fin
-            work = np.where(live, work + (seg_end - t), work)
-            t = np.where(live, seg_end, t)
-            kill1 = live & (t >= b_cur)
-            live &= ~kill1
-            age = t - a_cur
-            take = live & adapt_decision(
-                np, age, work - sv, tables.flat, off, top,
-                tables.bin_s, tables.n_bins, t_c, t_r, interval,
-            )
-            ck = take & ((t + t_c) <= (b_cur + _EPS))
             if ck.any():
-                sv = np.where(ck, work, sv)
                 n_ckpt[idx[ck]] += 1
-            t = np.where(take, np.minimum(t + t_c, b_cur), t)
-            kill2 = take & (t >= b_cur)
-            live &= ~kill2
-            next_dec = np.where(live, t + interval, next_dec)
 
-            kl = kill1 | kill2
             if kl.any():
                 rows = idx[kl]
                 record(p[kl], rows, a_cur[kl], b_cur[kl], False)
@@ -465,6 +503,7 @@ def _run_adapt(
                 alive = np.ones(na, dtype=bool)
                 N = na
 
+    tb = time.perf_counter()
     if Rc:
         total, n_kills = _bill_runs_flat(
             grid,
@@ -485,6 +524,7 @@ def _run_adapt(
         "n_checkpoints": n_ckpt,
         "n_kills": n_kills,
         "work_lost_s": work_lost,
+        "bill_s": time.perf_counter() - tb,
     }
 
 
@@ -536,7 +576,7 @@ def _bill_runs_flat(
     r in runs)`` produces.  Also derives ``n_kills`` (non-user-terminated
     recorded runs, exactly the scalar count).
     """
-    C, P = grid.A.shape
+    C = grid.A.shape[0]
     total = np.zeros(C)
     n_kills = np.zeros(C, dtype=np.int64)
     if len(cells) == 0:
@@ -569,12 +609,11 @@ def _bill_runs_flat(
         run_cost[sel] = rc
 
     np.add.at(n_kills, cells[~user], 1)
-    # a cell records at most one run per period, so scattering into (C, P)
-    # and sweeping columns ascending reproduces per-cell chronological order
-    cost_mat = np.zeros((C, P))
-    exists = np.zeros((C, P), dtype=bool)
-    cost_mat[cells, p_all] = run_cost
-    exists[cells, p_all] = True
-    for p in np.unique(p_all):
-        total = total + np.where(exists[:, p], cost_mat[:, p], 0.0)
+    # a cell records at most one run per period, so sorting runs by (cell,
+    # period) and letting np.add.at accumulate sequentially in that order
+    # reproduces each cell's chronological left-to-right cost sum exactly
+    # (run costs are >= 0.0, so dropping the old scatter's x + 0.0 adds for
+    # run-less periods changes no bit) — one segment op, no per-period loop
+    order = np.lexsort((p_all, cells))
+    np.add.at(total, cells[order], run_cost[order])
     return total, n_kills

@@ -1,37 +1,36 @@
-"""JAX backend: jit-compiled lockstep kernels on the (type × bid × seed) grid.
+"""JAX backends: the fused spot-sweep programs on the (type × bid × seed) grid.
 
-:class:`JaxEngine` evaluates every batched scheme as one ``jax.jit``-compiled
-program per scheme: ``lax.scan`` walks the padded period axis (the outer loop
-of the NumPy driver in :mod:`repro.engine.batch`), ``lax.while_loop`` walks
-checkpoint windows / ADAPT decision ticks within each period, and every cell
-of the flattened ``(market, bid)`` axis advances in lockstep as a vectorized
-array row — the grid dimension is carried by the arrays themselves, exactly
-as a ``vmap`` over cells would lay them out, with no Python in the hot loop.
+:class:`JaxEngine` evaluates every batched scheme of a scenario as **one**
+jit-compiled program: the multi-scheme ``lax.scan`` built by
+:mod:`repro.kernels.spot_sweep` walks the padded period axis once, advancing
+each scheme's state segment inside the same period step (scheme is a static
+segment axis of the trace, not five separate jits), with
+``lax.while_loop`` for checkpoint-window / ADAPT decision ticks.  The
+billing inputs — per-period run records and the ``n_kills`` tally —
+accumulate on-device in the scan carry/ys; the host only folds the records
+through the vectorized NumPy biller shared with
+:class:`~repro.engine.batch.BatchEngine`.
+
+:class:`PallasEngine` runs the same step as the fused Pallas kernel
+(``repro.kernels.spot_sweep.kernel.sweep_pallas``) in interpreter mode — the
+exact-parity configuration; native TPU compilation is an explicit opt-in
+(``interpret=False``) pending the f32 variant.
 
 The per-step float expressions are the shared pure kernels of
 :mod:`repro.engine.kernels` called with ``xp=jax.numpy`` (x64 enabled):
-elementwise float64 ops are IEEE-exact on CPU, so the jitted program produces
-the same bit patterns as the NumPy driver and the scalar reference, and
-:mod:`repro.engine.parity` asserts ``==`` across all three.  Period-grid
-construction and billing are host-side NumPy shared with
-:class:`~repro.engine.batch.BatchEngine` (billing is trace bookkeeping, not
-simulation math); ACC cells run on the scalar path, as everywhere.
+elementwise float64 ops are IEEE-exact on CPU, so every program produces the
+same bit patterns as the NumPy driver and the scalar reference, and
+:mod:`repro.engine.parity` asserts ``==`` across all of them.
 
-Backend selection is explicit: ``run(scenario, engine="jax")`` /
-``get_engine("jax")``.  A missing JAX raises :class:`ImportError` with an
-install hint instead of silently changing substrates (the old
-``REPRO_ENGINE_XP`` env hack is gone).
+Backend selection is explicit: ``run(scenario, engine="jax" | "pallas")`` /
+``get_engine(...)``.  A missing JAX raises :class:`ImportError` with an
+install hint instead of silently changing substrates.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.schemes import Scheme
-from repro.engine import kernels as _k
 from repro.engine.base import EngineResult
-from repro.engine.batch import _bill_runs, _PeriodGrid, run_batched
-from repro.engine.kernels import _EPS, AdaptTables
+from repro.engine.batch import run_batched
 from repro.engine.scenario import Scenario
 
 
@@ -59,263 +58,45 @@ def _require_jax():
 
 
 class JaxEngine:
-    """jit + ``lax.scan`` evaluation; bit-identical to the reference/batch
-    backends on cost / completion_time / n_kills / n_checkpoints for every
-    batched scheme.  Compiled programs are cached per scheme (and re-used
-    across scenarios of the same grid shape by JAX's trace cache)."""
+    """One-compile multi-scheme evaluation; bit-identical to the
+    reference/batch backends on cost / completion_time / n_kills /
+    n_checkpoints for every batched scheme.  The compiled program is cached
+    per scheme set (module-level, shared by every engine instance in the
+    process) and keyed only on grid *shape* — re-running a same-shape
+    scenario never retraces (``tests/engine/test_engine_caches.py`` spies on
+    the trace count)."""
 
     name = "jax"
+    #: which spot_sweep implementation this engine requests
+    impl: str = "scan"
 
     def __init__(self):
         self._jax, self._jnp, self._lax = _require_jax()
-        self._fns: dict[str, object] = {}
 
     def run(self, scenario: Scenario) -> EngineResult:
-        return run_batched(scenario, self.name, self._run_scheme)
+        return run_batched(scenario, self.name, self._run_schemes)
 
-    # -- compiled per-scheme programs ---------------------------------------
+    def _run_schemes(self, schemes, grid, scenario, adapt_tables):
+        from repro.kernels.spot_sweep import ops as sweep_ops
 
-    def _fn(self, scheme: Scheme):
-        if scheme.value not in self._fns:
-            self._fns[scheme.value] = self._jax.jit(
-                _build_scheme_fn(scheme, self._jnp, self._lax)
-            )
-        return self._fns[scheme.value]
-
-    def _run_scheme(
-        self,
-        scheme: Scheme,
-        grid: _PeriodGrid,
-        scenario: Scenario,
-        adapt_tables: AdaptTables | None,
-    ) -> dict[str, np.ndarray]:
-        jnp = self._jnp
-        params = scenario.params
-        C, P = grid.A.shape
-        base = dict(
-            A_T=jnp.asarray(grid.A.T),
-            B_T=jnp.asarray(grid.B.T),
-            valid_T=jnp.asarray(grid.valid.T),
-            horizon=jnp.asarray(grid.horizon),
-            init_saved=float(scenario.initial_saved_work),
-            work_s=float(scenario.work_s),
-            t_c=float(params.t_c),
-            t_r=float(params.t_r),
-        )
-        if scheme == Scheme.HOUR:
-            base["hour_delta"] = float(params.billing_period_s)
-        elif scheme == Scheme.EDGE:
-            flat, base_m, n_m = grid.edges()
-            m_of = np.arange(C) // grid.n_bids
-            base["edges_flat"] = jnp.asarray(flat)
-            base["edge_base"] = jnp.asarray(base_m[m_of])
-            base["edge_n"] = jnp.asarray(n_m[m_of])
-            base["ptr0_T"] = jnp.asarray(grid.edge_ptr0(params.t_r).T)
-        elif scheme == Scheme.ADAPT:
-            base["interval"] = float(params.adapt_interval_s)
-            base["tab_flat"] = jnp.asarray(adapt_tables.flat)
-            base["tab_off"] = jnp.asarray(adapt_tables.off)
-            base["tab_top"] = jnp.asarray(adapt_tables.top)
-            base["bin_s"] = float(adapt_tables.bin_s)
-            base["n_bins"] = int(adapt_tables.n_bins)
-
-        carry, recs = self._fn(scheme)(**base)
-        saved, done, comp_time, n_ckpt, work_lost, _ = (np.asarray(x) for x in carry)
-        exists, end, user = (np.asarray(x) for x in recs)
-
-        # fold the scan's per-period run records into the shared NumPy biller
-        runs: list[tuple[int, np.ndarray, np.ndarray, np.ndarray, bool]] = []
-        for p in range(P):
-            ex = exists[p]
-            if not ex.any():
-                continue
-            for flag in (True, False):
-                sel = ex & (user[p] == flag)
-                if sel.any():
-                    idx = np.nonzero(sel)[0]
-                    runs.append((p, idx, grid.A[idx, p], end[p, idx], flag))
-        total, n_kills = _bill_runs(grid, runs, params.billing_period_s)
-
-        return {
-            "completed": done & np.isfinite(comp_time),
-            "completion_time": comp_time,
-            "cost": total,
-            "n_checkpoints": n_ckpt,
-            "n_kills": n_kills,
-            "work_lost_s": work_lost,
-        }
-
-
-# ---------------------------------------------------------------------------
-# Traced program builders — lax.scan over periods, while_loop within
-# ---------------------------------------------------------------------------
-
-
-def _build_scheme_fn(scheme: Scheme, jnp, lax):
-    """Build the traced ``(carry, records) = f(grid arrays...)`` program for
-    one scheme.  Mirrors ``repro.engine.batch._run_scheme`` with masks in
-    place of index compression (the masked lanes cost nothing under vmap-style
-    array execution, and compression would make shapes dynamic)."""
-
-    def windows_kernel(go, a, b, start_work, saved, work_s, t_c, hour_args, edge_args):
-        C = b.shape[0]
-        done_at0 = jnp.full(C, np.nan)
-        ckpt0 = jnp.zeros(C, dtype=jnp.int64)
-        false = jnp.zeros(C, dtype=bool)
-        if edge_args is None:
-            (hour_delta,) = hour_args
-            cursor0 = jnp.asarray(1, dtype=jnp.int64)  # window index k
-        else:
-            edges_flat, base, n_edges, ptr0 = edge_args
-            cursor0 = ptr0
-
-        def cond(st):
-            return jnp.any(st[0][6])  # state.in_loop
-
-        def body(st):
-            (work, t, sv, done_now, done_at, ckpt_add, in_loop), tail, cursor = st
-            if edge_args is None:
-                s = a + cursor * hour_delta - t_c
-                no_more = in_loop & ~(s < b)
-                window = in_loop & (s < b) & (s > start_work)
-                # s <= start_work windows are skipped but the walk continues
-            else:
-                have = in_loop & (cursor < n_edges)
-                idx = jnp.where(have, base + cursor, 0)
-                s = jnp.where(have, edges_flat[idx], np.inf)
-                no_more = in_loop & (~have | ~(s < b))
-                window = in_loop & have & (s < b)
-            tail = tail | no_more
-            in_loop = in_loop & ~no_more
-            state = (work, t, sv, done_now, done_at, ckpt_add, in_loop)
-            window, state = _k.windows_advance(jnp, s, window, state, work_s, t_c, b)
-            cursor = cursor + 1 if edge_args is None else cursor + window
-            return state, tail, cursor
-
-        init = ((saved, start_work, saved, false, done_at0, ckpt0, go), false, cursor0)
-        (work, t, sv, done_now, done_at, ckpt_add, _), tail, _ = lax.while_loop(
-            cond, body, init
-        )
-        # tail segment: work to b, maybe completing
-        lhs = work + (b - t)
-        d2 = tail & (lhs >= (work_s - _EPS))
-        done_now = done_now | d2
-        done_at = jnp.where(d2, t + (work_s - work), done_at)
-        work_end = jnp.where(tail, lhs, work)
-        return done_now, done_at, work_end, sv, ckpt_add
-
-    def adapt_kernel(go, a, b, start_work, saved, work_s, t_c, t_r, adapt_args):
-        interval, flat, off, top, bin_s, n_bins = adapt_args
-        C = b.shape[0]
-        init = (
-            go,  # in_loop
-            start_work,  # t
-            saved,  # work
-            saved,  # sv
-            start_work + interval,  # next_dec
-            jnp.zeros(C, dtype=bool),  # done_now
-            jnp.full(C, np.nan),  # done_at
-            jnp.zeros(C, dtype=jnp.int64),  # ckpt_add
+        return sweep_ops.spot_sweep_grid(
+            schemes, grid, scenario, adapt_tables, impl=self.impl
         )
 
-        def cond(state):
-            return jnp.any(state[0])
 
-        def body(state):
-            return _k.adapt_tick(
-                jnp, state, a, b, work_s, t_c, t_r, interval,
-                flat, off, top, bin_s, n_bins,
-            )
+class PallasEngine(JaxEngine):
+    """The fused Pallas lockstep kernel as an engine backend.
 
-        _, _, work, sv, _, done_now, done_at, ckpt_add = lax.while_loop(cond, body, init)
-        return done_now, done_at, work, sv, ckpt_add
+    Interpreter mode (``interpret=True``, the default) is the supported
+    configuration: exact, but orders of magnitude slower than the jitted
+    scan, so it is meant for parity verification and kernel development, not
+    throughput.  Passing ``interpret=False`` compiles the kernel natively —
+    an explicit opt-in for TPU experimentation, because the float64 parity
+    substrate does not lower through Mosaic (a real TPU deployment needs the
+    f32 variant tracked in ROADMAP.md)."""
 
-    def fn(
-        A_T,
-        B_T,
-        valid_T,
-        horizon,
-        init_saved,
-        work_s,
-        t_c,
-        t_r,
-        hour_delta=None,
-        edges_flat=None,
-        edge_base=None,
-        edge_n=None,
-        ptr0_T=None,
-        interval=None,
-        tab_flat=None,
-        tab_off=None,
-        tab_top=None,
-        bin_s=None,
-        n_bins=None,
-    ):
-        C = horizon.shape[0]
-        none_reset = scheme == Scheme.NONE
+    name = "pallas"
 
-        def period_step(carry, xs):
-            saved, done, comp_time, n_ckpt, work_lost, has_run = carry
-            if scheme == Scheme.EDGE:
-                a, b, valid, ptr0 = xs
-            else:
-                a, b, valid = xs
-            act = valid & ~done
-            start_work = a + t_r
-            if none_reset:
-                # NONE restarts from scratch after any recorded run
-                saved = jnp.where(act & has_run, 0.0, saved)
-
-            short = act & (start_work >= b)
-            shortk = short & (b < horizon)
-            go = act & ~short
-
-            if scheme == Scheme.NONE:
-                out = _k._kernel_none(jnp, b, start_work, saved, work_s)
-            elif scheme == Scheme.OPT:
-                out = _k._kernel_opt(jnp, b, start_work, saved, work_s, t_c)
-            elif scheme == Scheme.HOUR:
-                out = windows_kernel(
-                    go, a, b, start_work, saved, work_s, t_c, (hour_delta,), None
-                )
-            elif scheme == Scheme.EDGE:
-                out = windows_kernel(
-                    go, a, b, start_work, saved, work_s, t_c, None,
-                    (edges_flat, edge_base, edge_n, ptr0),
-                )
-            else:  # ADAPT
-                out = adapt_kernel(
-                    go, a, b, start_work, saved, work_s, t_c, t_r,
-                    (interval, tab_flat, tab_off, tab_top, bin_s, n_bins),
-                )
-            done_now, done_at, work_end, saved_out, ckpt_add = out
-            done_now = go & done_now
-
-            n_ckpt = n_ckpt + jnp.where(go, ckpt_add, 0)
-            comp_time = jnp.where(done_now, done_at, comp_time)
-            done = done | done_now
-            kl = go & ~done_now
-            if none_reset:
-                work_lost = jnp.where(kl, work_lost + (work_end - 0.0), work_lost)
-                has_run = has_run | shortk | kl
-            else:
-                work_lost = jnp.where(kl, work_lost + (work_end - saved_out), work_lost)
-                saved = jnp.where(kl, saved_out, saved)
-
-            rec_exists = shortk | done_now | kl
-            rec_end = jnp.where(done_now, done_at, b)
-            carry = (saved, done, comp_time, n_ckpt, work_lost, has_run)
-            return carry, (rec_exists, rec_end, done_now)
-
-        init = (
-            jnp.full(C, init_saved),  # saved
-            jnp.zeros(C, dtype=bool),  # done
-            jnp.full(C, np.inf),  # comp_time
-            jnp.zeros(C, dtype=jnp.int64),  # n_ckpt
-            jnp.zeros(C),  # work_lost
-            jnp.zeros(C, dtype=bool),  # has_run (NONE)
-        )
-        xs = (A_T, B_T, valid_T) + ((ptr0_T,) if scheme == Scheme.EDGE else ())
-        return lax.scan(period_step, init, xs)
-
-    return fn
+    def __init__(self, interpret: bool = True):
+        super().__init__()
+        self.impl = "interpret" if interpret else "pallas"

@@ -30,7 +30,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.schemes import FailurePdf
+from repro.core.schemes import FailurePdf, Scheme
 from repro.core.simulator import _EPS
 
 __all__ = [
@@ -42,6 +42,8 @@ __all__ = [
     "_kernel_windows",
     "adapt_decision",
     "adapt_tick",
+    "adapt_tick_core",
+    "period_step_masked",
     "windows_advance",
 ]
 
@@ -99,6 +101,58 @@ def _kernel_opt(xp, b, start_work, saved, work_s, t_c):
     saved_out = xp.where(has_s & ~doneA1, saved1, saved)
     ckpt_add = (has_s & ~doneA1 & ckpt_ok).astype(xp.int64)
     return done_now, done_at, work_end, saved_out, ckpt_add
+
+
+def period_step_masked(xp, scheme, state, a, b, valid, horizon, t_r, run_kernel):
+    """One padded-period lockstep advance with *masks* in place of the NumPy
+    driver's index compression (masked lanes cost nothing under vmap-style
+    array execution, and compression would make traced shapes dynamic).
+
+    The shared per-period orchestration of the fused sweep programs (the
+    jitted ``lax.scan`` and the Pallas kernel in
+    :mod:`repro.kernels.spot_sweep`): enter the period, consume too-short
+    availability windows, dispatch the scheme kernel via ``run_kernel(go, a,
+    b, start_work, saved)``, then fold completions / kills / checkpoint counts
+    into the carried state.  ``state`` is the 7-tuple ``(saved, done,
+    comp_time, n_ckpt, work_lost, has_run, n_kills)`` — ``n_kills``
+    accumulates on-device (one count per non-user-terminated recorded run,
+    exactly the billing-side tally).  Returns ``(state, (rec_exists, rec_end,
+    rec_user))`` where the records feed the vectorized biller.
+
+    Float expressions mirror :mod:`repro.engine.batch._run_scheme` line for
+    line, so results are bit-identical to the NumPy driver.
+    """
+    saved, done, comp_time, n_ckpt, work_lost, has_run, n_kills = state
+    none_reset = scheme == Scheme.NONE
+    act = valid & ~done
+    start_work = a + t_r
+    if none_reset:
+        # NONE restarts from scratch after any recorded run
+        saved = xp.where(act & has_run, 0.0, saved)
+
+    short = act & (start_work >= b)
+    shortk = short & (b < horizon)
+    go = act & ~short
+
+    done_now, done_at, work_end, saved_out, ckpt_add = run_kernel(go, a, b, start_work, saved)
+    done_now = go & done_now
+
+    n_ckpt = n_ckpt + xp.where(go, ckpt_add, 0)
+    comp_time = xp.where(done_now, done_at, comp_time)
+    done = done | done_now
+    kl = go & ~done_now
+    if none_reset:
+        work_lost = xp.where(kl, work_lost + (work_end - 0.0), work_lost)
+        has_run = has_run | shortk | kl
+    else:
+        work_lost = xp.where(kl, work_lost + (work_end - saved_out), work_lost)
+        saved = xp.where(kl, saved_out, saved)
+    n_kills = n_kills + (shortk | kl).astype(n_kills.dtype)
+
+    rec_exists = shortk | done_now | kl
+    rec_end = xp.where(done_now, done_at, b)
+    state = (saved, done, comp_time, n_ckpt, work_lost, has_run, n_kills)
+    return state, (rec_exists, rec_end, done_now)
 
 
 # ---------------------------------------------------------------------------
@@ -389,25 +443,34 @@ def adapt_decision(xp, age, unsaved, flat, off, top, bin_s, n_bins, t_c, t_r, in
     return (h * (unsaved + t_r)) > t_c
 
 
-def adapt_tick(xp, state, a, b, work_s, t_c, t_r, interval, flat, off, top, bin_s, n_bins):
-    """One ADAPT decision tick for every in-loop cell.
+def adapt_tick_core(
+    xp, live, t, work, sv, next_dec, a, b, work_s, t_c, t_r, interval,
+    flat, off, top, bin_s, n_bins,
+):
+    """One ADAPT decision tick, the single shared body.
 
-    ``state = (in_loop, t, work, sv, next_dec, done_now, done_at, ckpt_add)``.
     Mirrors one iteration of the scalar decision loop in
     ``repro.core.simulator._run_period``: work to the next decision point (or
     the kill), maybe complete, then decide via the binned hazard whether to
-    spend ``t_c`` checkpointing before the next interval.  Shared by the
-    NumPy host loop and the JAX ``lax.while_loop`` body.
+    spend ``t_c`` checkpointing before the next interval.  Every ADAPT driver
+    calls this one function — :func:`adapt_tick` (the period-synchronized
+    walk), the NumPy cell-decoupled driver (``batch._run_adapt``) and its
+    traced twin (``spot_sweep.kernel._adapt_decoupled``) — so a semantics
+    change is mirrored from the scalar simulator exactly once.
+
+    Returns ``(live, t, work, sv, next_dec, d_at, fin, ck, kl)``: the
+    advanced clocks, the would-be completion time ``d_at`` (valid on ``fin``
+    lanes), and the completion / checkpoint-taken / killed masks for the
+    caller's own bookkeeping (records, counters, compaction).
     """
-    in_loop, t, work, sv, next_dec, done_now, done_at, ckpt_add = state
     seg_end = xp.minimum(next_dec, b)
-    fin = in_loop & (work + (seg_end - t) >= work_s - _EPS)
-    done_now = done_now | fin
-    done_at = xp.where(fin, t + (work_s - work), done_at)
-    live = in_loop & ~fin
+    fin = live & (work + (seg_end - t) >= work_s - _EPS)
+    d_at = t + (work_s - work)
+    live = live & ~fin
     work = xp.where(live, work + (seg_end - t), work)
     t = xp.where(live, seg_end, t)
-    live = live & ~(t >= b)  # killed at b with no decision left
+    kill1 = live & (t >= b)  # killed at b with no decision left
+    live = live & ~kill1
 
     age = t - a
     take = live & adapt_decision(
@@ -415,10 +478,28 @@ def adapt_tick(xp, state, a, b, work_s, t_c, t_r, interval, flat, off, top, bin_
     )
     ck = take & ((t + t_c) <= (b + _EPS))
     sv = xp.where(ck, work, sv)
-    ckpt_add = ckpt_add + ck.astype(xp.int64)
     t = xp.where(take, xp.minimum(t + t_c, b), t)
-    live = live & ~(take & (t >= b))
+    kill2 = take & (t >= b)
+    live = live & ~kill2
     next_dec = xp.where(live, t + interval, next_dec)
+    return live, t, work, sv, next_dec, d_at, fin, ck, kill1 | kill2
+
+
+def adapt_tick(xp, state, a, b, work_s, t_c, t_r, interval, flat, off, top, bin_s, n_bins):
+    """One period-synchronized ADAPT tick for every in-loop cell.
+
+    ``state = (in_loop, t, work, sv, next_dec, done_now, done_at, ckpt_add)``.
+    A thin bookkeeping wrapper over :func:`adapt_tick_core`, shared by the
+    ``_kernel_adapt`` host loop and the JAX/Pallas ``lax.while_loop`` body.
+    """
+    in_loop, t, work, sv, next_dec, done_now, done_at, ckpt_add = state
+    live, t, work, sv, next_dec, d_at, fin, ck, _ = adapt_tick_core(
+        xp, in_loop, t, work, sv, next_dec, a, b, work_s, t_c, t_r, interval,
+        flat, off, top, bin_s, n_bins,
+    )
+    done_now = done_now | fin
+    done_at = xp.where(fin, d_at, done_at)
+    ckpt_add = ckpt_add + ck.astype(xp.int64)
     return live, t, work, sv, next_dec, done_now, done_at, ckpt_add
 
 

@@ -22,7 +22,15 @@ from repro.engine.reference import ReferenceEngine
 from repro.engine.scenario import Scenario
 
 #: Array fields compared cell-for-cell (exact equality, inf == inf).
-COMPARED = ("completed", "completion_time", "cost", "n_checkpoints", "n_kills", "n_self_terminations")
+COMPARED = (
+    "completed",
+    "completion_time",
+    "cost",
+    "n_checkpoints",
+    "n_kills",
+    "n_self_terminations",
+    "work_lost_s",
+)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,225 @@
+"""Spot-sweep op: backend dispatch for the fused (type × bid × seed) sweep.
+
+``spot_sweep_grid`` evaluates every batched scheme of a scenario over a
+pre-built period grid and returns the same per-scheme output dicts as the
+NumPy driver, whatever the implementation:
+
+  * ``"ref"`` — the NumPy lockstep driver in :mod:`repro.engine.batch`
+    (the triad's bit-exact reference; no jax required).
+  * ``"scan"`` — the one-compile multi-scheme ``lax.scan`` program
+    (:func:`repro.kernels.spot_sweep.kernel.build_sweep_scan`), jitted and
+    cached per scheme set; the default off-TPU.
+  * ``"pallas"`` — the fused Pallas kernel (TPU; the default there).
+  * ``"interpret"`` — the Pallas kernel in interpreter mode (CPU parity
+    suite; slow, test-sized grids only).
+
+Device impls simulate on-device (states *and* per-period run records — the
+billing inputs — accumulate in the program) and share the vectorized NumPy
+biller with the batch backend, so costs are bit-identical across every impl.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.schemes import Scheme
+
+_FORCE_IMPL: str | None = None
+
+#: jitted scan program per scheme set; shared by every engine in the process
+_SCAN_CACHE: dict[tuple, object] = {}
+#: times each cached program has been *traced* (retrace spy for tests)
+TRACE_COUNTS: dict[tuple, int] = {}
+
+
+def set_impl(impl: str | None) -> None:
+    global _FORCE_IMPL
+    _FORCE_IMPL = impl
+
+
+def _default_impl() -> str:
+    # "pallas" (native compilation) is an explicit opt-in, never the default:
+    # the float64 parity substrate does not lower through Mosaic on TPU
+    return _FORCE_IMPL if _FORCE_IMPL is not None else "scan"
+
+
+def trace_count(schemes) -> int:
+    """How many times the scan program for ``schemes`` has been traced."""
+    return TRACE_COUNTS.get(tuple(s.value for s in schemes), 0)
+
+
+def _scan_fn(schemes, jax_mod):
+    key = tuple(s.value for s in schemes)
+    fn = _SCAN_CACHE.get(key)
+    if fn is None:
+        from repro.kernels.spot_sweep import kernel as K
+
+        TRACE_COUNTS.setdefault(key, 0)
+
+        def bump(k=key):
+            TRACE_COUNTS[k] += 1
+
+        fn = jax_mod.jit(K.build_sweep_scan(schemes, count_cb=bump))
+        _SCAN_CACHE[key] = fn
+    return fn
+
+
+def _edge_inputs(grid, t_r):
+    """Per-cell EDGE sweep inputs ``(edges_flat, edge_base, edge_n, ptr0)``
+    — the one place the per-market edge arrays expand to the cell axis."""
+    flat, base_m, n_m = grid.edges()
+    m_of = np.arange(grid.n_cells) // grid.n_bids
+    return flat, base_m[m_of], n_m[m_of], grid.edge_ptr0(t_r)
+
+
+def _device_arrays(grid, jnp, need_edge, need_adapt, t_r, adapt_tables):
+    """Device copies of the grid/table arrays, memoized on the grid object
+    (which :func:`repro.engine.batch.grid_and_tables` already shares per
+    scenario) so repeat runs skip the host→device transfer."""
+    cache = grid.__dict__.setdefault("_sweep_device", {})
+    if "A_T" not in cache:
+        cache["A_T"] = jnp.asarray(grid.A.T)
+        cache["B_T"] = jnp.asarray(grid.B.T)
+        cache["valid_T"] = jnp.asarray(grid.valid.T)
+        cache["horizon"] = jnp.asarray(grid.horizon)
+    if need_edge and cache.get("_edge_t_r") != t_r:
+        flat, base, n, ptr0 = _edge_inputs(grid, t_r)
+        cache["edges_flat"] = jnp.asarray(flat)
+        cache["edge_base"] = jnp.asarray(base)
+        cache["edge_n"] = jnp.asarray(n)
+        cache["ptr0_T"] = jnp.asarray(ptr0.T)
+        cache["_edge_t_r"] = t_r
+    if need_adapt and cache.get("_tables_src") is not adapt_tables:
+        # keyed on the table *object*: fresh tables (different bin_s, pdfs)
+        # must never mix with a stale device copy
+        cache["tab_flat"] = jnp.asarray(adapt_tables.flat)
+        cache["tab_off"] = jnp.asarray(adapt_tables.off)
+        cache["tab_top"] = jnp.asarray(adapt_tables.top)
+        cache["_tables_src"] = adapt_tables
+    return cache
+
+
+def spot_sweep_grid(
+    schemes,
+    grid,
+    scenario,
+    adapt_tables=None,
+    impl: str | None = None,
+    block_c: int = 256,
+):
+    """Evaluate ``schemes`` over a :class:`~repro.engine.batch._PeriodGrid`.
+
+    Returns ``(outs, timings)``: ``outs`` maps each scheme to the standard
+    output dict (``completed`` / ``completion_time`` / ``cost`` /
+    ``n_checkpoints`` / ``n_kills`` / ``work_lost_s``), ``timings`` records
+    the sim vs billing phase split for the benchmark's ``--profile`` view.
+    """
+    schemes = tuple(schemes)
+    if impl is None:
+        impl = _default_impl()
+    if impl == "ref":
+        from repro.engine.batch import run_schemes_numpy
+
+        return run_schemes_numpy(schemes, grid, scenario, adapt_tables)
+
+    from repro.engine.jax_backend import _require_jax
+
+    jax_mod, jnp, _ = _require_jax()
+    from repro.engine.batch import _bill_runs_flat
+
+    params = scenario.params
+    delta = float(params.billing_period_s)
+    need_edge = Scheme.EDGE in schemes
+    need_adapt = Scheme.ADAPT in schemes
+    S = len(schemes)
+    t0 = time.perf_counter()
+
+    if impl == "scan":
+        arrs = _device_arrays(grid, jnp, need_edge, need_adapt, params.t_r, adapt_tables)
+        kwargs = dict(
+            A_T=arrs["A_T"],
+            B_T=arrs["B_T"],
+            valid_T=arrs["valid_T"],
+            horizon=arrs["horizon"],
+            init_saved=float(scenario.initial_saved_work),
+            work_s=float(scenario.work_s),
+            t_c=float(params.t_c),
+            t_r=float(params.t_r),
+            hour_delta=delta,
+        )
+        if need_edge:
+            kwargs.update(
+                edges_flat=arrs["edges_flat"],
+                edge_base=arrs["edge_base"],
+                edge_n=arrs["edge_n"],
+                ptr0_T=arrs["ptr0_T"],
+            )
+        if need_adapt:
+            kwargs.update(
+                interval=float(params.adapt_interval_s),
+                tab_flat=arrs["tab_flat"],
+                tab_off=arrs["tab_off"],
+                tab_top=arrs["tab_top"],
+                bin_s=float(adapt_tables.bin_s),
+                n_bins=int(adapt_tables.n_bins),
+            )
+        pairs = _scan_fn(schemes, jax_mod)(**kwargs)
+        finals = [
+            # state = (saved, done, comp_time, n_ckpt, work_lost, has_run, n_kills)
+            tuple(np.asarray(pairs[si][0][j]) for j in (1, 2, 3, 4, 6))
+            for si in range(S)
+        ]
+        recs_np = [tuple(np.asarray(x) for x in pairs[si][1]) for si in range(S)]  # (P, C)
+    elif impl in ("pallas", "interpret"):
+        from repro.kernels.spot_sweep import kernel as K
+
+        consts = dict(
+            init_saved=float(scenario.initial_saved_work),
+            work_s=float(scenario.work_s),
+            t_c=float(params.t_c),
+            t_r=float(params.t_r),
+            hour_delta=delta,
+            interval=float(params.adapt_interval_s),
+            bin_s=float(adapt_tables.bin_s) if adapt_tables is not None else 0.0,
+            n_bins=int(adapt_tables.n_bins) if adapt_tables is not None else 1,
+        )
+        edges = ptr0 = tables = None
+        if need_edge:
+            flat, base, n, ptr0 = _edge_inputs(grid, params.t_r)
+            edges = (flat, base, n)
+        if need_adapt:
+            tables = (adapt_tables.flat, adapt_tables.off, adapt_tables.top)
+        out = K.sweep_pallas(
+            schemes, grid.A, grid.B, grid.valid, grid.horizon, consts,
+            ptr0=ptr0, edges=edges, tables=tables, block_c=block_c,
+            interpret=impl == "interpret",
+        )
+        done, comp, ckpt, lost, kills, rex, rend, ruser = (np.asarray(x) for x in out)
+        finals = [(done[si], comp[si], ckpt[si], lost[si], kills[si]) for si in range(S)]
+        recs_np = [(rex[si].T, rend[si].T, ruser[si].T) for si in range(S)]
+    else:
+        raise ValueError(f"unknown spot_sweep impl {impl!r}")
+    sim_s = time.perf_counter() - t0
+
+    outs: dict[Scheme, dict] = {}
+    per_scheme: dict[str, dict] = {}
+    for si, scheme in enumerate(schemes):
+        tb = time.perf_counter()
+        done, comp_time, n_ckpt, work_lost, n_kills = finals[si]
+        exists, end, user = recs_np[si]
+        pp, cc = np.nonzero(exists)
+        total, _ = _bill_runs_flat(
+            grid, pp, cc, grid.A[cc, pp], end[pp, cc], user[pp, cc], delta
+        )
+        outs[scheme] = {
+            "completed": done & np.isfinite(comp_time),
+            "completion_time": comp_time,
+            "cost": total,
+            "n_checkpoints": n_ckpt,
+            "n_kills": n_kills,  # accumulated on-device, not re-derived here
+            "work_lost_s": work_lost,
+        }
+        per_scheme[scheme.value] = {"bill_s": time.perf_counter() - tb}
+    return outs, {"impl": impl, "sim_s": sim_s, "per_scheme": per_scheme}

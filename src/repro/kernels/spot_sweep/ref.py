@@ -1,0 +1,12 @@
+"""Reference implementation of the spot-sweep op: the NumPy lockstep driver.
+
+Unlike the other kernel triads, the bit-exact reference here is not a slow
+pure-jnp re-derivation — it is the production :class:`BatchEngine` driver in
+:mod:`repro.engine.batch`, which is itself proven ``==`` against the scalar
+event loop by :mod:`repro.engine.parity`.  This module just gives it the
+triad's standard name so ``ops``/tests can dispatch to it uniformly.
+"""
+
+from repro.engine.batch import run_schemes_numpy as spot_sweep_ref
+
+__all__ = ["spot_sweep_ref"]
