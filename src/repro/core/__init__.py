@@ -46,7 +46,6 @@ from repro.core.simulator import (
     simulate,
     simulate_acc_attempt,
     simulate_attempt,
-    sweep_bids,
 )
 
 __all__ = [
@@ -89,7 +88,6 @@ __all__ = [
     "simulate_attempt",
     "spot_application",
     "step_trace",
-    "sweep_bids",
     "synthetic_trace",
     "synthetic_traces_batch",
     "trace_ensemble",

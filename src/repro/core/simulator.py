@@ -487,34 +487,7 @@ def _result(scheme, bid, work_s, completed, done_at, runs, n_ckpt, n_kills, n_te
     )
 
 
-# ---------------------------------------------------------------------------
-# Sweeps (paper §VII: 64 instance types x bids 0.401..0.441 step 0.001)
-# ---------------------------------------------------------------------------
-
-
-def sweep_bids(
-    trace: PriceTrace,
-    work_s: float,
-    bids,
-    schemes=tuple(Scheme),
-    params: SimParams | None = None,
-) -> dict[Scheme, list[SimResult]]:
-    """Deprecated: thin adapter over :mod:`repro.engine`.
-
-    Build a :class:`repro.engine.Scenario` and call :func:`repro.engine.run`
-    instead — that surface covers multi-type/multi-seed grids and can use the
-    vectorized batch backend; this wrapper keeps the original single-trace
-    signature and return shape (``{scheme: [SimResult per bid]}``, run lists
-    included) on the scalar reference backend.
-    """
-    import warnings
-
-    warnings.warn(
-        "sweep_bids is deprecated; build a repro.engine.Scenario and call repro.engine.run",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.engine import ReferenceEngine, Scenario
-
-    scenario = Scenario.from_trace(trace, work_s, tuple(bids), tuple(schemes), params)
-    return ReferenceEngine(keep_runs=True).run(scenario).to_sweep_dict(0)
+# Bid sweeps (paper §VII) live on the engine surface: build a
+# `repro.engine.Scenario` and call `repro.engine.run` — the deprecated
+# `sweep_bids` shim is gone (see docs/engine.md for the migration table;
+# `EngineResult.to_sweep_dict` still produces the legacy result shape).

@@ -24,9 +24,12 @@ interchangeable engine backend:
     an explicit opt-in.
   * :func:`run` / :func:`run_fleet` — the one-call entry points.
 
-Legacy surfaces (``repro.core.simulator.sweep_bids``,
-``repro.fleet.sweep.run_sweep``) remain as thin deprecation shims over this
-package; see docs/engine.md for the migration table.
+This is the *only* sweep surface: the long-deprecated shims
+(``repro.core.simulator.sweep_bids``, ``repro.fleet.sweep.run_sweep``) have
+been removed — see docs/engine.md for the migration table.  Scenarios can
+also declare a capacity-constrained market (``capacity`` / ``demand`` knobs,
+:mod:`repro.market`): every backend then simulates on the auction-cleared
+price path, preempting replicas the clearing price outbids.
 """
 
 from repro.engine.base import (

@@ -8,8 +8,9 @@ single-job Scenarios, and one result object.  ADAPT fleet cells share the
 engine's binned-hazard formulation: every per-step decision inside an attempt
 reads the cached :meth:`~repro.core.schemes.FailurePdf.survival_table` — the
 same numbers the batched kernels gather — instead of summing pdf prefixes.
-The legacy ``repro.fleet.sweep.run_sweep`` is a deprecation shim over this
-module.
+Capacity-constrained studies set ``FleetScenario.capacity`` (and optionally
+``bid_policy="rebid"``): each cell's controller then trades in the per-type
+auctions of :mod:`repro.market`.
 """
 
 from __future__ import annotations
@@ -22,6 +23,8 @@ from repro.core.market import HOUR
 from repro.fleet.controller import FleetController, FleetResult
 from repro.fleet.policies import (
     Algorithm1Policy,
+    BidPolicy,
+    ClearingRebid,
     CostGreedyPolicy,
     DiversifiedPolicy,
     EETGreedyPolicy,
@@ -52,6 +55,14 @@ def resolve_policies(scenario: FleetScenario) -> list[PlacementPolicy]:
             raise KeyError(f"unknown policy {name!r}; known: {sorted(registry)}")
         out.append(registry[name])
     return out
+
+
+def resolve_bid_policy(scenario: FleetScenario, margin: float) -> BidPolicy | None:
+    """The per-cell bid hook: ``None`` keeps the historical fixed-margin rule
+    (bit-identical), ``"rebid"`` tracks the cleared quote at ``margin`` floor."""
+    if scenario.bid_policy == "rebid":
+        return ClearingRebid(margin=margin, markup=scenario.rebid_markup)
+    return None
 
 
 @dataclasses.dataclass
@@ -106,6 +117,9 @@ def run_fleet(
                     histories=hist_by_seed[seed],
                     scheme=scenario.scheme,
                     bid_margin=margin,
+                    capacity=scenario.capacity,
+                    market_params=scenario.market,
+                    bid_policy=resolve_bid_policy(scenario, margin),
                 )
                 res = controller.run(workload)
                 wall = time.perf_counter() - c0

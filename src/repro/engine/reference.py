@@ -6,8 +6,8 @@ defined by agreeing with this one (see :mod:`repro.engine.parity`), and
 borrows :func:`scalar_fill` for the schemes it cannot lower (ADAPT/ACC).
 
 ADAPT failure pdfs are cached per (market, bid), mirroring the pdf cache the
-legacy ``sweep_bids`` kept, so the reference engine is not gratuitously
-slower than the code it replaces.
+legacy sweep loop kept, so the reference engine is not gratuitously slower
+than the code it replaced.
 """
 
 from __future__ import annotations
@@ -66,8 +66,8 @@ class ReferenceEngine:
     """Scalar per-cell evaluation (the correctness anchor).
 
     ``keep_runs=True`` stores the full per-cell :class:`SimResult` (including
-    the billed run list) in ``EngineResult.sim_results`` — needed by the
-    legacy ``sweep_bids`` adapter; switch it off for large grids.
+    the billed run list) in ``EngineResult.sim_results`` — needed by
+    ``EngineResult.to_sweep_dict`` consumers; switch it off for large grids.
     """
 
     name = "reference"

@@ -12,9 +12,14 @@ itself never runs anything.
 ``(policy × bid-margin × seed)`` grid over a workload stream, consumed by
 :func:`repro.engine.fleetgrid.run_fleet`.
 
-Later capacity-limit and online-rebid studies plug in here: add the knob to
-the Scenario, teach the engines to honor it, and every entry point (bid
-sweeps, fleet sweeps, SpotTrainer) picks it up for free.
+Capacity-constrained markets plug in exactly here (see
+:mod:`repro.market` and docs/market.md): ``capacity`` bounds the per-type
+pool, ``demand`` is the depth of the co-located foreground block a cell's
+job is the marginal replica of, and materialization replaces each exogenous
+trace with its auction-cleared view — so every backend (reference, batch,
+jax, pallas) honors preemption-by-outbid through the one out-of-bid rule it
+already implements, bit-identically.  ``capacity=None`` (the default) keeps
+today's infinitely deep market, byte for byte.
 """
 
 from __future__ import annotations
@@ -33,6 +38,7 @@ from repro.core.market import (
 )
 from repro.core.provision import SLA
 from repro.core.schemes import Scheme, SimParams
+from repro.market import MarketParams, effective_trace
 
 #: The bid-limited schemes (an instance lives until its spot price exceeds
 #: the bid): everything except ACC, whose instances are never provider-killed.
@@ -92,6 +98,15 @@ class Scenario:
     #: (the paper's per-type band sweep: 0.50..0.60 straddles the calibrated
     #: base band at ~0.53 × on-demand) instead of shared absolute $/h.
     bid_fractions: bool = False
+    # -- capacity-constrained market (None = today's infinitely deep pool)
+    #: per-type supply: how many instances of each market cell's type exist
+    capacity: int | None = None
+    #: foreground block depth: the cell's job is the marginal replica of
+    #: ``demand`` co-located lockstep units, so it runs only when the whole
+    #: block clears the auction and pays the block's uniform clearing price
+    demand: int = 1
+    #: background-occupancy / displacement-ladder calibration
+    market: MarketParams = dataclasses.field(default_factory=MarketParams)
 
     def __post_init__(self):
         if self.work_s <= 0:
@@ -113,6 +128,12 @@ class Scenario:
             )
         if self.bid_fractions and self.instances is None:
             raise ValueError("bid_fractions needs instances= (explicit traces have no on-demand)")
+        if self.capacity is not None and self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.demand < 1:
+            raise ValueError(f"demand must be >= 1, got {self.demand}")
+        if self.demand > 1 and self.capacity is None:
+            raise ValueError("demand > 1 needs capacity= (an infinitely deep market never clears)")
 
     # -- constructors -------------------------------------------------------
 
@@ -125,8 +146,11 @@ class Scenario:
         params: SimParams | None = None,
         label: str = "trace0",
         initial_saved_work: float = 0.0,
+        capacity: int | None = None,
+        demand: int = 1,
+        market: MarketParams | None = None,
     ) -> "Scenario":
-        """The legacy ``sweep_bids`` surface: one explicit trace."""
+        """Single explicit-trace study (the old ``sweep_bids`` shape)."""
         return Scenario(
             work_s=work_s,
             bids=tuple(float(b) for b in bids),
@@ -135,6 +159,9 @@ class Scenario:
             traces=(trace,),
             labels=(label,),
             initial_saved_work=initial_saved_work,
+            capacity=capacity,
+            demand=demand,
+            market=market or MarketParams(),
         )
 
     @staticmethod
@@ -148,6 +175,9 @@ class Scenario:
         seeds: Sequence[int] = (0,),
         sla: SLA | None = None,
         bid_fractions: bool = False,
+        capacity: int | None = None,
+        demand: int = 1,
+        market: MarketParams | None = None,
     ) -> "Scenario":
         """The §VII grid: (instance type × bid × seed × scheme) cells over
         generated traces.  ``instances`` defaults to the full 64-type catalog
@@ -170,6 +200,9 @@ class Scenario:
             seeds=tuple(int(s) for s in seeds),
             sla=sla,
             bid_fractions=bid_fractions,
+            capacity=capacity,
+            demand=demand,
+            market=market or MarketParams(),
         )
 
     # -- materialization ----------------------------------------------------
@@ -185,16 +218,35 @@ class Scenario:
         """Total (market, bid, scheme) simulation cells."""
         return self.n_markets * len(self.bids) * len(self.schemes)
 
+    def _clear_cell(self, cell: MarketCell) -> MarketCell:
+        """Replace a cell's exogenous trace with its auction-cleared view.
+
+        With ``capacity=None`` the cell passes through untouched (same trace
+        *object* — the backward-compat contract); otherwise the cleared trace
+        shares the exogenous segment boundaries and prices every segment at
+        the marginal cost of the ``demand``-th foreground unit, so out-of-bid
+        preemption in every backend *is* auction preemption.
+        """
+        if self.capacity is None:
+            return cell
+        cleared = effective_trace(
+            cell.trace, self.capacity, self.demand, self.market, on_demand=cell.on_demand
+        )
+        return dataclasses.replace(cell, trace=cleared)
+
     def materialize(self) -> list[MarketCell]:
         """Resolve the market into concrete ``(label, seed, trace)`` cells.
 
         Deterministic in the scenario's fields; generated traces come from one
         batched :func:`sample_traces_batch` call with decorrelated
-        :func:`ensemble_seed` streams (exactly the fleet-sweep recipe).
+        :func:`ensemble_seed` streams (exactly the fleet-sweep recipe).  With
+        ``capacity`` set, every cell's trace is the auction-cleared view (see
+        :meth:`_clear_cell`) — the single point where contention enters, so
+        all backends inherit it identically.
         """
         if self.traces is not None:
             labels = self.labels or tuple(f"trace{i}" for i in range(len(self.traces)))
-            return [MarketCell(lbl, 0, tr) for lbl, tr in zip(labels, self.traces)]
+            return [self._clear_cell(MarketCell(lbl, 0, tr)) for lbl, tr in zip(labels, self.traces)]
         models, streams = [], []
         for it in self.instances:
             m = TraceModel.for_instance(it)
@@ -206,7 +258,7 @@ class Scenario:
         k = 0
         for it in self.instances:
             for s in self.seeds:
-                cells.append(MarketCell(it.name, s, traces[k], it.on_demand))
+                cells.append(self._clear_cell(MarketCell(it.name, s, traces[k], it.on_demand)))
                 k += 1
         return cells
 
@@ -222,7 +274,7 @@ class Scenario:
         """
         if self.traces is not None:
             labels = self.labels or tuple(f"trace{i}" for i in range(len(self.traces)))
-            return MarketCell(labels[market], 0, self.traces[market])
+            return self._clear_cell(MarketCell(labels[market], 0, self.traces[market]))
         it = self.instances[market // len(self.seeds)]
         seed = self.seeds[market % len(self.seeds)]
         trace = sample_traces_batch(
@@ -230,7 +282,7 @@ class Scenario:
             self.horizon_days * 24 * HOUR,
             [ensemble_seed(it, seed)],
         )[0]
-        return MarketCell(it.name, seed, trace, it.on_demand)
+        return self._clear_cell(MarketCell(it.name, seed, trace, it.on_demand))
 
     def market_bids(self, market: MarketCell) -> tuple[float, ...]:
         """Absolute $/h bids for one market cell (scaled when
@@ -263,12 +315,29 @@ class FleetScenario:
     n_replicas: int = 2
     deadline_slack: float | None = 4.0
     policies: tuple[str, ...] = ("algorithm1", "cost_greedy", "eet_greedy", "diversified")
+    # -- capacity-constrained market (None = today's infinitely deep pools)
+    #: per-type supply; with it set the controller registers every placement
+    #: as demand, so large fleets move prices against themselves and each
+    #: other, and rising clearing prices preempt outbid replicas
+    capacity: int | None = None
+    #: background/displacement calibration shared by every type's pool
+    market: MarketParams = dataclasses.field(default_factory=MarketParams)
+    #: online bid policy: ``"fixed"`` = today's ``bid_margin × on-demand``;
+    #: ``"rebid"`` re-bids from the currently cleared spot quote on every
+    #: (re-)placement (see :class:`repro.fleet.policies.ClearingRebid`)
+    bid_policy: str = "fixed"
+    #: markup over the cleared quote used by ``bid_policy="rebid"``
+    rebid_markup: float = 0.10
 
     def __post_init__(self):
         if self.n_jobs <= 0 or self.n_types <= 0:
             raise ValueError("n_jobs and n_types must be positive")
         if not self.seeds or not self.bid_margins or not self.policies:
             raise ValueError("seeds, bid_margins and policies must be non-empty")
+        if self.capacity is not None and self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.bid_policy not in ("fixed", "rebid"):
+            raise ValueError(f"unknown bid_policy {self.bid_policy!r}; expected fixed|rebid")
 
     @staticmethod
     def from_sweep_config(cfg, policies: Sequence[str] | None = None) -> "FleetScenario":

@@ -12,18 +12,26 @@ jobs, in the direction named by Qu et al. and Voorsluys et al. (PAPERS.md):
                                      corrected billing, checkpoint-preserving
                                      cross-type migration on out-of-bid kills
                                      and ACC self-terminations
-  * :mod:`~repro.fleet.sweep`      — batched trace generation + the deprecated
-                                     ``run_sweep`` shim; declare studies as a
+  * :mod:`~repro.fleet.sweep`      — batched trace generation and sweep value
+                                     objects; declare studies as a
                                      :class:`repro.engine.FleetScenario` and
                                      run them with :func:`repro.engine.run_fleet`
+
+Capacity-constrained fleets: pass ``capacity=`` (and optionally a
+``BidPolicy`` such as :class:`~repro.fleet.policies.ClearingRebid`) to
+:class:`FleetController` or set the knobs on a ``FleetScenario`` — placements
+then compete in the per-type auctions of :mod:`repro.market`.
 """
 
 from repro.fleet.controller import AttemptRecord, FleetController, FleetResult, JobOutcome
 from repro.fleet.policies import (
     Algorithm1Policy,
+    BidPolicy,
+    ClearingRebid,
     CostGreedyPolicy,
     DiversifiedPolicy,
     EETGreedyPolicy,
+    FixedMarginBid,
     Placement,
     PlacementContext,
     PlacementPolicy,
@@ -33,7 +41,6 @@ from repro.fleet.sweep import (
     SweepCell,
     SweepConfig,
     batched_fleet_traces,
-    run_sweep,
     select_types,
     summarize,
 )
@@ -42,9 +49,12 @@ from repro.fleet.workload import Job, Workload
 __all__ = [
     "Algorithm1Policy",
     "AttemptRecord",
+    "BidPolicy",
+    "ClearingRebid",
     "CostGreedyPolicy",
     "DiversifiedPolicy",
     "EETGreedyPolicy",
+    "FixedMarginBid",
     "FleetController",
     "FleetResult",
     "Job",
@@ -57,7 +67,6 @@ __all__ = [
     "Workload",
     "batched_fleet_traces",
     "default_policies",
-    "run_sweep",
     "select_types",
     "summarize",
 ]

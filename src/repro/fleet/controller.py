@@ -15,6 +15,19 @@ work by the ECU ratio exactly as Algorithm 1 scales work when ranking types.
 The event loop holds a heap of (time, event) pairs; attempts are simulated
 eagerly into the future and cancelled lazily (stale tokens), which keeps the
 loop O(events log events) with no per-tick stepping.
+
+With ``capacity`` set the controller trades against a capacity-constrained
+market (:mod:`repro.market`): every attempt is simulated on its *cleared
+view* — the uniform-price auction of the background stack plus all
+registered fleet demand — and registered in the per-type demand ledger, so a
+large fleet moves prices against itself and competing jobs.  When a new
+registration raises a type's clearing price above a running replica's bid,
+that replica's attempt is re-simulated on its updated view and ends in an
+ordinary out-of-bid kill (preemption-by-outbid), feeding the same migration
+path as an exogenous price spike.  Bids come from the pluggable
+:class:`~repro.fleet.policies.BidPolicy` hook — fixed margins by default,
+online re-bidding from the cleared quote with
+:class:`~repro.fleet.policies.ClearingRebid`.
 """
 
 from __future__ import annotations
@@ -30,8 +43,9 @@ from repro.core.market import InstanceType, PriceTrace
 from repro.core.schemes import Scheme, SimParams
 from repro.core.schemes import FailurePdf
 from repro.core.simulator import _EPS, simulate_acc_attempt, simulate_attempt
-from repro.fleet.policies import Placement, PlacementContext, PlacementPolicy
+from repro.fleet.policies import BidPolicy, Placement, PlacementContext, PlacementPolicy
 from repro.fleet.workload import Job, Workload
+from repro.market import FleetMarket, MarketParams
 
 _ARRIVAL, _END = 0, 1
 
@@ -187,7 +201,8 @@ class _Replica:
     n_kills: int = 0
     done: bool = False
     token: int | None = None
-    active: tuple | None = None  # (AttemptResult, Placement, initial_saved_ref)
+    # (AttemptResult, Placement, initial_saved_ref, start_t, Registration|None)
+    active: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -212,12 +227,22 @@ class FleetController:
         migrate: bool = True,
         max_migrations_per_replica: int = 64,
         bid_margin: float = 0.56,
+        capacity: int | None = None,
+        market_params: MarketParams | None = None,
+        bid_policy: BidPolicy | None = None,
     ):
         """``histories`` is what policies (and ADAPT) estimate failure pdfs
         from.  It defaults to the evaluation traces themselves — convenient
         for tests, but that grants policies oracle knowledge of the future;
-        pass a disjoint history (as :func:`repro.fleet.sweep.run_sweep` does)
-        for honest policy comparisons."""
+        pass a disjoint history (as :func:`repro.engine.fleetgrid.run_fleet`
+        does) for honest policy comparisons.
+
+        ``capacity`` switches on the capacity-constrained market: each type's
+        trace becomes the background of a :class:`~repro.market.SpotMarket`
+        and placements compete in its auction (ADAPT's hazard estimate stays
+        history-based — contention is not in the pdf).  ``bid_policy``
+        overrides how non-paper policies bid; the default reproduces
+        ``bid_margin × on-demand`` bit for bit."""
         missing = [it.name for it in catalog if it.name not in traces]
         if missing:
             raise ValueError(f"no trace for catalog types: {missing[:4]}...")
@@ -231,11 +256,15 @@ class FleetController:
         self.migrate = migrate
         self.max_migrations_per_replica = max_migrations_per_replica
         self.horizon = min(t.horizon for t in self.traces.values())
+        self.market: FleetMarket | None = None
+        if capacity is not None:
+            self.market = FleetMarket.build(self.catalog, self.traces, capacity, market_params)
         self.ctx = PlacementContext(
             histories=self.histories,
             params=self.params,
             reference_ecu=reference_ecu,
             bid_margin=bid_margin,
+            bid_policy=bid_policy,
         )
         # ADAPT pdfs built from *evaluation* traces when a type has no
         # history: cached here so re-provisioning the same (type, bid) across
@@ -245,7 +274,23 @@ class FleetController:
     # -- helpers ------------------------------------------------------------
 
     def _spot_prices(self, now: float) -> dict[str, float]:
+        """Quotes policies (and re-bid hooks) observe: cleared prices when a
+        market is live, exogenous trace prices otherwise."""
+        if self.market is not None:
+            # quote-only trace entries outside the catalog have no pool (they
+            # are never placeable): fall back to their exogenous price
+            return {
+                name: self.market.price_at(name, now) if name in self.market else tr.price_at(now)
+                for name, tr in self.traces.items()
+            }
         return {name: tr.price_at(now) for name, tr in self.traces.items()}
+
+    def _market_view(self, placement: Placement, own_reg=None):
+        """The trace one replica's attempt simulates on: the auction-cleared
+        view under a live market, the exogenous trace otherwise."""
+        if self.market is None:
+            return self.traces[placement.instance.name]
+        return self.market[placement.instance.name].cleared_view(placement.bid, own_reg)
 
     def _feasible(self, job: Job, exclude: frozenset[str] = frozenset()) -> list[InstanceType]:
         return [it for it in self.catalog if job.sla.admits(it) and it.name not in exclude]
@@ -286,45 +331,103 @@ class FleetController:
             heapq.heappush(heap, (t, kind, seq, payload))
             seq += 1
 
-        def spawn_attempt(st: _JobState, r_idx: int, placement: Placement, now: float) -> None:
-            nonlocal token_counter
-            rep = st.replicas[r_idx]
-            trace = self.traces[placement.instance.name]
+        def simulate_on(trace, st: _JobState, placement: Placement, start_t: float, saved_ref: float):
+            """One attempt of ``st.job`` on ``trace`` (the cleared view under
+            a live market) — the single simulation path shared by fresh
+            spawns and market re-pricing, so the two can never drift."""
             scale = self._scale(placement.instance)
             if self.scheme == Scheme.ACC:
                 # ACC lease: never provider-killed; a self-termination at an
                 # hour boundary drives migration like an out-of-bid kill does
-                att = simulate_acc_attempt(
+                return simulate_acc_attempt(
                     trace,
                     st.job.work_s * scale,
                     placement.bid,
-                    start_t=now,
+                    start_t=start_t,
                     params=self.params,
-                    initial_saved_work=rep.saved_ref * scale,
+                    initial_saved_work=saved_ref * scale,
                 )
-            else:
-                # ADAPT's hazard estimate must come from history, not from the
-                # future of the very trace being simulated (and is cached).
-                failure_pdf = None
-                if self.scheme == Scheme.ADAPT:
-                    failure_pdf = self._adapt_pdf(placement.instance.name, placement.bid)
-                att = simulate_attempt(
-                    trace,
-                    self.scheme,
-                    st.job.work_s * scale,
-                    placement.bid,
-                    start_t=now,
-                    params=self.params,
-                    failure_pdf=failure_pdf,
-                    initial_saved_work=rep.saved_ref * scale,
-                )
+            # ADAPT's hazard estimate must come from history, not from the
+            # future of the very trace being simulated (and is cached).
+            failure_pdf = None
+            if self.scheme == Scheme.ADAPT:
+                failure_pdf = self._adapt_pdf(placement.instance.name, placement.bid)
+            return simulate_attempt(
+                trace,
+                self.scheme,
+                st.job.work_s * scale,
+                placement.bid,
+                start_t=start_t,
+                params=self.params,
+                failure_pdf=failure_pdf,
+                initial_saved_work=saved_ref * scale,
+            )
+
+        def spawn_attempt(st: _JobState, r_idx: int, placement: Placement, now: float) -> None:
+            nonlocal token_counter
+            rep = st.replicas[r_idx]
+            att = simulate_on(self._market_view(placement), st, placement, now, rep.saved_ref)
             if att is None:  # type never available again under this bid
                 rep.done = True
                 return
+            reg = None
+            if self.market is not None:
+                reg = self.market[placement.instance.name].register(
+                    att.launch, att.end, placement.bid
+                )
             token_counter += 1
             rep.token = token_counter
-            rep.active = (att, placement, rep.saved_ref)
+            rep.active = (att, placement, rep.saved_ref, now, reg)
             push(att.end, _END, (st.job.id, r_idx, rep.token))
+            if reg is not None:
+                reclear(placement.instance.name, att.launch, att.end, (st.job.id, r_idx))
+
+        def reclear(name: str, lo: float, hi: float, skip: tuple[int, int]) -> None:
+            """First-order market re-clearing: new demand on ``name`` over
+            ``[lo, hi)`` re-prices every overlapping attempt on that type.
+
+            Each such attempt is re-simulated from its original start on its
+            updated cleared view (its own stale registration excluded) — the
+            past it already lived through is unchanged (the ledger is
+            append-only over time), so only the future moves: a replica whose
+            bid the new clearing price exceeds now ends in an ordinary
+            out-of-bid kill, exactly like an exogenous spike.  Demand that
+            *shrinks* as a result is recorded in the ledger (visible to every
+            later view) but does not re-extend other running attempts — a
+            displaced instance migrates, it does not come back.
+            """
+            nonlocal token_counter
+            sm = self.market[name]
+            for job_id, st2 in states.items():
+                if st2.completed_at is not None:
+                    continue
+                for r2, rep2 in st2.replicas.items():
+                    if (job_id, r2) == skip or rep2.active is None:
+                        continue
+                    att2, pl2, init2, start2, reg2 = rep2.active
+                    if pl2.instance.name != name or att2.end <= lo or att2.launch >= hi:
+                        continue
+                    new_att = simulate_on(
+                        self._market_view(pl2, own_reg=reg2), st2, pl2, start2, init2
+                    )
+                    if new_att is None:
+                        # priced out of the whole horizon before ever
+                        # launching: migrate like any other preemption (the
+                        # displacing demand starts at lo, so re-place there)
+                        sm.update(reg2, reg2.start, reg2.start)
+                        rep2.token = None
+                        rep2.active = None
+                        if self.migrate and rep2.n_migrations < self.max_migrations_per_replica:
+                            rep2.n_migrations += 1
+                            replace(st2, r2, lo, frozenset({name}))
+                        else:
+                            rep2.done = True
+                        continue
+                    sm.update(reg2, new_att.launch, new_att.end)
+                    token_counter += 1
+                    rep2.token = token_counter
+                    rep2.active = (new_att, pl2, init2, start2, reg2)
+                    push(new_att.end, _END, (job_id, r2, rep2.token))
 
         def replace(st: _JobState, r_idx: int, now: float, exclude: frozenset[str]) -> None:
             rep = st.replicas[r_idx]
@@ -398,7 +501,7 @@ class FleetController:
             rep = st.replicas[r_idx]
             if st.completed_at is not None or rep.token != token or rep.active is None:
                 continue  # stale event (cancelled or superseded)
-            att, placement, initial_ref = rep.active
+            att, placement, initial_ref, _, _reg = rep.active
             rep.token = None
             rep.active = None
             scale = self._scale(placement.instance)
@@ -415,12 +518,16 @@ class FleetController:
                 for r2, rep2 in st.replicas.items():
                     if r2 == r_idx or rep2.active is None:
                         continue
-                    att2, placement2, init2 = rep2.active
+                    att2, placement2, init2, _, reg2 = rep2.active
                     rep2.token = None
                     rep2.active = None
                     rep2.done = True
+                    if reg2 is not None:  # cancelled: its demand ends now
+                        self.market[placement2.instance.name].truncate(reg2, now)
                     if att2.launch < now - _EPS:
-                        tr2 = self.traces[placement2.instance.name]
+                        # bill the truncated run at the prices it actually saw
+                        # (the cleared view under a live market)
+                        tr2 = self._market_view(placement2, own_reg=reg2)
                         cost2 = billing.run_cost(
                             tr2, att2.launch, now, Termination.USER, self.params.billing_period_s
                         )

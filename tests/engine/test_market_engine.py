@@ -1,0 +1,149 @@
+"""Capacity-constrained Scenarios through the engine backends.
+
+Two acceptance contracts:
+
+  * **backward compat** — ``capacity=None`` (the default) materializes the
+    exact same trace objects as before, and a capacity so deep the demand
+    block fits the free depth of every runnable segment is bit-identical to
+    no market at all, on every parity field;
+  * **contention is live** — with a tight capacity, raising ``demand``
+    raises the cleared price path, flips availability, and the batch engine
+    still matches the scalar reference cell for cell (``==``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Scheme, catalog, constant_trace, get_instance, step_trace, synthetic_trace
+from repro.engine import BID_LIMITED_SCHEMES, PARITY_FIELDS, Scenario, assert_parity, run
+from repro.market import MarketParams
+
+IT = get_instance("m1.xlarge")
+
+
+def test_capacity_none_materializes_identical_traces():
+    tr = synthetic_trace(IT, 10, seed=0)
+    sc = Scenario.from_trace(tr, 10 * 3600.0, [0.36])
+    assert sc.capacity is None and sc.demand == 1
+    assert sc.materialize()[0].trace is tr  # pass-through, same object
+
+
+def test_deep_capacity_is_bit_identical_to_no_market():
+    """With the demand block inside the free depth of every segment a job
+    can run in, the cleared path only moves sold-out (spike) segments that
+    sit far above every bid — results match capacity=None bit for bit."""
+    tr = synthetic_trace(IT, 30, seed=3)
+    bids = [0.36, 0.37, 0.38]
+    base = run(Scenario.from_trace(tr, 20 * 3600.0, bids, schemes=BID_LIMITED_SCHEMES))
+    deep = run(
+        Scenario.from_trace(
+            tr, 20 * 3600.0, bids, schemes=BID_LIMITED_SCHEMES, capacity=64, demand=1
+        )
+    )
+    for field in PARITY_FIELDS:
+        assert np.array_equal(getattr(base, field), getattr(deep, field)), field
+
+
+def test_capacity_parity_batch_vs_reference():
+    """The acceptance contract: a contended scenario (tight capacity, deep
+    demand) agrees == between the scalar reference and the batch engine."""
+    tr = synthetic_trace(IT, 30, seed=3)
+    sc = Scenario.from_trace(
+        tr,
+        20 * 3600.0,
+        [0.36, 0.37, 0.39, 0.41, 0.45],
+        schemes=BID_LIMITED_SCHEMES,
+        capacity=4,
+        demand=3,
+        market=MarketParams(ref_price=IT.on_demand),
+    )
+    assert_parity(sc)
+
+
+def test_demand_raises_cleared_prices_and_kills():
+    """Contention end-to-end: on a constant base-band trace a lone job never
+    sees a kill, while a demand block beyond the free depth pays the
+    displacement premium, and one beyond what its bid clears never runs."""
+    od = 0.68
+    tr = constant_trace(0.36, 40 * 3600.0)
+    mp = MarketParams(ref_price=od)
+
+    def cell(demand):
+        sc = Scenario.from_trace(
+            tr, 6 * 3600.0, [0.3808], schemes=(Scheme.HOUR,),
+            capacity=4, demand=demand, market=mp,
+        )
+        res = run(sc)
+        return float(res.cost[0, 0, 0]), bool(res.completed[0, 0, 0])
+
+    cost1, done1 = cell(1)  # free depth 2: base price
+    cost3, done3 = cell(3)  # displaces one holder: 0.378/h
+    cost4, done4 = cell(4)  # rung 2 = 0.397 > bid: never available
+    assert done1 and done3 and not done4
+    assert cost1 == pytest.approx(7 * 0.36)
+    assert cost3 == pytest.approx(7 * 0.378)
+    assert cost3 > cost1
+    assert cost4 == 0.0
+
+
+def test_contention_triggers_outbid_preemption_mid_job():
+    """A trace whose background tightens mid-job: the demand block clears the
+    base band but not the tightened segment — the replica is preempted there
+    exactly like an exogenous out-of-bid kill, on every backend."""
+    day = 24 * 3600.0
+    tr = step_trace(
+        [(0.0, 0.36), (0.25 * day, 0.40), (0.5 * day, 0.36)], horizon_s=2 * day
+    )
+    mp = MarketParams(ref_price=0.68)
+    sc = Scenario.from_trace(
+        tr, 8 * 3600.0, [0.41], schemes=(Scheme.HOUR, Scheme.NONE),
+        capacity=4, demand=3, market=mp,
+    )
+    # demand 3 at base 0.40: util 0.61 -> used 2, free 2 -> rung 1 = 0.42 > bid
+    report = assert_parity(sc)
+    res = report.reference
+    kills = res.n_kills[0, 0, :]
+    assert (kills >= 1).all()  # preempted at the tightened segment
+    # without the market the same bid sails through with zero kills
+    free_run = run(Scenario.from_trace(tr, 8 * 3600.0, [0.41], schemes=(Scheme.HOUR,)))
+    assert int(free_run.n_kills[0, 0, 0]) == 0
+
+
+@pytest.mark.parametrize("engine", ["jax"])
+def test_capacity_parity_on_jax_backend(engine):
+    pytest.importorskip("jax")
+    tr = synthetic_trace(IT, 20, seed=5)
+    sc = Scenario.from_trace(
+        tr, 15 * 3600.0, [0.36, 0.38, 0.41], schemes=BID_LIMITED_SCHEMES,
+        capacity=4, demand=3, market=MarketParams(ref_price=IT.on_demand),
+    )
+    assert_parity(sc, engine=engine)
+
+
+def test_generated_grid_with_capacity():
+    """Capacity composes with the generated (type x seed) market and
+    fractional bids; parity holds across the grid."""
+    types = [it for it in catalog() if it.os == "linux"][:4]
+    sc = Scenario.grid(
+        work_s=12 * 3600.0,
+        bids=[0.55, 0.60],
+        instances=types,
+        schemes=(Scheme.HOUR, Scheme.ADAPT),
+        horizon_days=10.0,
+        seeds=(0,),
+        bid_fractions=True,
+        capacity=6,
+        demand=4,
+    )
+    report = assert_parity(sc)
+    assert report.reference.shape == (4, 2, 2)
+
+
+def test_scenario_market_validation():
+    tr = synthetic_trace(IT, 5, seed=0)
+    with pytest.raises(ValueError):
+        Scenario.from_trace(tr, 3600.0, [0.4], capacity=0)
+    with pytest.raises(ValueError):
+        Scenario.from_trace(tr, 3600.0, [0.4], capacity=4, demand=0)
+    with pytest.raises(ValueError):
+        Scenario.from_trace(tr, 3600.0, [0.4], demand=2)  # needs capacity

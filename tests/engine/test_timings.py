@@ -1,0 +1,65 @@
+"""EngineResult.timings: the per-phase breakdown every array backend reports.
+
+`engine_bench --profile` renders these; the contract is that each backend
+separates simulation from billing per scheme (plus the grid build and, with
+ACC in the scheme set, the scalar-fallback phase), with non-negative wall
+times — not just the `impl` label that the kernel suite checks.
+"""
+
+import pytest
+
+from repro.core import Scheme, get_instance, synthetic_trace
+from repro.engine import BID_LIMITED_SCHEMES, Scenario, get_engine
+
+IT = get_instance("m1.xlarge")
+
+
+def _scenario(schemes=BID_LIMITED_SCHEMES):
+    tr = synthetic_trace(IT, 10, seed=2)
+    return Scenario.from_trace(tr, 6 * 3600.0, [0.36, 0.37], schemes=schemes)
+
+
+def _assert_phase_times(timings, schemes, sim_per_scheme: bool):
+    assert timings is not None
+    assert timings["grid_s"] >= 0.0
+    per_scheme = timings["per_scheme"]
+    assert set(per_scheme) == {s.value for s in schemes}
+    for phases in per_scheme.values():
+        assert phases["bill_s"] >= 0.0
+        if sim_per_scheme:
+            assert phases["sim_s"] >= 0.0
+    if not sim_per_scheme:  # fused backends time the one-compile sim phase
+        assert timings["sim_s"] >= 0.0
+
+
+def test_batch_timings_have_sim_and_billing_phases():
+    res = get_engine("batch").run(_scenario())
+    _assert_phase_times(res.timings, BID_LIMITED_SCHEMES, sim_per_scheme=True)
+
+
+def test_batch_timings_report_scalar_fallback_for_acc():
+    res = get_engine("batch").run(_scenario(schemes=tuple(Scheme)))
+    _assert_phase_times(res.timings, BID_LIMITED_SCHEMES, sim_per_scheme=True)
+    assert res.timings["scalar_s"] >= 0.0  # the ACC scalar-fill phase
+
+
+def test_jax_timings_have_fused_sim_and_per_scheme_billing():
+    pytest.importorskip("jax")
+    res = get_engine("jax").run(_scenario())
+    _assert_phase_times(res.timings, BID_LIMITED_SCHEMES, sim_per_scheme=False)
+    assert res.timings["impl"] == "scan"
+
+
+def test_pallas_timings_have_fused_sim_and_per_scheme_billing():
+    pytest.importorskip("jax")
+    res = get_engine("pallas").run(
+        _scenario(schemes=(Scheme.HOUR,))  # interpreter mode: keep it tiny
+    )
+    _assert_phase_times(res.timings, (Scheme.HOUR,), sim_per_scheme=False)
+    assert res.timings["impl"] == "interpret"
+
+
+def test_reference_engine_reports_no_phase_timings():
+    res = get_engine("reference").run(_scenario(schemes=(Scheme.HOUR,)))
+    assert res.timings is None  # scalar path: wall_s only
+    assert res.wall_s >= 0.0

@@ -1,0 +1,188 @@
+"""Capacity-constrained fleets: contention, preemption-by-outbid, re-bid.
+
+The acceptance story: on a constant base-band trace nothing ever kills a
+replica in the infinitely deep market; with ``capacity`` set, adding replicas
+raises the uniform clearing price every concurrent replica pays, demand
+beyond what the bid clears queues for a freed slot, and a higher re-bid
+arriving later preempts a running incumbent — an ordinary out-of-bid kill
+that feeds the existing migration path.
+"""
+
+import math
+
+import pytest
+
+from repro.core import HOUR, SLA, Scheme, constant_trace, get_instance
+from repro.engine import FleetScenario, run_fleet
+from repro.fleet import ClearingRebid, CostGreedyPolicy, FleetController, Workload
+from repro.market import MarketParams
+
+IT = get_instance("m1.xlarge", region="us-east-1")  # on-demand 0.68
+H = 60 * 3600.0
+
+
+def _run(capacity, bid_policy=None, n_jobs=4, work_h=6.0):
+    ctl = FleetController(
+        [IT],
+        {IT.name: constant_trace(0.36, H)},
+        CostGreedyPolicy(),
+        scheme=Scheme.HOUR,
+        bid_margin=0.56,
+        capacity=capacity,
+        bid_policy=bid_policy,
+    )
+    # staggered arrivals on one type: replicas must share the pool
+    return ctl.run(Workload.from_sizes([work_h] * n_jobs, interarrival_s=0.5 * HOUR))
+
+
+def test_infinite_depth_baseline_never_kills():
+    res = _run(None)
+    assert res.n_kills == 0 and res.n_completed == 4
+    # every replica pays the flat base price: fleet size is free
+    assert all(r.cost == pytest.approx(7 * 0.36) for r in res.records)
+
+
+def test_adding_replicas_raises_the_cleared_price():
+    """free depth 2 of capacity 4: the third concurrent replica displaces a
+    background holder and *every* concurrent replica pays the higher uniform
+    price; the fourth cannot clear its bid and waits for a freed slot."""
+    res = _run(4)
+    assert res.n_completed == 4
+    assert res.n_kills == 0  # contention re-prices and queues, nothing outbids
+    base = _run(None)
+    assert res.total_cost > base.total_cost
+    by_job = {r.job_id: r for r in res.records}
+    # the late 4th job could not clear rung 2 (0.397 > 0.3808): it launched
+    # only when the first finisher freed a slot
+    first_end = min(r.end for r in res.records)
+    assert by_job[3].launch == pytest.approx(first_end)
+    assert by_job[3].launch > by_job[2].launch + HOUR
+
+
+def test_rebid_preempts_a_running_incumbent():
+    """Online re-bid from the cleared quote: the last arrival bids over the
+    incumbents' fixed margin, the auction clears above the weakest incumbent's
+    bid, and that incumbent dies an ordinary out-of-bid kill mid-run."""
+    res = _run(4, ClearingRebid(margin=0.56, markup=0.10))
+    assert res.n_kills >= 1
+    killed = [r for r in res.records if r.killed]
+    assert killed, "expected a preemption-by-outbid"
+    k = killed[0]
+    assert k.end < H  # killed mid-trace, not at the horizon
+    # the preemptor's bid exceeds the victim's
+    preemptor = max(res.records, key=lambda r: r.bid)
+    assert preemptor.bid > k.bid
+    assert preemptor.launch <= k.end
+    # the baseline without a market has no kills at all on this trace
+    assert _run(None).n_kills == 0
+
+
+def test_fleet_scenario_capacity_knobs_flow_through():
+    """FleetScenario -> run_fleet -> controller: a capacity-limited fleet
+    study completes and a tight pool degrades outcomes (cost up or fewer
+    completions) versus the infinitely deep market, deterministically."""
+    common = dict(
+        n_jobs=10,
+        mean_interarrival_s=0.2 * HOUR,
+        mean_work_h=3.0,
+        horizon_days=6.0,
+        n_types=2,
+        seeds=(0,),
+        bid_margins=(0.56,),
+        scheme=Scheme.HOUR,
+        sla=SLA(min_compute_units=4.0, os="linux"),
+        n_replicas=2,
+        policies=("diversified",),
+    )
+    free_grid = run_fleet(FleetScenario(**common))
+    cap_grid = run_fleet(
+        FleetScenario(**common, capacity=2, market=MarketParams(), bid_policy="rebid")
+    )
+    fc, cc = free_grid.cells[0], cap_grid.cells[0]
+    assert cc.n_completed <= fc.n_completed
+    contended = (
+        cc.total_cost > fc.total_cost
+        or cc.n_completed < fc.n_completed
+        or cc.n_kills > fc.n_kills
+        or cc.mean_completion_h > fc.mean_completion_h
+    )
+    assert contended, (fc, cc)
+    # summaries stay finite/consistent
+    res = cap_grid.results[("diversified2", 0.56, 0)]
+    assert res.total_cost == pytest.approx(sum(r.cost for r in res.records))
+    assert all(math.isfinite(r.cost) for r in res.records)
+
+
+def test_quote_only_trace_entries_survive_capacity():
+    """A traces dict that is a superset of the catalog stays legal with a
+    market: non-catalog entries are quote-only and fall back to their
+    exogenous price (regression: KeyError in _spot_prices)."""
+    traces = {IT.name: constant_trace(0.36, H), "phantom-type": constant_trace(0.99, H)}
+    ctl = FleetController([IT], traces, CostGreedyPolicy(), scheme=Scheme.HOUR,
+                          bid_margin=0.56, capacity=4)
+    res = ctl.run(Workload.from_sizes([2.0], interarrival_s=HOUR))
+    assert res.n_completed == 1
+    assert ctl._spot_prices(0.0)["phantom-type"] == 0.99
+
+
+def test_priced_out_pending_replica_migrates():
+    """A replica *queued* on a type whose remaining horizon then gets bought
+    out entirely must migrate to another feasible type, like any other
+    preemption (regression: it was retired without a migration attempt)."""
+    from repro.fleet import Placement
+
+    other = get_instance("c1.xlarge", region="us-east-1")  # od 0.68, 20 ECU
+    traces = {
+        IT.name: constant_trace(0.36, H),
+        other.name: constant_trace(0.36, H),
+    }
+
+    class PerJobBid(CostGreedyPolicy):
+        """Pile onto m1.xlarge; job 3 is a deep-pocketed late arrival."""
+
+        def place(self, job, now, remaining_work_s, feasible, ctx, k=None):
+            pinned = [it for it in feasible if it.name == IT.name] or list(feasible)
+            bid = 0.50 if job.id == 3 else 0.3808
+            return [Placement(pinned[0], bid)]
+
+    ctl = FleetController(
+        [IT, other], traces, PerJobBid(), scheme=Scheme.HOUR,
+        capacity=2,  # free depth 1 at the base band: second unit pays 0.378
+    )
+    # j0 holds a slot to the horizon; j1 takes the contended second slot;
+    # j2 queues for j1's slot; j3 then buys the rest of the horizon at 0.50
+    res = ctl.run(Workload.from_sizes([65.0, 10.0, 10.0, 65.0], interarrival_s=0.25 * HOUR))
+    job2 = [r for r in res.records if r.job_id == 2]
+    assert job2 and all(r.instance == other.name for r in job2), res.records
+    assert any(r.completed for r in job2)
+    # the displaced *running* replica (job 1) migrated off via the kill path
+    assert any(r.killed for r in res.records if r.job_id == 1)
+    assert res.n_migrations >= 2
+
+
+def test_fleet_scenario_validation():
+    with pytest.raises(ValueError):
+        FleetScenario(capacity=0)
+    with pytest.raises(ValueError):
+        FleetScenario(bid_policy="chaotic")
+
+
+def test_cancelled_sibling_demand_leaves_the_ledger():
+    """First-replica-wins cancellation truncates the loser's registration, so
+    later arrivals see the freed capacity (regression for ghost demand)."""
+    ctl = FleetController(
+        [IT],
+        {IT.name: constant_trace(0.36, H)},
+        CostGreedyPolicy(),
+        scheme=Scheme.HOUR,
+        capacity=4,
+        bid_margin=0.56,
+    )
+    sm = ctl.market[IT.name]
+    res = ctl.run(Workload.from_sizes([2.0, 2.0], interarrival_s=0.25 * HOUR))
+    assert res.n_completed == 2
+    for reg in sm.ledger:
+        assert reg.end <= H
+    # after every attempt ended, the quote falls back to the exogenous price
+    last_end = max(r.end for r in res.records)
+    assert sm.price_at(last_end + 1.0) == 0.36

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core import HOUR, SLA, run_cost, SimParams
-from repro.fleet import SweepConfig, Workload, batched_fleet_traces, run_sweep, select_types, summarize
+from repro.engine import FleetScenario, run_fleet
+from repro.fleet import SweepConfig, Workload, batched_fleet_traces, select_types, summarize
 
 P = SimParams()
 
@@ -66,7 +67,8 @@ def test_quick_sweep_acceptance_profile():
         seeds=(0,),
         sla=SLA(min_compute_units=4.0, os="linux"),
     )
-    cells, results = run_sweep(cfg)
+    grid = run_fleet(FleetScenario.from_sweep_config(cfg))
+    cells, results = grid.cells, grid.results
     policies = {c.policy for c in cells}
     assert len(policies) >= 3
     assert all(c.n_jobs == 50 for c in cells)

@@ -1,0 +1,111 @@
+"""Uniform-price auction clearing: deterministic unit coverage.
+
+The displacement ladder, the prefix clearing rule, tie-breaking, the
+vectorized per-period clearing, and the engine-facing effective-trace
+collapse.  (Randomized invariants live in ``test_auction_properties.py``.)
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import constant_trace, get_instance, synthetic_trace
+from repro.market import (
+    MarketParams,
+    clear_periods,
+    clear_stack,
+    effective_trace,
+    free_depth,
+    marginal_price,
+)
+
+IT = get_instance("m1.xlarge")
+P = MarketParams()
+
+
+def test_marginal_price_ladder_shape():
+    base, free, K = 0.36, 2, 4
+    lad = marginal_price(base, free, np.arange(0, 6), K, P)
+    # 0..free units: exogenous price, untouched
+    assert lad[0] == lad[1] == lad[2] == base
+    # displacement rungs: geometric on the $0.001 grid
+    assert lad[3] == round(base * 1.05, 3)
+    assert lad[4] == round(base * 1.05**2, 3)
+    # nothing for sale beyond capacity
+    assert np.isinf(lad[5])
+    assert (np.diff(lad) >= 0).all()
+
+
+def test_clear_stack_homogeneous_block():
+    """free=2, capacity=4, three identical bids above the first rung: all
+    served at the uniform price of the marginal (third) unit."""
+    r = clear_stack([0.3808] * 3, 0.36, 2, 4, P)
+    assert r.n_served == 3
+    assert r.price == round(0.36 * 1.05, 3) == 0.378
+    assert r.served.all()
+    # a fourth identical unit does not clear rung 2
+    r4 = clear_stack([0.3808] * 4, 0.36, 2, 4, P)
+    assert r4.n_served == 3
+    assert list(r4.served) == [True, True, True, False]  # earlier stack wins ties
+    # preempted <=> bid < own marginal price
+    assert (~r4.served == (np.asarray([0.3808] * 4) < r4.required)).all()
+
+
+def test_clear_stack_high_bidder_displaces():
+    """A later high bid outranks the incumbents: the weakest identical
+    incumbent is displaced and the clearing price rises."""
+    lo = clear_stack([0.3808] * 3, 0.36, 2, 4, P)
+    hi = clear_stack([0.3808, 0.3808, 0.3808, 0.416], 0.36, 2, 4, P)
+    assert hi.price >= lo.price
+    assert hi.n_served == 3
+    assert list(hi.served) == [True, True, False, True]
+    # the survivor pays no more than its bid
+    assert hi.price <= 0.3808
+
+
+def test_clear_stack_empty_and_unmeetable():
+    r = clear_stack([], 0.40, 1, 2, P)
+    assert r.n_served == 0 and r.price == 0.40
+    r = clear_stack([0.01], 0.40, 0, 2, P)
+    assert r.n_served == 0 and r.price == 0.40 and not r.served.any()
+
+
+def test_clear_periods_matches_clear_stack():
+    rng = np.random.default_rng(7)
+    n, periods, K = 6, 40, 5
+    bids = np.round(rng.uniform(0.2, 0.9, n), 3)
+    active = rng.random((n, periods)) < 0.6
+    base = np.round(rng.uniform(0.2, 0.8, periods), 3)
+    free = rng.integers(0, K + 1, periods)
+    n_served, price = clear_periods(bids, active, base, free, K, P)
+    for p in range(periods):
+        ref = clear_stack(bids[active[:, p]], float(base[p]), int(free[p]), K, P)
+        assert n_served[p] == ref.n_served
+        assert price[p] == ref.price
+
+
+def test_effective_trace_shares_segmentation():
+    tr = synthetic_trace(IT, 10, seed=2)
+    et = effective_trace(tr, 4, 2, P, on_demand=IT.on_demand)
+    assert et.times is tr.times  # same boundaries, same horizon
+    assert et.horizon == tr.horizon
+    assert (et.prices >= tr.prices).all()
+
+
+def test_effective_trace_demand_monotone():
+    tr = synthetic_trace(IT, 10, seed=5)
+    prev = effective_trace(tr, 4, 1, P, on_demand=IT.on_demand)
+    for d in (2, 3, 4):
+        cur = effective_trace(tr, 4, d, P, on_demand=IT.on_demand)
+        assert (cur.prices >= prev.prices).all()
+        prev = cur
+    # beyond capacity nothing is for sale anywhere
+    assert np.isinf(effective_trace(tr, 4, 5, P, on_demand=IT.on_demand).prices).all()
+
+
+def test_effective_trace_deep_free_band_is_identity():
+    """Bids/demand inside the free depth leave the base band untouched —
+    contention only appears when the pool is actually contended."""
+    tr = constant_trace(0.36, 48 * 3600.0)
+    et = effective_trace(tr, 8, 2, P, on_demand=0.68)
+    # util(0.36/0.68) = util_base -> used=round(8*0.55)=4, free=4 >= demand=2
+    assert np.array_equal(et.prices, tr.prices)

@@ -1,0 +1,104 @@
+"""Hypothesis fuzz: auction-clearing invariants (tier-1).
+
+Randomized stacks and background states must always satisfy:
+
+  * **monotone price in demand** — adding a bid never lowers the clearing
+    price (and never shrinks the served count);
+  * **conservation of capacity** — served foreground plus retained
+    background never exceeds capacity, and equals it exactly whenever any
+    background unit is displaced;
+  * **preemption rule** — a bidder is unserved iff its bid is below the
+    marginal price of its own rank; for homogeneous stacks this collapses to
+    the engine's out-of-bid rule: preempted ⇔ bid < clearing price.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.market import MarketParams, clear_stack, effective_prices, marginal_price
+
+P = MarketParams()
+
+prices = st.floats(0.05, 2.0).map(lambda x: round(x, 3))
+bids = st.lists(st.floats(0.001, 3.0).map(lambda x: round(x, 3)), min_size=0, max_size=12)
+capacities = st.integers(1, 8)
+
+
+@st.composite
+def market_state(draw):
+    capacity = draw(capacities)
+    free = draw(st.integers(0, capacity))
+    return draw(prices), free, capacity
+
+
+@given(market_state(), bids, st.floats(0.001, 3.0).map(lambda x: round(x, 3)))
+@settings(max_examples=200, deadline=None)
+def test_adding_a_bid_is_monotone(state, stack, extra):
+    base, free, capacity = state
+    before = clear_stack(stack, base, free, capacity, P)
+    after = clear_stack(stack + [extra], base, free, capacity, P)
+    assert after.price >= before.price
+    assert after.n_served >= before.n_served
+    # incumbents never gain service from new competition
+    assert not (~before.served & after.served[: len(stack)]).any()
+
+
+@given(market_state(), bids)
+@settings(max_examples=200, deadline=None)
+def test_capacity_is_conserved(state, stack):
+    base, free, capacity = state
+    r = clear_stack(stack, base, free, capacity, P)
+    used_bg = capacity - free  # background units before clearing
+    displaced = max(0, r.n_served - free)
+    assert 0 <= r.n_served <= capacity
+    assert displaced <= used_bg
+    assert r.n_served + (used_bg - displaced) <= capacity
+    if displaced > 0:  # displacement only happens at a full pool
+        assert r.n_served + (used_bg - displaced) == capacity
+
+
+@given(market_state(), bids)
+@settings(max_examples=200, deadline=None)
+def test_preempted_iff_bid_below_required(state, stack):
+    base, free, capacity = state
+    r = clear_stack(stack, base, free, capacity, P)
+    b = np.asarray(stack)
+    assert (~r.served == (b < r.required)).all()
+    # served units pay the uniform clearing price, never more than their bid
+    if r.n_served:
+        assert (b[r.served] >= r.price).all()
+
+
+@given(market_state(), st.floats(0.001, 3.0).map(lambda x: round(x, 3)), st.integers(1, 10))
+@settings(max_examples=200, deadline=None)
+def test_homogeneous_block_matches_engine_collapse(state, bid, demand):
+    """The engine's effective price (marginal price of the demand-th unit)
+    agrees with the explicit auction of `demand` identical bids: the block
+    runs iff bid >= effective price, is preempted iff bid < clearing price
+    of the full block, and pays the effective price when it runs."""
+    base, free, capacity = state
+    q = float(marginal_price(np.array([base]), np.array([free]), demand, capacity, P)[0])
+    r = clear_stack([bid] * demand, base, free, capacity, P)
+    if bid >= q:  # whole block clears at the uniform price q
+        assert r.n_served == demand
+        assert r.price == q
+        assert r.served.all()
+    else:  # the marginal replica is preempted: bid < clearing of a full block
+        assert r.n_served < demand
+        assert not r.served[-1]
+
+
+@given(market_state(), st.integers(0, 10))
+@settings(max_examples=200, deadline=None)
+def test_effective_prices_anchor_and_monotone(state, demand):
+    base, free, capacity = state
+    arr = np.asarray([base])
+    ref = 1.0
+    q0 = effective_prices(arr, capacity, 0, ref, P)
+    assert np.array_equal(q0, arr)  # bit-identical anchor
+    qd = effective_prices(arr, capacity, demand, ref, P)
+    qd1 = effective_prices(arr, capacity, demand + 1, ref, P)
+    assert (qd1 >= qd).all()

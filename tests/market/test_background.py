@@ -1,0 +1,73 @@
+"""Background-demand calibration: the occupancy inversion and its anchor."""
+
+import numpy as np
+import pytest
+
+from repro.core import TraceModel, get_instance, synthetic_trace
+from repro.market import MarketParams, effective_prices, free_depth, resolve_ref_price, utilization
+
+IT = get_instance("m1.xlarge")
+P = MarketParams()
+
+
+def test_zero_foreground_demand_is_bitwise_anchor():
+    """The backward-compat contract: with zero foreground demand the cleared
+    price path IS the exogenous trace, bit for bit, for any capacity."""
+    tr = synthetic_trace(IT, 30, seed=3)
+    for capacity in (1, 4, 64):
+        q = effective_prices(tr.prices, capacity, 0, IT.on_demand, P)
+        assert np.array_equal(q, tr.prices)
+        assert all(a == b for a, b in zip(q, tr.prices))  # exact floats
+
+
+def test_utilization_anchors_match_generator_calibration():
+    """util_base at the generator's base band (0.53 x on-demand), sold out at
+    on-demand and above — the anchors of TraceModel.for_instance."""
+    od = IT.on_demand
+    model = TraceModel.for_instance(IT)
+    assert model.base_center == pytest.approx(P.base_frac * od)
+    u = utilization(np.array([0.1 * od, model.base_center, od, 2.5 * od]), od, P)
+    assert u[0] == u[1] == P.util_base  # at/below the base band
+    assert u[2] == 1.0 and u[3] == 1.0  # sold out at/above on-demand
+    # strictly monotone inside the band
+    band = np.linspace(model.base_center, od, 50)
+    ub = utilization(band, od, P)
+    assert (np.diff(ub) > 0).all()
+
+
+def test_free_depth_bounds_and_monotonicity():
+    tr = synthetic_trace(IT, 30, seed=1)
+    for capacity in (1, 3, 16):
+        free = free_depth(tr.prices, capacity, IT.on_demand, P)
+        assert free.dtype == np.int64
+        assert (free >= 0).all() and (free <= capacity).all()
+    # higher prices -> fewer free slots (weakly)
+    prices = np.linspace(0.3, 1.2, 40) * IT.on_demand
+    free = free_depth(prices, 16, IT.on_demand, P)
+    assert (np.diff(free) <= 0).all()
+    # sold-out segments hold zero free slots
+    assert free[-1] == 0
+
+
+def test_ref_price_resolution_order():
+    tr = synthetic_trace(IT, 5, seed=0)
+    assert resolve_ref_price(MarketParams(ref_price=1.5), IT.on_demand, tr) == 1.5
+    assert resolve_ref_price(P, IT.on_demand, tr) == IT.on_demand
+    assert resolve_ref_price(P, 0.0, tr) == float(np.max(tr.prices))
+    with pytest.raises(ValueError):
+        resolve_ref_price(P, 0.0, None)
+
+
+def test_params_validation():
+    with pytest.raises(ValueError):
+        MarketParams(price_impact=0.0)
+    with pytest.raises(ValueError):
+        MarketParams(util_base=1.5)
+    with pytest.raises(ValueError):
+        MarketParams(base_frac=1.0, full_frac=0.5)
+    with pytest.raises(ValueError):
+        MarketParams(grid=-0.001)
+    with pytest.raises(ValueError):
+        MarketParams(ref_price=0.0)
+    with pytest.raises(ValueError):
+        free_depth(np.array([0.4]), 0, 1.0, P)

@@ -1,0 +1,105 @@
+"""SpotMarket demand ledger and cleared views."""
+
+import numpy as np
+import pytest
+
+from repro.core import constant_trace, step_trace
+from repro.market import MarketParams, SpotMarket
+
+P = MarketParams()
+H = 48 * 3600.0
+
+
+def _market(price=0.36, capacity=4, od=0.68):
+    # util(0.36/0.68) = util_base = 0.55 -> used 2, free 2
+    return SpotMarket(constant_trace(price, H), capacity, P, on_demand=od)
+
+
+def test_empty_ledger_view_is_exogenous_at_free_depth():
+    sm = _market()
+    v = sm.cleared_view(0.3808)
+    assert np.array_equal(v.prices, sm.trace.prices)  # rank 1 <= free: untouched
+    assert sm.price_at(0.0) == 0.36
+
+
+def test_views_climb_the_ladder_as_demand_registers():
+    sm = _market()
+    assert np.unique(sm.cleared_view(0.3808).prices) == [0.36]
+    sm.register(0.0, H, 0.3808)
+    sm.register(0.0, H, 0.3808)
+    # third unit displaces one background holder: uniform price 0.378
+    assert np.unique(sm.cleared_view(0.3808).prices) == [0.378]
+    sm.register(0.0, H, 0.3808)
+    # fourth unit would pay 0.397 > its bid: unavailable everywhere
+    v4 = sm.cleared_view(0.3808)
+    assert np.unique(v4.prices) == [0.397]
+    assert v4.available_periods(0.3808) == []
+    # the quote reflects the cleared (served) stack, not the failed marginal
+    assert sm.price_at(10.0) == 0.378
+
+
+def test_view_boundaries_refine_by_registration():
+    sm = _market()
+    t1, t2 = 4 * 3600.0, 10 * 3600.0
+    sm.register(0.0, H, 0.3808)
+    sm.register(0.0, H, 0.3808)
+    sm.register(t1, t2, 0.3808)  # third unit only inside [t1, t2)
+    v = sm.cleared_view(0.38)  # a lower-bidding fourth unit
+    assert v.price_at(0.0) == 0.378  # 3 active incl self: rung-1 uniform price
+    assert v.price_at(t1) == 0.397  # 4 active: rung-2 marginal, above the bid
+    assert v.price_at(t2) == 0.378
+    assert v.horizon == H
+    # served interval structure: preempted exactly inside [t1, t2)
+    assert v.available_periods(0.38) == [(0.0, t1), (t2, H)]
+
+
+def test_reprice_excludes_own_stale_registration():
+    sm = _market()
+    r1 = sm.register(0.0, H, 0.3808)
+    sm.register(0.0, H, 0.3808)
+    # r1's own view must not double-count r1: two units total -> base price
+    v = sm.cleared_view(0.3808, own_reg=r1)
+    assert np.unique(v.prices) == [0.36]
+
+
+def test_tie_break_prefers_earlier_registration():
+    sm = _market(capacity=3)  # free 1 at base: only one unit at 0.36
+    r1 = sm.register(0.0, H, 0.3808)
+    r2 = sm.register(0.0, H, 0.3808)
+    v1 = sm.cleared_view(0.3808, own_reg=r1)
+    v2 = sm.cleared_view(0.3808, own_reg=r2)
+    # both runnable (rungs 1-2 clear under the bid), but r2 pays the higher
+    # marginal rung of its later rank wherever both are active
+    assert np.unique(v1.prices) == np.unique(v2.prices)  # uniform price, both served
+    r3 = sm.register(0.0, H, 0.3808)
+    v3 = sm.cleared_view(0.3808, own_reg=r3)
+    assert (v3.prices > 0.3808).all()  # third identical unit priced out
+
+
+def test_truncate_and_update_shrink_demand():
+    sm = _market()
+    sm.register(0.0, H, 0.3808)
+    sm.register(0.0, H, 0.3808)
+    r3 = sm.register(0.0, H, 0.3808)
+    assert sm.price_at(1.0) == 0.378
+    sm.truncate(r3, 3600.0)
+    assert sm.price_at(1.0) == 0.378  # still inside the registered hour
+    assert sm.price_at(2 * 3600.0) == 0.36  # demand gone after truncation
+    sm.update(r3, 0.0, 0.0)  # zero-length: fully deregistered
+    assert sm.price_at(1.0) == 0.36
+
+
+def test_step_trace_background_interacts_with_ledger():
+    # free depth varies with the exogenous price level
+    tr = step_trace([(0.0, 0.36), (6 * 3600.0, 0.55)], horizon_s=H)
+    sm = SpotMarket(tr, 4, P, on_demand=0.68)
+    assert list(sm.free) == [2, 1]  # 0.55/0.68 = 0.81 -> util 0.78 -> used 3
+    sm.register(0.0, H, 0.6)
+    v = sm.cleared_view(0.6)  # second unit
+    assert v.price_at(0.0) == 0.36  # two free slots in the base band
+    assert v.price_at(7 * 3600.0) == round(0.55 * 1.05, 3)  # displaces one holder
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        SpotMarket(constant_trace(0.36, H), 0, P, on_demand=0.68)
