@@ -13,13 +13,17 @@ bid-margin sweep.
 from __future__ import annotations
 
 import argparse
+import logging
 import sys
 import time
 
+from repro import configure_logging
 from repro.core.market import HOUR
 from repro.core.provision import SLA
 from repro.engine import FleetScenario, run_fleet
 from repro.fleet import SweepConfig, summarize
+
+log = logging.getLogger("repro.bench.fleet")
 
 
 def quick_config() -> SweepConfig:
@@ -52,6 +56,7 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="small study (CI smoke)")
     args = ap.parse_args(argv)
+    configure_logging()
 
     cfg = quick_config() if args.quick else full_config()
     t0 = time.perf_counter()
@@ -60,22 +65,23 @@ def main(argv: list[str] | None = None) -> int:
     wall = time.perf_counter() - t0
 
     n_jobs_total = sum(c.n_jobs for c in cells)
-    print(
-        f"# fleet study: {cfg.n_jobs} jobs x {len(cfg.seeds)} seeds x "
-        f"{len(cfg.bid_margins)} margins over {cfg.n_types} types "
-        f"({n_jobs_total} job-simulations, wall {wall:.2f}s)"
+    log.info(
+        "# fleet study: %d jobs x %d seeds x %d margins over %d types "
+        "(%d job-simulations, wall %.2fs)",
+        cfg.n_jobs, len(cfg.seeds), len(cfg.bid_margins), cfg.n_types,
+        n_jobs_total, wall,
     )
-    print(summarize(cells))
+    log.info(summarize(cells))
 
     # per-policy outage detail (the diversification claim, quantified)
-    print("\n# whole-fleet outage intervals (seed 0, first margin)")
+    log.info("\n# whole-fleet outage intervals (seed 0, first margin)")
     margin = cfg.bid_margins[0]
     for (policy, m, seed), res in sorted(results.items()):
         if seed != cfg.seeds[0] or m != margin:
             continue
         iv = res.outage_intervals()
         total_h = sum(b - a for a, b in iv) / HOUR
-        print(f"  {policy:<14} n={len(iv):<3d} total={total_h:.2f}h")
+        log.info("  %-14s n=%-3d total=%.2fh", policy, len(iv), total_h)
     return 0
 
 

@@ -20,10 +20,14 @@ from __future__ import annotations
 
 import glob
 import json
+import logging
 import os
 
+from repro import configure_logging
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES
+
+log = logging.getLogger("repro.bench.roofline")
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s
@@ -175,13 +179,15 @@ def format_table(rows: list[dict]) -> str:
 
 
 def main() -> None:
+    configure_logging()
     rows = load_all()
-    print(format_table(rows))
+    log.info(format_table(rows))
     os.makedirs("results", exist_ok=True)
     with open("results/roofline.json", "w") as f:
         json.dump(rows, f, indent=1)
     with open("results/roofline_table.md", "w") as f:
         f.write(format_table(rows))
+    log.info("wrote results/roofline.json and results/roofline_table.md")
 
 
 if __name__ == "__main__":

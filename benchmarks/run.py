@@ -10,10 +10,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 from __future__ import annotations
 
-import sys
+import logging
+
+from repro import configure_logging
+
+log = logging.getLogger("repro.bench.run")
 
 
 def main() -> None:
+    configure_logging()
     rows: list[tuple[str, float, str]] = []
 
     from benchmarks import microbench, paper_figs
@@ -55,9 +60,9 @@ def main() -> None:
                 )
             )
         if not ok:
-            print("# roofline: no dry-run results yet (run repro.launch.dryrun)", file=sys.stderr)
+            log.warning("# roofline: no dry-run results yet (run repro.launch.dryrun)")
     except Exception as e:  # dry-run results are optional for this entry point
-        print(f"# roofline skipped: {e}", file=sys.stderr)
+        log.warning("# roofline skipped: %s", e)
 
     for name, val in microbench.run_all().items():
         rows.append((name, float(val), ""))

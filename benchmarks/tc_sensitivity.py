@@ -16,12 +16,17 @@ quantify completion-time/cost sensitivity.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import time
 
 import jax
 import numpy as np
+
+from repro import configure_logging
+
+log = logging.getLogger("repro.bench.tc")
 
 from repro.checkpoint import CheckpointManager
 from repro.core import Scheme, SimParams, get_instance, shift_trace, simulate, synthetic_trace
@@ -87,13 +92,15 @@ def sweep_tc(tcs=(600.0, 300.0, 150.0, 75.0, 20.0), a_bid_frac=(0.555, 0.575), n
 
 
 def main() -> None:
+    configure_logging()
     factors = measure_codec_factors()
     rows = sweep_tc()
     report = {"codec_factors": factors, "tc_sweep": rows}
     os.makedirs("results", exist_ok=True)
     with open("results/tc_sensitivity.json", "w") as f:
         json.dump(report, f, indent=1)
-    print(json.dumps(report, indent=1))
+    log.info("wrote results/tc_sensitivity.json")
+    print(json.dumps(report, indent=1))  # machine-readable report on stdout
 
 
 if __name__ == "__main__":

@@ -22,6 +22,10 @@ from repro.optim import AdamWConfig, adamw_init  # noqa: E402
 from repro.parallel.sharding import DEFAULT_RULES, shard_params  # noqa: E402
 from repro.train.steps import make_train_step  # noqa: E402
 
+from repro import configure_logging  # noqa: E402
+
+log = configure_logging()
+
 cfg = get_smoke_config("glm4-9b")
 opt_cfg = AdamWConfig(lr=1e-3)
 data = TokenStream(vocab_size=cfg.vocab_size, batch=4, seq_len=64, seed=0)
@@ -34,7 +38,7 @@ with jax.sharding.set_mesh(mesh1):
     step = jax.jit(make_train_step(cfg, opt_cfg, remat=False, q_block=64, kv_block=64))
     for _ in range(3):
         params, opt_state, m = step(params, opt_state, next(data))
-print(f"phase 1 (mesh {dict(mesh1.shape)}): loss {float(m['loss']):.3f}")
+log.info(f"phase 1 (mesh {dict(mesh1.shape)}): loss {float(m['loss']):.3f}")
 
 mgr = CheckpointManager("/tmp/elastic_ckpt", keep=1)
 mgr.save(3, (params, opt_state), {"data": data.state_dict(), "step": 3})
@@ -56,6 +60,6 @@ with jax.sharding.set_mesh(mesh2):
     step2 = jax.jit(make_train_step(cfg, opt_cfg, remat=False, q_block=64, kv_block=64))
     for _ in range(3):
         params2, opt2, m2 = step2(params2, opt2, next(data2))
-print(f"phase 2 (mesh {dict(mesh2.shape)}): loss {float(m2['loss']):.3f} — resumed on a different mesh")
+log.info(f"phase 2 (mesh {dict(mesh2.shape)}): loss {float(m2['loss']):.3f} — resumed on a different mesh")
 leaf = jax.tree.leaves(params2)[0]
-print("restored param sharding:", leaf.sharding)
+log.info("restored param sharding:", leaf.sharding)

@@ -12,6 +12,10 @@ import numpy as np
 from repro.core import Scheme, catalog
 from repro.engine import BID_LIMITED_SCHEMES, Scenario, assert_parity, run
 
+from repro import configure_logging
+
+log = configure_logging()
+
 
 def main() -> None:
     types = [it for it in catalog() if it.os == "linux"][:8]
@@ -24,14 +28,14 @@ def main() -> None:
         seeds=(0, 1),
         bid_fractions=True,  # sweep each type around its own price band
     )
-    print(f"grid: {scenario.n_markets} markets x {len(scenario.bids)} bids "
+    log.info(f"grid: {scenario.n_markets} markets x {len(scenario.bids)} bids "
           f"x {len(scenario.schemes)} schemes = {scenario.n_cells} cells")
 
     res = run(scenario)  # auto -> BatchEngine, SoA lockstep
-    print(f"batch backend: {res.wall_s:.3f}s ({res.cells_per_s:.0f} cells/s)\n")
+    log.info(f"batch backend: {res.wall_s:.3f}s ({res.cells_per_s:.0f} cells/s)\n")
 
     # mean cost per (type, scheme) across seeds/bids where the job completed
-    print(f"{'type':<28}" + "".join(f"{s.value:>10}" for s in scenario.schemes))
+    log.info(f"{'type':<28}" + "".join(f"{s.value:>10}" for s in scenario.schemes))
     M, B, S = res.shape
     per_seed = len(scenario.seeds)
     for ti, it in enumerate(types):
@@ -41,17 +45,17 @@ def main() -> None:
             done = res.completed[sl, :, s]
             cost = res.cost[sl, :, s]
             row.append(f"{cost[done].mean():>10.2f}" if done.any() else f"{'--':>10}")
-        print("".join(row))
+        log.info("".join(row))
 
     # cheapest completing cell per type, HOUR scheme
-    print("\ncheapest completing bid fraction (HOUR):")
+    log.info("\ncheapest completing bid fraction (HOUR):")
     s = res.scheme_index(Scheme.HOUR)
     for ti, it in enumerate(types):
         sl = slice(ti * per_seed, (ti + 1) * per_seed)
         cost = np.where(res.completed[sl, :, s], res.cost[sl, :, s], np.inf).mean(axis=0)
         b = int(np.argmin(cost))
         if np.isfinite(cost[b]):
-            print(f"  {it.name:<28} bid={scenario.bids[b]:.2f}x on-demand  ${cost[b]:.2f}")
+            log.info(f"  {it.name:<28} bid={scenario.bids[b]:.2f}x on-demand  ${cost[b]:.2f}")
 
     # the correctness anchor: batch == reference, bit for bit
     small = Scenario.grid(
@@ -64,7 +68,7 @@ def main() -> None:
         bid_fractions=True,
     )
     report = assert_parity(small)
-    print(f"\nparity: batch == reference exactly on {report.reference.n_cells} cells")
+    log.info(f"\nparity: batch == reference exactly on {report.reference.n_cells} cells")
 
 
 if __name__ == "__main__":

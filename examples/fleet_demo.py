@@ -18,6 +18,10 @@ from repro.fleet import (
     select_types,
 )
 
+from repro import configure_logging
+
+log = configure_logging()
+
 sla = SLA(min_compute_units=4.0, os="linux")
 types = select_types(sla, n_types=16)
 seed = 0
@@ -27,16 +31,16 @@ workload = Workload.poisson(
     n_jobs=30, mean_interarrival_s=0.5 * HOUR, mean_work_s=4 * HOUR, seed=seed, sla=sla
 )
 
-print(f"{len(workload)} jobs, {workload.total_work_s / HOUR:.0f} reference-ECU hours of work, "
+log.info(f"{len(workload)} jobs, {workload.total_work_s / HOUR:.0f} reference-ECU hours of work, "
       f"{len(types)} instance types\n")
-print(f"{'policy':<14} {'cost $':>8} {'done':>7} {'mean_h':>7} {'kills':>6} {'migr':>5} {'outages':>8}")
+log.info(f"{'policy':<14} {'cost $':>8} {'done':>7} {'mean_h':>7} {'kills':>6} {'migr':>5} {'outages':>8}")
 
 migrated_example = None
 for policy in default_policies(n_replicas=2):
     ctrl = FleetController(types, traces, policy, histories=histories)
     res = ctrl.run(workload)
     s = res.summary()
-    print(
+    log.info(
         f"{policy.name:<14} {s['total_cost']:>8.2f} {s['n_completed']:>3.0f}/{s['n_jobs']:<3.0f} "
         f"{s['mean_completion_h']:>7.2f} {s['n_kills']:>6.0f} {s['n_migrations']:>5.0f} "
         f"{s['n_outages']:>8.0f}"
@@ -49,11 +53,11 @@ for policy in default_policies(n_replicas=2):
 
 if migrated_example:
     policy_name, o = migrated_example
-    print(f"\n# job {o.job.id} under {policy_name}: {o.n_migrations} migration(s), "
+    log.info(f"\n# job {o.job.id} under {policy_name}: {o.n_migrations} migration(s), "
           f"work {o.job.work_s / HOUR:.1f} ref-ECU-h")
     for rec in o.attempts:
         tag = "done" if rec.completed else ("KILL" if rec.killed else "end")
-        print(
+        log.info(
             f"  {rec.instance:<28} [{rec.launch / HOUR:7.2f}h, {rec.end / HOUR:7.2f}h] "
             f"{tag:<4} saved {rec.initial_saved_ref / HOUR:.2f} -> {rec.saved_after_ref / HOUR:.2f} "
             f"ref-ECU-h  ${rec.cost:.3f}"

@@ -19,19 +19,23 @@ from repro.engine import Scenario, run
 from repro.fleet import ClearingRebid, CostGreedyPolicy, FleetController, Workload
 from repro.market import MarketParams
 
+from repro import configure_logging
+
+log = configure_logging()
+
 IT = get_instance("m1.xlarge", region="us-east-1")  # on-demand $0.68/h
 CAPACITY = 4
 
 
 def engine_sweep() -> None:
-    print(f"== engine sweep: fleet depth vs cleared price (capacity={CAPACITY}) ==")
+    log.info(f"== engine sweep: fleet depth vs cleared price (capacity={CAPACITY}) ==")
     tr = synthetic_trace(IT, 20, seed=3)
     mp = MarketParams(ref_price=IT.on_demand)
     bid = 0.385
-    print(f"{'demand':>6} {'kills':>6} {'done':>5} {'finish (h)':>11} {'cost $':>8}")
+    log.info(f"{'demand':>6} {'kills':>6} {'done':>5} {'finish (h)':>11} {'cost $':>8}")
     for demand in (1, 2, 3, 4, 5):
         if demand > CAPACITY:
-            print(f"{demand:>6} {'pool exhausted: nothing for sale':>38}")
+            log.info(f"{demand:>6} {'pool exhausted: nothing for sale':>38}")
             continue
         sc = Scenario.from_trace(
             tr, 24 * 3600.0, [bid], schemes=(Scheme.HOUR,),
@@ -40,13 +44,13 @@ def engine_sweep() -> None:
         res = run(sc)  # batch backend; bit-identical to the scalar reference
         done = bool(res.completed[0, 0, 0])
         hours = res.completion_time[0, 0, 0] / HOUR if done else float("inf")
-        print(f"{demand:>6} {int(res.n_kills[0, 0, 0]):>6} {str(done):>5} "
+        log.info(f"{demand:>6} {int(res.n_kills[0, 0, 0]):>6} {str(done):>5} "
               f"{hours:>11.2f} {float(res.cost[0, 0, 0]):>8.2f}")
-    print()
+    log.info("")
 
 
 def fleet_replay() -> None:
-    print(f"== fleet replay: 4 staggered jobs, one type, capacity={CAPACITY} ==")
+    log.info(f"== fleet replay: 4 staggered jobs, one type, capacity={CAPACITY} ==")
     traces = {IT.name: constant_trace(0.36, 60 * HOUR)}
     workload = Workload.from_sizes([6.0] * 4, interarrival_s=0.5 * HOUR)
 
@@ -61,20 +65,20 @@ def fleet_replay() -> None:
             bid_margin=0.56, **kwargs,
         )
         res = ctl.run(workload)
-        print(f"-- {label}: cost ${res.total_cost:.2f}, "
+        log.info(f"-- {label}: cost ${res.total_cost:.2f}, "
               f"kills {res.n_kills}, completed {res.n_completed}/4")
         for r in sorted(res.records, key=lambda r: (r.launch, r.job_id)):
             fate = "done" if r.completed else ("KILLED (outbid)" if r.killed else "ran")
-            print(f"   job {r.job_id}: bid {r.bid:.3f}  "
+            log.info(f"   job {r.job_id}: bid {r.bid:.3f}  "
                   f"[{r.launch / HOUR:5.2f}h, {r.end / HOUR:5.2f}h)  "
                   f"${r.cost:5.2f}  {fate}")
-    print()
+    log.info("")
 
 
 def main() -> None:
     engine_sweep()
     fleet_replay()
-    print("see docs/market.md for the auction model and calibration")
+    log.info("see docs/market.md for the auction model and calibration")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,10 @@ import numpy as np
 
 from repro.core import ALL_SCHEMES, Scheme, SimParams, get_instance, shift_trace, simulate, synthetic_trace
 
+from repro import configure_logging
+
+log = configure_logging()
+
 it = get_instance("m1.xlarge", "eu-west-1")
 od = it.on_demand
 bids = np.round(np.linspace(0.537 * od, 0.59 * od, 9), 3)
@@ -32,7 +36,7 @@ for scheme in ALL_SCHEMES:
     agg[scheme] = (np.mean(cost), np.mean(t), np.mean(prod))
 
 opt = agg[Scheme.OPT]
-print(f"{'scheme':8} {'cost $':>8} {'time min':>9} {'cost*time':>10} {'vs OPT cost':>12} {'vs OPT time':>12}")
+log.info(f"{'scheme':8} {'cost $':>8} {'time min':>9} {'cost*time':>10} {'vs OPT cost':>12} {'vs OPT time':>12}")
 for s, (c, tm, p) in agg.items():
-    print(f"{s.value:8} {c:8.3f} {tm:9.1f} {p:10.1f} {100*(c/opt[0]-1):+11.2f}% {100*(tm/opt[1]-1):+11.2f}%")
-print("\npaper: ACC vs OPT cost +5.94%, time -10.77%, cost*time -5.56%")
+    log.info(f"{s.value:8} {c:8.3f} {tm:9.1f} {p:10.1f} {100*(c/opt[0]-1):+11.2f}% {100*(tm/opt[1]-1):+11.2f}%")
+log.info("\npaper: ACC vs OPT cost +5.94%, time -10.77%, cost*time -5.56%")

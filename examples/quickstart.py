@@ -17,14 +17,18 @@ from repro.optim import AdamWConfig, adamw_init
 from repro.train.spot_trainer import SpotTrainer, SpotTrainerConfig
 from repro.train.steps import make_train_step
 
+from repro import configure_logging
+
+log = configure_logging()
+
 # --- 1. the paper: compare checkpointing schemes on a spot-price trace ------
 it = get_instance("m1.xlarge", "eu-west-1")
 trace = synthetic_trace(it, horizon_days=30, seed=7)
-print(f"{'scheme':8} {'cost $':>8} {'time h':>8} {'ckpts':>6} {'kills':>6}")
+log.info(f"{'scheme':8} {'cost $':>8} {'time h':>8} {'ckpts':>6} {'kills':>6}")
 for scheme in ALL_SCHEMES:
     r = simulate(trace, scheme, work_s=500 * 60, bid=0.45, params=SimParams())
     t = r.completion_time / 3600 if r.completed else float("inf")
-    print(f"{scheme.value:8} {r.cost:8.2f} {t:8.2f} {r.n_checkpoints:6d} {r.n_kills + r.n_self_terminations:6d}")
+    log.info(f"{scheme.value:8} {r.cost:8.2f} {t:8.2f} {r.n_checkpoints:6d} {r.n_kills + r.n_self_terminations:6d}")
 
 # --- 2. a real model: a few optimizer steps ---------------------------------
 cfg = get_smoke_config("glm4-9b")
@@ -35,7 +39,7 @@ params = T.init_params(cfg, jax.random.PRNGKey(0))
 opt_state = adamw_init(params, opt_cfg)
 for i in range(5):
     params, opt_state, m = train_step(params, opt_state, next(data))
-    print(f"step {i}: loss {float(m['loss']):.3f}")
+    log.info(f"step {i}: loss {float(m['loss']):.3f}")
 
 # --- 3. the same training job under the ACC spot policy ---------------------
 tcfg = SpotTrainerConfig(a_bid=0.45, ckpt_dir="/tmp/quickstart_ckpt", max_steps=20, step_time_s=300.0)
@@ -47,7 +51,7 @@ trainer = SpotTrainer(
     trace=trace,
 )
 report = trainer.run()
-print(
+log.info(
     f"\nACC spot run: {report.steps_done} steps, ${report.cost:.2f}, "
     f"{report.n_checkpoints} checkpoints, {report.n_preemptions} preemptions"
 )

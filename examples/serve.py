@@ -11,6 +11,10 @@ from repro.configs import get_smoke_config
 from repro.models import transformer as T
 from repro.train.steps import greedy_sample
 
+from repro import configure_logging
+
+log = configure_logging()
+
 for arch in ("glm4-9b", "recurrentgemma-9b", "falcon-mamba-7b"):
     cfg = get_smoke_config(arch)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -25,4 +29,4 @@ for arch in ("glm4-9b", "recurrentgemma-9b", "falcon-mamba-7b"):
         tok = greedy_sample(logits)
         out.append(tok)
     gen = jnp.concatenate(out, axis=1)
-    print(f"{arch:20s} prompt {prompt.shape} -> generated {gen.shape}: {gen[0].tolist()}")
+    log.info(f"{arch:20s} prompt {prompt.shape} -> generated {gen.shape}: {gen[0].tolist()}")

@@ -22,6 +22,10 @@ from repro.optim import AdamWConfig, adamw_init
 from repro.train.spot_trainer import SpotTrainer, SpotTrainerConfig
 from repro.train.steps import make_train_step
 
+from repro import configure_logging
+
+log = configure_logging()
+
 PRESETS = {
     "tiny": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=2048, batch=8, seq=128),
     "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32128, batch=8, seq=512),
@@ -41,7 +45,7 @@ def main():
         name=f"spot-{args.preset}", family="dense", n_layers=p["n_layers"], d_model=p["d_model"],
         n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"], vocab_size=p["vocab_size"],
     )
-    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+    log.info(f"model: {cfg.param_count()/1e6:.1f}M params")
     opt_cfg = AdamWConfig(lr=3e-4)
     train_step = jax.jit(make_train_step(cfg, opt_cfg, remat=False, q_block=128, kv_block=128))
     data = TokenStream(vocab_size=cfg.vocab_size, batch=p["batch"], seq_len=p["seq"], seed=5)
@@ -57,7 +61,7 @@ def main():
     )
     trainer = SpotTrainer(tcfg, train_step=train_step, init_params=init, data=data, trace=trace)
     report = trainer.run()
-    print(
+    log.info(
         f"\ncompleted={report.completed} steps={report.steps_done} "
         f"virtual={report.virtual_time_s/3600:.1f}h cost=${report.cost:.2f}\n"
         f"checkpoints={report.n_checkpoints} preemptions={report.n_preemptions} "

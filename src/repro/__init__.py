@@ -1,0 +1,41 @@
+"""repro: reproduction of "Application-centric Resource Provisioning for
+Amazon EC2 Spot Instances" grown into a multi-backend simulation system.
+
+Library logging follows stdlib convention: everything logs under the
+``"repro"`` logger hierarchy, which carries a :class:`logging.NullHandler`
+so importing the package never configures logging for the host application.
+Scripts (benchmarks/, examples/) opt in via :func:`configure_logging`, and
+the ``REPRO_LOG`` environment variable sets the level — ``REPRO_LOG=debug``
+turns on diagnostic output anywhere the package is used.
+"""
+
+from __future__ import annotations
+
+import logging
+import os
+
+logging.getLogger("repro").addHandler(logging.NullHandler())
+
+
+def configure_logging(level: int | str | None = None, fmt: str = "%(message)s") -> logging.Logger:
+    """Attach a plain stream handler to the ``"repro"`` logger.
+
+    The level resolves, in order: the ``level`` argument, the ``REPRO_LOG``
+    environment variable (``debug`` / ``info`` / ``warning`` / ...), then
+    ``INFO``.  Repeated calls reconfigure (the handler is replaced, not
+    stacked), so scripts can call it unconditionally.  Returns the logger.
+    """
+    if level is None:
+        level = os.environ.get("REPRO_LOG", "info")
+    if isinstance(level, str):
+        level = getattr(logging, level.upper())
+    log = logging.getLogger("repro")
+    for h in list(log.handlers):
+        if getattr(h, "_repro_configured", False):
+            log.removeHandler(h)
+    handler = logging.StreamHandler()
+    handler.setFormatter(logging.Formatter(fmt))
+    handler._repro_configured = True
+    log.addHandler(handler)
+    log.setLevel(level)
+    return log

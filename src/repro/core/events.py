@@ -20,6 +20,7 @@ from typing import Callable, Iterator
 
 from repro.core.market import PriceTrace
 from repro.core.schemes import SimParams, decision_points
+from repro.obs.telemetry import current as _obs_current
 
 
 class EventKind(enum.Enum):
@@ -60,16 +61,30 @@ class SpotEventGenerator:
         t_cd, t_td = decision_points(hour_boundary, self.params)
         price_cd = self.price_fn(t_cd)
         if price_cd > self.a_bid:
-            yield Event(EventKind.CKPT, t_cd, {"price": price_cd, "deadline": hour_boundary})
+            yield self._emit(
+                Event(EventKind.CKPT, t_cd, {"price": price_cd, "deadline": hour_boundary})
+            )
         price_td = self.price_fn(t_td)
         if price_td > self.a_bid:
-            yield Event(EventKind.TERMINATE, t_td, {"price": price_td, "at": hour_boundary})
+            yield self._emit(
+                Event(EventKind.TERMINATE, t_td, {"price": price_td, "at": hour_boundary})
+            )
 
     def launch_event(self, t: float) -> Event | None:
         p = self.price_fn(t)
         if p <= self.a_bid:
-            return Event(EventKind.LAUNCH, t, {"price": p})
+            return self._emit(Event(EventKind.LAUNCH, t, {"price": p}))
         return None
+
+    @staticmethod
+    def _emit(ev: Event) -> Event:
+        """Mirror a generated monitoring event onto the active telemetry
+        collector (sim-time instant + counter), then pass it through."""
+        tel = _obs_current()
+        if tel.enabled:
+            tel.event(ev.kind.value, ev.time, **ev.payload)
+            tel.count(f"events.{ev.kind.value}")
+        return ev
 
 
 def trace_price_fn(trace: PriceTrace) -> Callable[[float], float]:

@@ -27,16 +27,104 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Protocol, runtime_checkable
+from typing import Mapping, Protocol, runtime_checkable
 
 import numpy as np
 
 from repro.core.schemes import Scheme
 from repro.core.simulator import SimResult
 from repro.engine.scenario import MarketCell, Scenario
+from repro.obs.telemetry import Span, Telemetry
 
 #: SimResult fields every backend must agree on, cell for cell.
 PARITY_FIELDS = ("completed", "completion_time", "cost", "n_checkpoints", "n_kills")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemePhases:
+    """One scheme's wall-time split inside an engine run."""
+
+    sim_s: float = 0.0
+    bill_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseTimings:
+    """Typed per-phase breakdown of one engine run, built from the span tree.
+
+    Every backend populates :attr:`EngineResult.timings` with one of these
+    (the old free-form dict is gone).  Phases that a backend does not have
+    stay at their zero defaults: the fused device backends report one
+    ``sim_s`` covering all schemes, the NumPy batch driver reports per-scheme
+    ``per_scheme[name].sim_s`` instead, the scalar paths (reference engine,
+    ACC fallback) report ``scalar_s``.
+    """
+
+    engine: str
+    total_s: float
+    grid_s: float = 0.0  # period grid + ADAPT tables (cache misses only)
+    sim_s: float = 0.0  # fused one-compile sim phase (jax/pallas)
+    scalar_s: float = 0.0  # scalar event-loop phase (reference, ACC fallback)
+    impl: str | None = None  # spot_sweep implementation label, when applicable
+    per_scheme: Mapping[str, SchemePhases] = dataclasses.field(default_factory=dict)
+
+    @property
+    def bill_s(self) -> float:
+        """Total billing wall time across schemes."""
+        return sum(p.bill_s for p in self.per_scheme.values())
+
+    @property
+    def sim_total_s(self) -> float:
+        """Simulation wall time whichever way the backend phases it."""
+        return self.sim_s + sum(p.sim_s for p in self.per_scheme.values())
+
+    def asdict(self) -> dict:
+        """JSON-ready form (bench history records)."""
+        d = dataclasses.asdict(self)
+        d["per_scheme"] = {k: dataclasses.asdict(v) for k, v in self.per_scheme.items()}
+        return d
+
+    @classmethod
+    def from_span(cls, root: Span, engine: str, total_s: float) -> "PhaseTimings":
+        """Fold an ``engine.run`` span subtree into the typed record.
+
+        Span conventions (see docs/observability.md): ``grid`` wraps the
+        period-grid/tables build, ``sim`` wraps simulation (with a
+        ``scheme`` attr on per-scheme backends, an ``impl`` attr on the
+        fused ones), ``bill`` wraps billing per scheme, ``scalar`` wraps the
+        scalar event-loop fill.  ``sim`` spans exclude their nested ``bill``
+        children via :attr:`Span.self_dur`.
+        """
+        grid_s = scalar_s = sim_s = 0.0
+        impl = None
+        per: dict[str, dict[str, float]] = {}
+
+        def bucket(scheme: str) -> dict[str, float]:
+            return per.setdefault(scheme, {"sim_s": 0.0, "bill_s": 0.0})
+
+        for s in root.find("grid"):
+            grid_s += s.dur
+        for s in root.find("scalar"):
+            scalar_s += s.dur
+        for s in root.find("sim"):
+            if "impl" in s.attrs:
+                impl = s.attrs["impl"]
+            if "scheme" in s.attrs:
+                bucket(s.attrs["scheme"])["sim_s"] += s.self_dur
+            else:
+                sim_s += s.self_dur
+        for s in root.find("bill"):
+            if "scheme" in s.attrs:
+                bucket(s.attrs["scheme"])["bill_s"] += s.dur
+        return cls(
+            engine=engine,
+            total_s=total_s,
+            grid_s=grid_s,
+            sim_s=sim_s,
+            scalar_s=scalar_s,
+            impl=impl,
+            per_scheme={k: SchemePhases(**v) for k, v in per.items()},
+        )
 
 
 @dataclasses.dataclass
@@ -62,9 +150,10 @@ class EngineResult:
     work_lost_s: np.ndarray  # float64
     wall_s: float = 0.0
     sim_results: dict[tuple[int, int, int], SimResult] | None = None
-    #: phase-timing breakdown (grid build, per-scheme sim vs billing, scalar
-    #: fill) populated by the array backends; ``engine_bench --profile`` view
-    timings: dict | None = None
+    #: typed phase-timing breakdown (grid build, per-scheme sim vs billing,
+    #: scalar fill) built from the run's span tree; populated by **every**
+    #: backend (``engine_bench --profile`` renders it)
+    timings: PhaseTimings | None = None
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -120,6 +209,22 @@ class EngineResult:
         for s, scheme in enumerate(self.schemes):
             out[scheme] = [self.cell(market, b, s) for b in range(len(self.bids))]
         return out
+
+
+def fold_result_counters(tel: Telemetry, res: EngineResult) -> None:
+    """Fold a finished result grid into an active collector's counters.
+
+    The array backends accumulate kills/checkpoints *on device* inside the
+    compiled program; this is where those tallies (and the scalar paths'
+    equivalents) surface as telemetry, once per run — the hot loops stay
+    uninstrumented.
+    """
+    tel.count("engine.runs")
+    tel.count("engine.cells", res.n_cells)
+    tel.count("engine.kills", int(res.n_kills.sum()))
+    tel.count("engine.checkpoints", int(res.n_checkpoints.sum()))
+    tel.count("engine.completions", int(res.completed.sum()))
+    tel.count("engine.work_lost_s", float(res.work_lost_s.sum()))
 
 
 def empty_result(scenario: Scenario, markets: list[MarketCell], engine: str) -> EngineResult:

@@ -36,7 +36,7 @@ import weakref
 import numpy as np
 
 from repro.core.schemes import Scheme
-from repro.engine.base import EngineResult, empty_result
+from repro.engine.base import EngineResult, PhaseTimings, empty_result, fold_result_counters
 from repro.engine.kernels import (
     _EPS,
     AdaptTables,
@@ -45,6 +45,7 @@ from repro.engine.kernels import (
     _kernel_windows,
 )
 from repro.engine.scenario import BATCHED_SCHEMES, MarketCell, Scenario
+from repro.obs import telemetry as obs
 
 #: Per-scenario cache of the derived simulation inputs (period grid, ADAPT
 #: decision tables) shared by *every* array backend in the process: running
@@ -61,11 +62,14 @@ def grid_and_tables(
     Both are pure functions of the scenario (materialization is
     deterministic), so one build serves every backend and every re-run in the
     process."""
+    tel = obs.current()
     entry = _SCENARIO_CACHE.setdefault(scenario, {})
     if "grid" not in entry:
-        entry["grid"] = _PeriodGrid.build(markets, scenario)
+        with tel.span("grid.periods"):
+            entry["grid"] = _PeriodGrid.build(markets, scenario)
     if need_adapt and "tables" not in entry:
-        entry["tables"] = AdaptTables.build(markets, scenario, entry["grid"])
+        with tel.span("grid.adapt_tables"):
+            entry["tables"] = AdaptTables.build(markets, scenario, entry["grid"])
     return entry["grid"], entry.get("tables")
 
 
@@ -80,60 +84,63 @@ def run_batched(scenario: Scenario, engine_name: str, run_schemes) -> EngineResu
     scalar-fills the rest.  The backends can never drift in their
     orchestration, only in their kernels.
 
-    ``run_schemes`` returns ``(outs, timings)``: per-scheme output dicts plus
-    a free-form phase-timing dict merged into ``EngineResult.timings``.
+    Every phase is timed as a telemetry span (``grid`` / ``sim`` / ``bill``
+    / ``scalar`` under one ``engine.run`` root); the span tree lands in the
+    active :class:`~repro.obs.telemetry.Telemetry` collector when there is
+    one — a throwaway local collector otherwise — and is folded into the
+    typed :class:`~repro.engine.base.PhaseTimings` on
+    ``EngineResult.timings`` either way.  ``run_schemes`` returns ``(outs,
+    info)``: per-scheme output dicts plus a small free-form dict (the
+    ``impl`` label) that the kernel test suite reads directly.
     """
     markets = scenario.materialize()
+    amb = obs.current()
+    tel = amb if amb.enabled else obs.Telemetry()  # local phase recorder
     t0 = time.perf_counter()  # wall_s measures simulation, not trace gen
     res = empty_result(scenario, markets, engine_name)
-    timings: dict = {}
 
-    batched = [s for s in scenario.schemes if s in BATCHED_SCHEMES]
-    fallback = [s for s in scenario.schemes if s not in BATCHED_SCHEMES]
+    with obs.activate(tel), tel.span("engine.run", engine=engine_name) as root:
+        batched = [s for s in scenario.schemes if s in BATCHED_SCHEMES]
+        fallback = [s for s in scenario.schemes if s not in BATCHED_SCHEMES]
 
-    if batched:
-        tg = time.perf_counter()
-        grid, adapt_tables = grid_and_tables(scenario, markets, Scheme.ADAPT in batched)
-        timings["grid_s"] = time.perf_counter() - tg
-        outs, sub = run_schemes(tuple(batched), grid, scenario, adapt_tables)
-        timings.update(sub)
-        M, B = len(markets), len(scenario.bids)
-        for scheme, out in outs.items():
-            s = scenario.schemes.index(scheme)
-            res.completed[:, :, s] = out["completed"].reshape(M, B)
-            res.completion_time[:, :, s] = out["completion_time"].reshape(M, B)
-            res.cost[:, :, s] = out["cost"].reshape(M, B)
-            res.n_checkpoints[:, :, s] = out["n_checkpoints"].reshape(M, B)
-            res.n_kills[:, :, s] = out["n_kills"].reshape(M, B)
-            res.work_lost_s[:, :, s] = out["work_lost_s"].reshape(M, B)
+        if batched:
+            with tel.span("grid"):
+                grid, adapt_tables = grid_and_tables(scenario, markets, Scheme.ADAPT in batched)
+            outs, _info = run_schemes(tuple(batched), grid, scenario, adapt_tables)
+            M, B = len(markets), len(scenario.bids)
+            for scheme, out in outs.items():
+                s = scenario.schemes.index(scheme)
+                res.completed[:, :, s] = out["completed"].reshape(M, B)
+                res.completion_time[:, :, s] = out["completion_time"].reshape(M, B)
+                res.cost[:, :, s] = out["cost"].reshape(M, B)
+                res.n_checkpoints[:, :, s] = out["n_checkpoints"].reshape(M, B)
+                res.n_kills[:, :, s] = out["n_kills"].reshape(M, B)
+                res.work_lost_s[:, :, s] = out["work_lost_s"].reshape(M, B)
 
-    if fallback:
-        # ACC is a different control loop (bid-unlimited leases): run it
-        # on the scalar path shared with ReferenceEngine, never drifting
-        from repro.engine.reference import scalar_fill
+        if fallback:
+            # ACC is a different control loop (bid-unlimited leases): run it
+            # on the scalar path shared with ReferenceEngine, never drifting
+            from repro.engine.reference import scalar_fill
 
-        ts = time.perf_counter()
-        scalar_fill(scenario, markets, res, fallback)
-        timings["scalar_s"] = time.perf_counter() - ts
+            with tel.span("scalar", schemes=[s.value for s in fallback]):
+                scalar_fill(scenario, markets, res, fallback)
 
     res.wall_s = time.perf_counter() - t0
-    res.timings = timings
+    res.timings = PhaseTimings.from_span(root, engine_name, res.wall_s)
+    if amb.enabled:
+        fold_result_counters(amb, res)
     return res
 
 
 def run_schemes_numpy(schemes, grid, scenario, adapt_tables):
     """NumPy evaluation of a batched scheme set, one driver pass per scheme.
     Also the ``impl="ref"`` path of the ``spot_sweep`` kernel triad."""
+    tel = obs.current()
     outs: dict[Scheme, dict] = {}
-    per_scheme: dict[str, dict] = {}
     for scheme in schemes:
-        ts = time.perf_counter()
-        out = _run_scheme(scheme, grid, scenario, adapt_tables)
-        total = time.perf_counter() - ts
-        bill = out.pop("bill_s")
-        per_scheme[scheme.value] = {"sim_s": total - bill, "bill_s": bill}
-        outs[scheme] = out
-    return outs, {"per_scheme": per_scheme}
+        with tel.span("sim", scheme=scheme.value):
+            outs[scheme] = _run_scheme(scheme, grid, scenario, adapt_tables)
+    return outs, {"impl": "ref"}
 
 
 class BatchEngine:
@@ -359,8 +366,8 @@ def _run_scheme(
                 work_lost[kl_idx] += work_end[kl] - saved_out[kl]
                 saved[kl_idx] = saved_out[kl]
 
-    tb = time.perf_counter()
-    total, n_kills = _bill_runs(grid, runs, delta)
+    with obs.current().span("bill", scheme=scheme.value):
+        total, n_kills = _bill_runs(grid, runs, delta)
 
     return {
         "completed": done & np.isfinite(comp_time),
@@ -369,7 +376,6 @@ def _run_scheme(
         "n_checkpoints": n_ckpt,
         "n_kills": n_kills,
         "work_lost_s": work_lost,
-        "bill_s": time.perf_counter() - tb,
     }
 
 
@@ -495,6 +501,7 @@ def _run_adapt(
             # -- compact: drop finished cells so the tail runs on small arrays
             na = int(alive.sum())
             if na and na <= N // 2:
+                obs.current().count("adapt.compactions")
                 keep = alive
                 idx, cnt, hor, off, top = idx[keep], cnt[keep], hor[keep], off[keep], top[keep]
                 saved, p, t, work, sv = saved[keep], p[keep], t[keep], work[keep], sv[keep]
@@ -503,19 +510,19 @@ def _run_adapt(
                 alive = np.ones(na, dtype=bool)
                 N = na
 
-    tb = time.perf_counter()
-    if Rc:
-        total, n_kills = _bill_runs_flat(
-            grid,
-            np.concatenate(Rp),
-            np.concatenate(Rc),
-            np.concatenate(Ra),
-            np.concatenate(Re),
-            np.concatenate(Ru),
-            delta,
-        )
-    else:
-        total, n_kills = np.zeros(C), np.zeros(C, dtype=np.int64)
+    with obs.current().span("bill", scheme=Scheme.ADAPT.value):
+        if Rc:
+            total, n_kills = _bill_runs_flat(
+                grid,
+                np.concatenate(Rp),
+                np.concatenate(Rc),
+                np.concatenate(Ra),
+                np.concatenate(Re),
+                np.concatenate(Ru),
+                delta,
+            )
+        else:
+            total, n_kills = np.zeros(C), np.zeros(C, dtype=np.int64)
 
     return {
         "completed": done & np.isfinite(comp_time),
@@ -524,7 +531,6 @@ def _run_adapt(
         "n_checkpoints": n_ckpt,
         "n_kills": n_kills,
         "work_lost_s": work_lost,
-        "bill_s": time.perf_counter() - tb,
     }
 
 

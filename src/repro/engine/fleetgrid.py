@@ -33,6 +33,7 @@ from repro.fleet.policies import (
 from repro.fleet.sweep import SweepCell, batched_fleet_traces, select_types, summarize
 from repro.fleet.workload import Workload
 from repro.engine.scenario import FleetScenario
+from repro.obs import telemetry as obs
 
 
 def policy_registry(n_replicas: int) -> dict[str, PlacementPolicy]:
@@ -110,18 +111,21 @@ def run_fleet(
         for margin in scenario.bid_margins:
             for policy in policies:
                 c0 = time.perf_counter()
-                controller = FleetController(
-                    types,
-                    traces_by_seed[seed],
-                    policy,
-                    histories=hist_by_seed[seed],
-                    scheme=scenario.scheme,
-                    bid_margin=margin,
-                    capacity=scenario.capacity,
-                    market_params=scenario.market,
-                    bid_policy=resolve_bid_policy(scenario, margin),
-                )
-                res = controller.run(workload)
+                with obs.current().span(
+                    "fleet.cell", policy=policy.name, margin=margin, seed=seed
+                ):
+                    controller = FleetController(
+                        types,
+                        traces_by_seed[seed],
+                        policy,
+                        histories=hist_by_seed[seed],
+                        scheme=scenario.scheme,
+                        bid_margin=margin,
+                        capacity=scenario.capacity,
+                        market_params=scenario.market,
+                        bid_policy=resolve_bid_policy(scenario, margin),
+                    )
+                    res = controller.run(workload)
                 wall = time.perf_counter() - c0
                 results[(policy.name, margin, seed)] = res
                 cells.append(

@@ -17,8 +17,9 @@ from typing import Sequence
 
 from repro.core.schemes import FailurePdf, Scheme
 from repro.core.simulator import simulate
-from repro.engine.base import EngineResult, empty_result
+from repro.engine.base import EngineResult, PhaseTimings, empty_result, fold_result_counters
 from repro.engine.scenario import MarketCell, Scenario
+from repro.obs import telemetry as obs
 
 
 def scalar_fill(
@@ -77,10 +78,17 @@ class ReferenceEngine:
 
     def run(self, scenario: Scenario) -> EngineResult:
         markets = scenario.materialize()
+        amb = obs.current()
+        tel = amb if amb.enabled else obs.Telemetry()  # local phase recorder
         t0 = time.perf_counter()  # wall_s measures simulation, not trace gen
         res = empty_result(scenario, markets, self.name)
         if self.keep_runs:
             res.sim_results = {}
-        scalar_fill(scenario, markets, res, scenario.schemes)
+        with obs.activate(tel), tel.span("engine.run", engine=self.name) as root:
+            with tel.span("scalar", schemes=[s.value for s in scenario.schemes]):
+                scalar_fill(scenario, markets, res, scenario.schemes)
         res.wall_s = time.perf_counter() - t0
+        res.timings = PhaseTimings.from_span(root, self.name, res.wall_s)
+        if amb.enabled:
+            fold_result_counters(amb, res)
         return res

@@ -46,6 +46,7 @@ from repro.core.simulator import _EPS, simulate_acc_attempt, simulate_attempt
 from repro.fleet.policies import BidPolicy, Placement, PlacementContext, PlacementPolicy
 from repro.fleet.workload import Job, Workload
 from repro.market import FleetMarket, MarketParams
+from repro.obs import telemetry as obs
 
 _ARRIVAL, _END = 0, 1
 
@@ -320,6 +321,7 @@ class FleetController:
     # -- main loop ----------------------------------------------------------
 
     def run(self, workload: Workload) -> FleetResult:
+        tel = obs.current()
         records: list[AttemptRecord] = []
         states: dict[int, _JobState] = {}
         heap: list[tuple[float, int, int, tuple]] = []
@@ -370,6 +372,12 @@ class FleetController:
             if att is None:  # type never available again under this bid
                 rep.done = True
                 return
+            tel.count("fleet.attempts")
+            if tel.enabled:
+                tel.event(
+                    "fleet.launch", att.launch,
+                    job=st.job.id, replica=r_idx, instance=placement.instance.name,
+                )
             reg = None
             if self.market is not None:
                 reg = self.market[placement.instance.name].register(
@@ -397,6 +405,7 @@ class FleetController:
             displaced instance migrates, it does not come back.
             """
             nonlocal token_counter
+            tel.count("market.reclear_passes")
             sm = self.market[name]
             for job_id, st2 in states.items():
                 if st2.completed_at is not None:
@@ -414,15 +423,21 @@ class FleetController:
                         # priced out of the whole horizon before ever
                         # launching: migrate like any other preemption (the
                         # displacing demand starts at lo, so re-place there)
+                        tel.count("fleet.preempt_outbid")
                         sm.update(reg2, reg2.start, reg2.start)
                         rep2.token = None
                         rep2.active = None
                         if self.migrate and rep2.n_migrations < self.max_migrations_per_replica:
                             rep2.n_migrations += 1
+                            tel.count("fleet.migrations")
                             replace(st2, r2, lo, frozenset({name}))
                         else:
                             rep2.done = True
                         continue
+                    if new_att.killed and not att2.killed:
+                        # the new demand's clearing price now exceeds this
+                        # replica's bid: its attempt shortens into a kill
+                        tel.count("fleet.preempt_outbid")
                     sm.update(reg2, new_att.launch, new_att.end)
                     token_counter += 1
                     rep2.token = token_counter
@@ -444,10 +459,11 @@ class FleetController:
             if not feasible:
                 rep.done = True
                 return
-            self.ctx.spot_prices_now = self._spot_prices(now)
-            remaining = st.job.work_s - rep.saved_ref
-            placements = self.policy.place(st.job, now, remaining, feasible, self.ctx, k=1)
-            spawn_attempt(st, r_idx, placements[0], now)
+            with tel.span("fleet.migrate", job=st.job.id, replica=r_idx):
+                self.ctx.spot_prices_now = self._spot_prices(now)
+                remaining = st.job.work_s - rep.saved_ref
+                placements = self.policy.place(st.job, now, remaining, feasible, self.ctx, k=1)
+                spawn_attempt(st, r_idx, placements[0], now)
 
         def record_attempt(
             st: _JobState, r_idx: int, att, placement: Placement, initial_ref: float,
@@ -488,12 +504,15 @@ class FleetController:
                 if not feasible:
                     states[job.id] = _JobState(job=job, replicas={})
                     continue
-                self.ctx.spot_prices_now = self._spot_prices(now)
-                placements = self.policy.place(job, now, job.work_s, feasible, self.ctx)
-                st = _JobState(job=job, replicas={r: _Replica() for r in range(len(placements))})
-                states[job.id] = st
-                for r_idx, placement in enumerate(placements):
-                    spawn_attempt(st, r_idx, placement, now)
+                with tel.span("fleet.place", job=job.id):
+                    self.ctx.spot_prices_now = self._spot_prices(now)
+                    placements = self.policy.place(job, now, job.work_s, feasible, self.ctx)
+                    st = _JobState(
+                        job=job, replicas={r: _Replica() for r in range(len(placements))}
+                    )
+                    states[job.id] = st
+                    for r_idx, placement in enumerate(placements):
+                        spawn_attempt(st, r_idx, placement, now)
                 continue
 
             job_id, r_idx, token = payload
@@ -506,8 +525,12 @@ class FleetController:
             rep.active = None
             scale = self._scale(placement.instance)
 
+            tel.count("fleet.checkpoints", att.n_checkpoints)
             if att.completed:
                 st.completed_at = att.end
+                tel.count("fleet.completions")
+                if tel.enabled:
+                    tel.event("fleet.complete", att.end, job=job_id, replica=r_idx)
                 record_attempt(
                     st, r_idx, att, placement, initial_ref, att.end,
                     Termination.USER, att.cost, False, True, False, st.job.work_s,
@@ -545,6 +568,13 @@ class FleetController:
                 )
             if att.killed:
                 rep.n_kills += 1
+                tel.count("fleet.kills")
+                tel.count("fleet.work_lost_s", float(att.work_done_s - att.saved_work_s))
+                if tel.enabled:
+                    tel.event(
+                        "fleet.kill", att.end,
+                        job=job_id, replica=r_idx, instance=placement.instance.name,
+                    )
             record_attempt(
                 st, r_idx, att, placement, initial_ref, att.end,
                 att.termination(), att.cost, att.killed, False, False, saved_after_ref,
@@ -555,6 +585,7 @@ class FleetController:
             evicted = att.killed or att.self_terminated
             if evicted and self.migrate and rep.n_migrations < self.max_migrations_per_replica:
                 rep.n_migrations += 1
+                tel.count("fleet.migrations")
                 replace(st, r_idx, att.end + _EPS, frozenset({placement.instance.name}))
             else:
                 rep.done = True

@@ -20,18 +20,19 @@ biller with the batch backend, so costs are bit-identical across every impl.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core.schemes import Scheme
+from repro.obs import retrace
+from repro.obs import telemetry as obs
 
 _FORCE_IMPL: str | None = None
 
+#: retrace-registry scope for the fused sweep programs (detail = scheme values)
+TRACE_SCOPE = "spot_sweep"
+
 #: jitted scan program per scheme set; shared by every engine in the process
 _SCAN_CACHE: dict[tuple, object] = {}
-#: times each cached program has been *traced* (retrace spy for tests)
-TRACE_COUNTS: dict[tuple, int] = {}
 
 
 def set_impl(impl: str | None) -> None:
@@ -46,8 +47,12 @@ def _default_impl() -> str:
 
 
 def trace_count(schemes) -> int:
-    """How many times the scan program for ``schemes`` has been traced."""
-    return TRACE_COUNTS.get(tuple(s.value for s in schemes), 0)
+    """How many times the scan program for ``schemes`` has been traced.
+
+    Thin shim over the process-wide :mod:`repro.obs.retrace` registry (scope
+    ``"spot_sweep"``); :func:`repro.obs.retrace_guard` is the general API.
+    """
+    return retrace.trace_count(TRACE_SCOPE, tuple(s.value for s in schemes))
 
 
 def _scan_fn(schemes, jax_mod):
@@ -56,10 +61,8 @@ def _scan_fn(schemes, jax_mod):
     if fn is None:
         from repro.kernels.spot_sweep import kernel as K
 
-        TRACE_COUNTS.setdefault(key, 0)
-
         def bump(k=key):
-            TRACE_COUNTS[k] += 1
+            retrace.record_trace(TRACE_SCOPE, k)
 
         fn = jax_mod.jit(K.build_sweep_scan(schemes, count_cb=bump))
         _SCAN_CACHE[key] = fn
@@ -111,10 +114,13 @@ def spot_sweep_grid(
 ):
     """Evaluate ``schemes`` over a :class:`~repro.engine.batch._PeriodGrid`.
 
-    Returns ``(outs, timings)``: ``outs`` maps each scheme to the standard
+    Returns ``(outs, info)``: ``outs`` maps each scheme to the standard
     output dict (``completed`` / ``completion_time`` / ``cost`` /
-    ``n_checkpoints`` / ``n_kills`` / ``work_lost_s``), ``timings`` records
-    the sim vs billing phase split for the benchmark's ``--profile`` view.
+    ``n_checkpoints`` / ``n_kills`` / ``work_lost_s``), ``info`` carries the
+    resolved ``impl`` label.  The sim vs billing phase split is recorded as
+    telemetry spans (``sim`` with an ``impl`` attr, ``bill`` per scheme) on
+    the active collector — :class:`repro.engine.base.PhaseTimings` folds
+    them for the benchmark's ``--profile`` view.
     """
     schemes = tuple(schemes)
     if impl is None:
@@ -129,13 +135,46 @@ def spot_sweep_grid(
     jax_mod, jnp, _ = _require_jax()
     from repro.engine.batch import _bill_runs_flat
 
+    tel = obs.current()
     params = scenario.params
     delta = float(params.billing_period_s)
     need_edge = Scheme.EDGE in schemes
     need_adapt = Scheme.ADAPT in schemes
     S = len(schemes)
-    t0 = time.perf_counter()
 
+    with tel.span("sim", impl=impl):
+        finals, recs_np = _run_device(
+            impl, schemes, grid, scenario, adapt_tables, jax_mod, jnp,
+            need_edge, need_adapt, delta, S, block_c,
+        )
+
+    outs: dict[Scheme, dict] = {}
+    for si, scheme in enumerate(schemes):
+        with tel.span("bill", scheme=scheme.value):
+            done, comp_time, n_ckpt, work_lost, n_kills = finals[si]
+            exists, end, user = recs_np[si]
+            pp, cc = np.nonzero(exists)
+            total, _ = _bill_runs_flat(
+                grid, pp, cc, grid.A[cc, pp], end[pp, cc], user[pp, cc], delta
+            )
+            outs[scheme] = {
+                "completed": done & np.isfinite(comp_time),
+                "completion_time": comp_time,
+                "cost": total,
+                "n_checkpoints": n_ckpt,
+                "n_kills": n_kills,  # accumulated on-device, not re-derived here
+                "work_lost_s": work_lost,
+            }
+    return outs, {"impl": impl}
+
+
+def _run_device(
+    impl, schemes, grid, scenario, adapt_tables, jax_mod, jnp,
+    need_edge, need_adapt, delta, S, block_c,
+):
+    """Dispatch the fused device sweep; returns per-scheme final states and
+    run records as host arrays."""
+    params = scenario.params
     if impl == "scan":
         arrs = _device_arrays(grid, jnp, need_edge, need_adapt, params.t_r, adapt_tables)
         kwargs = dict(
@@ -201,25 +240,4 @@ def spot_sweep_grid(
         recs_np = [(rex[si].T, rend[si].T, ruser[si].T) for si in range(S)]
     else:
         raise ValueError(f"unknown spot_sweep impl {impl!r}")
-    sim_s = time.perf_counter() - t0
-
-    outs: dict[Scheme, dict] = {}
-    per_scheme: dict[str, dict] = {}
-    for si, scheme in enumerate(schemes):
-        tb = time.perf_counter()
-        done, comp_time, n_ckpt, work_lost, n_kills = finals[si]
-        exists, end, user = recs_np[si]
-        pp, cc = np.nonzero(exists)
-        total, _ = _bill_runs_flat(
-            grid, pp, cc, grid.A[cc, pp], end[pp, cc], user[pp, cc], delta
-        )
-        outs[scheme] = {
-            "completed": done & np.isfinite(comp_time),
-            "completion_time": comp_time,
-            "cost": total,
-            "n_checkpoints": n_ckpt,
-            "n_kills": n_kills,  # accumulated on-device, not re-derived here
-            "work_lost_s": work_lost,
-        }
-        per_scheme[scheme.value] = {"bill_s": time.perf_counter() - tb}
-    return outs, {"impl": impl, "sim_s": sim_s, "per_scheme": per_scheme}
+    return finals, recs_np

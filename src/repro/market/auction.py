@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.market import PriceTrace
 from repro.market.background import MarketParams, free_depth, resolve_ref_price
+from repro.obs.telemetry import current as _obs_current
 
 
 def round_to_grid(x: np.ndarray, grid: float) -> np.ndarray:
@@ -166,6 +167,10 @@ def clear_periods(
     single program.
     """
     n, P = active.shape
+    tel = _obs_current()
+    if tel.enabled:
+        tel.count("market.clear_periods")
+        tel.count("market.cleared_period_cells", P)
     stack = np.where(active, np.asarray(bids, dtype=np.float64)[:, None], -np.inf)
     b_sorted = -np.sort(-stack, axis=0)  # (n, P) descending per period
     ranks = np.arange(1, n + 1)[:, None]

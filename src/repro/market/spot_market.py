@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.market import InstanceType, PriceTrace
 from repro.market.auction import clear_periods, clear_stack, marginal_price
 from repro.market.background import MarketParams, free_depth, resolve_ref_price
+from repro.obs.telemetry import current as _obs_current
 
 
 @dataclasses.dataclass
@@ -128,6 +129,9 @@ class SpotMarket:
         ledger, ``own_reg`` excluded so a re-simulated attempt does not
         compete with its own stale registration.
         """
+        tel = _obs_current()
+        if tel.enabled:
+            tel.count("market.cleared_views")
         regs = [r for r in self.ledger if r.active_span and r is not own_reg]
         tr = self.trace
         if not regs:

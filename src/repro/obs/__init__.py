@@ -1,0 +1,53 @@
+"""Observability: telemetry spans/counters/events, exporters, retrace guard.
+
+The runtime counterpart of the paper's §VI monitoring subsystem, shared by
+every layer of the repo: the engine backends time their phases as **spans**
+(the source of :class:`repro.engine.base.PhaseTimings`), the fleet
+controller and market count kills / migrations / preemptions-by-outbid /
+re-clear passes, the :class:`~repro.train.spot_trainer.SpotTrainer` emits
+the paper's ``E_ckpt`` / ``E_terminate`` / ``E_launch`` monitoring events,
+and every jitted entry point reports (re)traces to the
+:mod:`~repro.obs.retrace` registry.
+
+Nothing is recorded unless a :class:`Telemetry` collector is activated::
+
+    from repro import obs
+
+    with obs.Telemetry() as tel:
+        res = repro.engine.run(scenario, engine="jax")
+    print(tel.summary())
+    tel.write_chrome_trace("trace.json")   # chrome://tracing / perfetto
+    tel.write_jsonl("telemetry.jsonl")
+
+With no active collector every instrumentation site is a no-op (gated at
+<= a few percent end-to-end by ``benchmarks/engine_bench.py
+--overhead-gate``).  See docs/observability.md for the span/counter/event
+reference.
+"""
+
+from repro.obs.exporters import summary_table, write_chrome_trace, write_jsonl
+from repro.obs.retrace import (
+    RetraceError,
+    RetraceGuard,
+    record_trace,
+    retrace_guard,
+    trace_count,
+)
+from repro.obs.telemetry import NULL, SimEvent, Span, Telemetry, activate, current
+
+__all__ = [
+    "NULL",
+    "RetraceError",
+    "RetraceGuard",
+    "SimEvent",
+    "Span",
+    "Telemetry",
+    "activate",
+    "current",
+    "record_trace",
+    "retrace_guard",
+    "summary_table",
+    "trace_count",
+    "write_chrome_trace",
+    "write_jsonl",
+]

@@ -1,0 +1,101 @@
+"""Retrace monitor: a process-wide registry of JIT trace events.
+
+Every jitted entry point in the repo registers its (re)traces here — the
+fused spot-sweep program does it via the ``count_cb`` hook of
+:func:`repro.kernels.spot_sweep.kernel.build_sweep_scan` — keyed by a
+``(scope, detail...)`` tuple (scope ``"spot_sweep"``, detail the scheme-value
+tuple).  Tracing is *expected* exactly once per (program, shape); any later
+trace of the same key is an accidental recompile, the classic silent
+throughput killer on jit backends.
+
+:func:`retrace_guard` turns that into a loud check::
+
+    eng = get_engine("jax")
+    eng.run(scenario)                      # warm-up: compiles once
+    with retrace_guard("spot_sweep"):      # same-shape re-runs must hit cache
+        eng.run(scenario)
+        eng.run(equal_scenario)
+    # raises RetraceError if anything under the scope was (re)traced
+
+``allow=N`` permits up to ``N`` traces (e.g. one expected cold compile);
+``allow=None`` only observes.  Each recorded trace also increments the
+``jit.traces`` counter on the active :class:`~repro.obs.telemetry.Telemetry`.
+"""
+
+from __future__ import annotations
+
+from typing import Hashable, Iterable
+
+from repro.obs.telemetry import current
+
+__all__ = ["RetraceError", "RetraceGuard", "record_trace", "retrace_guard", "trace_count"]
+
+#: (scope, detail...) -> number of times that program has been traced.
+_TRACE_COUNTS: dict[tuple, int] = {}
+
+
+def _key(scope: str, detail: Iterable[Hashable] | None) -> tuple:
+    return (scope,) + (tuple(detail) if detail is not None else ())
+
+
+def record_trace(scope: str, detail: Iterable[Hashable] | None = None) -> None:
+    """Report one trace of the jitted program ``(scope, detail...)``.
+
+    Call from a trace-time Python side effect (it runs only while tracing,
+    never inside the compiled program)."""
+    key = _key(scope, detail)
+    _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
+    current().count("jit.traces")
+
+
+def trace_count(scope: str, detail: Iterable[Hashable] | None = None) -> int:
+    """Total traces recorded for one program, or for a whole scope when
+    ``detail`` is omitted."""
+    if detail is not None:
+        return _TRACE_COUNTS.get(_key(scope, detail), 0)
+    return sum(v for k, v in _TRACE_COUNTS.items() if k[0] == scope)
+
+
+def _snapshot(scope: str | None) -> dict[tuple, int]:
+    return {k: v for k, v in _TRACE_COUNTS.items() if scope is None or k[0] == scope}
+
+
+class RetraceError(AssertionError):
+    """A guarded region (re)traced a jitted program it should have reused."""
+
+
+class RetraceGuard:
+    """Context manager asserting a bounded number of traces in its extent."""
+
+    def __init__(self, scope: str | None = None, allow: int | None = 0):
+        self.scope = scope
+        self.allow = allow
+        self.new_traces = 0
+        self.traced: dict[tuple, int] = {}
+        self._before: dict[tuple, int] = {}
+
+    def __enter__(self) -> "RetraceGuard":
+        self._before = _snapshot(self.scope)
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        after = _snapshot(self.scope)
+        self.traced = {
+            k: v - self._before.get(k, 0) for k, v in after.items() if v > self._before.get(k, 0)
+        }
+        self.new_traces = sum(self.traced.values())
+        if exc_type is None and self.allow is not None and self.new_traces > self.allow:
+            scope = self.scope or "<all scopes>"
+            detail = ", ".join(f"{k}: +{n}" for k, n in sorted(self.traced.items()))
+            raise RetraceError(
+                f"{self.new_traces} jit trace(s) under scope {scope!r} "
+                f"(allowed {self.allow}): {detail} — a same-shape re-run must "
+                "reuse the compiled program; check for shape-or-dtype drift or "
+                "Python-object hashing in static args"
+            )
+        return False
+
+
+def retrace_guard(scope: str | None = None, allow: int | None = 0) -> RetraceGuard:
+    """Guard a region against accidental jit recompiles (see module docs)."""
+    return RetraceGuard(scope, allow)

@@ -38,6 +38,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import HOUR, PriceTrace, SimParams, Termination, run_cost
 from repro.core.events import EventKind, SpotEventGenerator
 from repro.core.lifecycle import AppState, Lifecycle
+from repro.obs import telemetry as obs
 
 
 @dataclasses.dataclass
@@ -147,6 +148,7 @@ class SpotTrainer:
 
     # ------------------------------------------------------------------
     def run(self) -> SpotRunReport:
+        tel = obs.current()
         cfg = self.cfg
         sim = cfg.sim
         self.lifecycle.map_modules()  # New -> Inactive (composition)
@@ -164,6 +166,9 @@ class SpotTrainer:
         t = 0.0 if self.trace.price_at(0.0) <= cfg.a_bid else self._next_launch(0.0)
         while t is not None and step < cfg.max_steps and t < self.trace.horizon:
             launch = t
+            if tel.enabled:
+                tel.event(EventKind.LAUNCH.value, launch, price=self.trace.price_at(launch))
+                tel.count(f"events.{EventKind.LAUNCH.value}")
             self.lifecycle.deploy() if self.lifecycle.state == AppState.INACTIVE else self.lifecycle.heal()
             # resume from checkpoint if one exists (first launch: fresh state)
             if self.mgr.latest_step() is not None:
@@ -173,6 +178,7 @@ class SpotTrainer:
                 self.data.load_state_dict(extra["data"])
                 step = int(extra["step"])
                 n_restore += 1
+                tel.count("trainer.restores")
             t = launch + sim.t_r  # recovery overhead
             gen = SpotEventGenerator(
                 a_bid=cfg.a_bid,
@@ -193,6 +199,7 @@ class SpotTrainer:
                     ewma = wall if ewma is None else 0.9 * ewma + 0.1 * wall
                     if wall > cfg.straggler_factor * ewma and step > 3:
                         n_straggler += 1
+                        tel.count("trainer.stragglers")
                         if self.on_straggler is not None:
                             self.on_straggler(step, wall, ewma)
                     losses.append(float(metrics["loss"]))
@@ -210,6 +217,7 @@ class SpotTrainer:
                     )
                     io_wall = time.monotonic() - wall0
                     n_ckpt += 1
+                    tel.count("trainer.checkpoints")
                     if cfg.measure_t_c:
                         # virtual t_c: modelled bytes/bw; real I/O wall time is
                         # folded in as a lower bound so t_cd stays feasible
@@ -223,10 +231,13 @@ class SpotTrainer:
             end = t if terminated is None else terminated
             cost += run_cost(self.trace, launch, end, Termination.USER, sim.billing_period_s)
             leases.append((launch, end))
+            if tel.enabled:
+                tel.event("trainer.lease", launch, end=end, steps=step)
             if terminated is None:  # completed (or horizon)
                 break
             # genuine preemption: discard live state
             n_preempt += 1
+            tel.count("trainer.preemptions")
             params, opt_state = self.init_params()
             self.lifecycle.resource_failure()  # Active -> Unreachable
             t = self._next_launch(terminated + 1e-9)

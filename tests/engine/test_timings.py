@@ -1,15 +1,17 @@
-"""EngineResult.timings: the per-phase breakdown every array backend reports.
+"""EngineResult.timings: the typed per-phase breakdown every backend reports.
 
-`engine_bench --profile` renders these; the contract is that each backend
-separates simulation from billing per scheme (plus the grid build and, with
-ACC in the scheme set, the scalar-fallback phase), with non-negative wall
-times — not just the `impl` label that the kernel suite checks.
+`engine_bench --profile` renders these; the contract is that **all** backends
+populate a :class:`repro.engine.base.PhaseTimings` built from the run's span
+tree — the NumPy batch driver with a per-scheme sim/billing split, the fused
+device backends with one `sim_s` covering all schemes plus per-scheme
+billing, the scalar paths (reference engine, ACC fallback) with `scalar_s`.
 """
 
 import pytest
 
 from repro.core import Scheme, get_instance, synthetic_trace
 from repro.engine import BID_LIMITED_SCHEMES, Scenario, get_engine
+from repro.engine.base import PhaseTimings
 
 IT = get_instance("m1.xlarge")
 
@@ -19,35 +21,38 @@ def _scenario(schemes=BID_LIMITED_SCHEMES):
     return Scenario.from_trace(tr, 6 * 3600.0, [0.36, 0.37], schemes=schemes)
 
 
-def _assert_phase_times(timings, schemes, sim_per_scheme: bool):
-    assert timings is not None
-    assert timings["grid_s"] >= 0.0
-    per_scheme = timings["per_scheme"]
-    assert set(per_scheme) == {s.value for s in schemes}
-    for phases in per_scheme.values():
-        assert phases["bill_s"] >= 0.0
+def _assert_phase_times(timings, engine, schemes, sim_per_scheme: bool):
+    assert isinstance(timings, PhaseTimings)
+    assert timings.engine == engine
+    assert timings.total_s >= 0.0
+    assert timings.grid_s >= 0.0
+    assert set(timings.per_scheme) == {s.value for s in schemes}
+    for phases in timings.per_scheme.values():
+        assert phases.bill_s >= 0.0
         if sim_per_scheme:
-            assert phases["sim_s"] >= 0.0
+            assert phases.sim_s >= 0.0
     if not sim_per_scheme:  # fused backends time the one-compile sim phase
-        assert timings["sim_s"] >= 0.0
+        assert timings.sim_s >= 0.0
+    assert timings.sim_total_s >= 0.0
 
 
 def test_batch_timings_have_sim_and_billing_phases():
     res = get_engine("batch").run(_scenario())
-    _assert_phase_times(res.timings, BID_LIMITED_SCHEMES, sim_per_scheme=True)
+    _assert_phase_times(res.timings, "batch", BID_LIMITED_SCHEMES, sim_per_scheme=True)
+    assert res.timings.impl is None  # NumPy driver: no device impl label
 
 
 def test_batch_timings_report_scalar_fallback_for_acc():
     res = get_engine("batch").run(_scenario(schemes=tuple(Scheme)))
-    _assert_phase_times(res.timings, BID_LIMITED_SCHEMES, sim_per_scheme=True)
-    assert res.timings["scalar_s"] >= 0.0  # the ACC scalar-fill phase
+    _assert_phase_times(res.timings, "batch", BID_LIMITED_SCHEMES, sim_per_scheme=True)
+    assert res.timings.scalar_s >= 0.0  # the ACC scalar-fill phase
 
 
 def test_jax_timings_have_fused_sim_and_per_scheme_billing():
     pytest.importorskip("jax")
     res = get_engine("jax").run(_scenario())
-    _assert_phase_times(res.timings, BID_LIMITED_SCHEMES, sim_per_scheme=False)
-    assert res.timings["impl"] == "scan"
+    _assert_phase_times(res.timings, "jax", BID_LIMITED_SCHEMES, sim_per_scheme=False)
+    assert res.timings.impl == "scan"
 
 
 def test_pallas_timings_have_fused_sim_and_per_scheme_billing():
@@ -55,11 +60,24 @@ def test_pallas_timings_have_fused_sim_and_per_scheme_billing():
     res = get_engine("pallas").run(
         _scenario(schemes=(Scheme.HOUR,))  # interpreter mode: keep it tiny
     )
-    _assert_phase_times(res.timings, (Scheme.HOUR,), sim_per_scheme=False)
-    assert res.timings["impl"] == "interpret"
+    _assert_phase_times(res.timings, "pallas", (Scheme.HOUR,), sim_per_scheme=False)
+    assert res.timings.impl == "interpret"
 
 
-def test_reference_engine_reports_no_phase_timings():
+def test_reference_engine_reports_scalar_phase():
     res = get_engine("reference").run(_scenario(schemes=(Scheme.HOUR,)))
-    assert res.timings is None  # scalar path: wall_s only
+    assert isinstance(res.timings, PhaseTimings)  # every backend populates it
+    assert res.timings.engine == "reference"
+    assert res.timings.scalar_s > 0.0  # the whole run is the scalar phase
+    assert res.timings.per_scheme == {}
     assert res.wall_s >= 0.0
+
+
+def test_phase_timings_asdict_is_json_ready():
+    import json
+
+    res = get_engine("batch").run(_scenario())
+    d = res.timings.asdict()
+    json.dumps(d)  # must not raise
+    assert d["engine"] == "batch"
+    assert set(d["per_scheme"]) == {s.value for s in BID_LIMITED_SCHEMES}

@@ -1,0 +1,91 @@
+"""Fleet + market telemetry: counters agree with the run's own records.
+
+A contended constant-trace scenario (the `test_market_contention` setup)
+drives real kills, migrations, preemptions-by-outbid and re-clear passes;
+every telemetry counter must equal the count derivable from the returned
+:class:`FleetResult`, so the observability layer can never drift from the
+simulation it describes.
+"""
+
+from repro import obs
+from repro.core import HOUR, Scheme, constant_trace, get_instance
+from repro.fleet import ClearingRebid, CostGreedyPolicy, FleetController, Workload
+
+IT = get_instance("m1.xlarge", region="us-east-1")
+H = 60 * 3600.0
+
+
+def _run(capacity, bid_policy=None, n_jobs=4, work_h=6.0):
+    ctl = FleetController(
+        [IT],
+        {IT.name: constant_trace(0.36, H)},
+        CostGreedyPolicy(),
+        scheme=Scheme.HOUR,
+        bid_margin=0.56,
+        capacity=capacity,
+        bid_policy=bid_policy,
+    )
+    with obs.Telemetry() as tel:
+        res = ctl.run(Workload.from_sizes([work_h] * n_jobs, interarrival_s=0.5 * HOUR))
+    return res, tel
+
+
+def test_contended_fleet_counters_match_run_records():
+    res, tel = _run(4, ClearingRebid(margin=0.56, markup=0.10))
+
+    assert res.n_kills >= 1  # the contention scenario really preempts
+    assert tel.counter("fleet.kills") == res.n_kills
+    assert tel.counter("fleet.kills") == sum(1 for r in res.records if r.killed)
+    assert tel.counter("fleet.migrations") == res.n_migrations
+    assert tel.counter("fleet.completions") == res.n_completed
+    assert tel.counter("fleet.attempts") == len(res.records)
+    assert tel.counter("fleet.checkpoints") >= 0
+    assert tel.counter("fleet.work_lost_s") >= 0.0
+
+    # on a constant trace the only kills are preemptions-by-outbid: the count
+    # matches the market ledger's re-clear kill events exactly
+    assert tel.counter("fleet.preempt_outbid") == res.n_kills
+    # every registered attempt triggered one re-clear pass over the ledger
+    assert tel.counter("market.reclear_passes") >= len(res.records)
+    assert tel.counter("market.cleared_views") > 0
+
+    # sim-time events mirror the record stream
+    launches = [e for e in tel.events if e.name == "fleet.launch"]
+    kills = [e for e in tel.events if e.name == "fleet.kill"]
+    assert len(launches) == len(res.records)
+    assert len(kills) == res.n_kills
+    assert {e.attrs["job"] for e in kills} == {r.job_id for r in res.records if r.killed}
+
+
+def test_uncontended_fleet_has_no_kill_telemetry():
+    res, tel = _run(None)
+    assert res.n_kills == 0
+    assert tel.counter("fleet.kills") == 0
+    assert tel.counter("fleet.preempt_outbid") == 0
+    assert tel.counter("market.reclear_passes") == 0  # no market at all
+    assert tel.counter("fleet.completions") == res.n_completed == 4
+    # placement spans were recorded for every arrival
+    assert len(tel.find_spans("fleet.place")) == 4
+
+
+def test_fleetgrid_cells_span_carries_cell_attrs():
+    from repro.core import SLA
+    from repro.engine import FleetScenario, run_fleet
+
+    sc = FleetScenario(
+        n_jobs=3,
+        mean_interarrival_s=0.3 * HOUR,
+        mean_work_h=2.0,
+        horizon_days=4.0,
+        n_types=2,
+        seeds=(0,),
+        bid_margins=(0.56,),
+        scheme=Scheme.HOUR,
+        sla=SLA(min_compute_units=4.0, os="linux"),
+        policies=("cost_greedy",),
+    )
+    with obs.Telemetry() as tel:
+        run_fleet(sc)
+    (cell,) = tel.find_spans("fleet.cell")
+    assert cell.attrs == {"policy": "cost_greedy", "margin": 0.56, "seed": 0}
+    assert cell.dur > 0.0

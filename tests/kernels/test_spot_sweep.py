@@ -131,4 +131,4 @@ def test_pallas_engine_full_parity():
     assert eng.impl == "interpret"  # interpreter mode is the default config
     report = assert_parity(sc, engine=eng)
     assert report.candidate.engine == "pallas"
-    assert report.candidate.timings["impl"] == "interpret"
+    assert report.candidate.timings.impl == "interpret"

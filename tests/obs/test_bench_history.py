@@ -1,0 +1,113 @@
+"""Unit tests for the engine bench's history/trend helpers.
+
+The full benchmark is far too slow for the test suite; the append /
+load / baseline-selection / regression-gate logic is pure and tested here
+directly (CI exercises the end-to-end path via ``engine_bench --quick
+--check-trend --overhead-gate``).
+"""
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_spec = importlib.util.spec_from_file_location(
+    "engine_bench", pathlib.Path(__file__).parents[2] / "benchmarks" / "engine_bench.py"
+)
+bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench)
+
+GRID = {"n_types": 2, "n_bids": 3, "n_cells": 30, "quick": True}
+OTHER_GRID = {"n_types": 64, "n_bids": 41, "n_cells": 13120, "quick": False}
+
+
+def _record(batch_speedup=20.0, jax_speedup=23.0, grid=GRID):
+    return {
+        "grid": dict(grid),
+        "backends": {
+            "reference": {"wall_s": 6.0, "cells_per_s": 1000.0},
+            "batch": {"wall_s": 0.3, "speedup": batch_speedup, "timings": {"engine": "batch"}},
+            "jax": {"wall_s": 0.26, "speedup": jax_speedup},
+        },
+        "parity_ok": True,
+    }
+
+
+def test_append_and_load_history_roundtrip(tmp_path):
+    path = tmp_path / "hist.jsonl"
+    row1 = bench.append_history(path, _record(), sha="aaa111")
+    row2 = bench.append_history(path, _record(batch_speedup=21.0), sha="bbb222")
+    rows = bench.load_history(path)
+    assert rows == [row1, row2]
+    assert rows[0]["sha"] == "aaa111"
+    assert rows[1]["backends"]["batch"]["speedup"] == 21.0
+    # phase timings ride along; non-numeric extras are dropped
+    assert rows[0]["backends"]["batch"]["timings"] == {"engine": "batch"}
+
+
+def test_load_history_skips_malformed_lines(tmp_path):
+    path = tmp_path / "hist.jsonl"
+    bench.append_history(path, _record(), sha="aaa")
+    with path.open("a") as f:
+        f.write("{not json\n")
+    bench.append_history(path, _record(), sha="bbb")
+    assert [r["sha"] for r in bench.load_history(path)] == ["aaa", "bbb"]
+
+
+def test_load_history_missing_file(tmp_path):
+    assert bench.load_history(tmp_path / "nope.jsonl") == []
+
+
+def test_trend_baseline_prefers_latest_matching_grid():
+    hist = [
+        bench.history_record(_record(batch_speedup=10.0), "old"),
+        bench.history_record(_record(grid=OTHER_GRID), "full"),
+        bench.history_record(_record(batch_speedup=19.0), "new"),
+    ]
+    base = bench.trend_baseline(hist, GRID)
+    assert base["sha"] == "new"
+    assert base["backends"]["batch"]["speedup"] == 19.0
+
+
+def test_trend_baseline_skips_parity_failures_and_falls_back():
+    bad = bench.history_record(_record(), "bad")
+    bad["parity_ok"] = False
+    committed = _record(batch_speedup=18.0)
+    base = bench.trend_baseline([bad], GRID, fallback=committed)
+    assert base["sha"] is None  # the committed BENCH_engine.json baseline
+    assert base["backends"]["batch"]["speedup"] == 18.0
+    # a fallback for a different grid does not apply
+    assert bench.trend_baseline([bad], OTHER_GRID, fallback=committed) is None
+    assert bench.trend_baseline([], GRID) is None
+
+
+def test_check_trend_flags_only_regressions_beyond_tol():
+    base = bench.history_record(_record(batch_speedup=20.0, jax_speedup=20.0), "base")
+    # 10% slower: within the 20% tolerance
+    assert bench.check_trend(_record(batch_speedup=18.0, jax_speedup=20.0), base, 0.2) == []
+    # 25% slower on batch only: exactly one failure naming the backend
+    failures = bench.check_trend(_record(batch_speedup=15.0, jax_speedup=20.0), base, 0.2)
+    assert len(failures) == 1 and "batch" in failures[0]
+    # faster is never a failure
+    assert bench.check_trend(_record(batch_speedup=40.0, jax_speedup=40.0), base, 0.2) == []
+    # no baseline: nothing to gate
+    assert bench.check_trend(_record(), None, 0.2) == []
+
+
+def test_check_trend_ignores_backends_missing_from_baseline():
+    base = bench.history_record(_record(), "base")
+    del base["backends"]["jax"]
+    cur = _record(jax_speedup=1.0)  # would regress hard, but has no baseline
+    assert bench.check_trend(cur, base, 0.2) == []
+
+
+def test_history_record_shape_is_json_ready():
+    row = bench.history_record(_record(), "sha123")
+    json.dumps(row)
+    assert set(row) == {"sha", "grid", "backends", "parity_ok"}
+
+
+def test_git_sha_in_this_repo():
+    sha = bench.git_sha(pathlib.Path(__file__).parents[2])
+    assert sha is None or (len(sha) == 40 and all(c in "0123456789abcdef" for c in sha))

@@ -1,0 +1,87 @@
+"""The retrace monitor: registry bookkeeping and the zero-recompile contract.
+
+The regression at the bottom is the load-bearing one: same-shape re-runs of
+the fused jax sweep (``build_sweep_scan`` via ``JaxEngine``) must trigger
+ZERO retraces — an accidental recompile is the classic silent throughput
+killer, and ``retrace_guard`` is the loud check.
+"""
+
+import pytest
+
+from repro import obs
+from repro.obs import retrace
+
+
+def test_record_and_count_by_scope_and_detail():
+    retrace.record_trace("t_scope", ("a",))
+    retrace.record_trace("t_scope", ("a",))
+    retrace.record_trace("t_scope", ("b",))
+    assert retrace.trace_count("t_scope", ("a",)) == 2
+    assert retrace.trace_count("t_scope", ("b",)) == 1
+    assert retrace.trace_count("t_scope") == 3  # whole scope
+    assert retrace.trace_count("t_scope", ("missing",)) == 0
+
+
+def test_record_trace_bumps_active_telemetry_counter():
+    with obs.Telemetry() as tel:
+        retrace.record_trace("t_counter")
+    assert tel.counter("jit.traces") == 1
+
+
+def test_guard_passes_when_quiet():
+    with obs.retrace_guard("t_quiet") as g:
+        pass
+    assert g.new_traces == 0
+
+
+def test_guard_raises_on_unexpected_trace():
+    with pytest.raises(obs.RetraceError, match="t_noisy"):
+        with obs.retrace_guard("t_noisy"):
+            retrace.record_trace("t_noisy", ("prog",))
+
+
+def test_guard_allow_budget_and_observe_mode():
+    with obs.retrace_guard("t_budget", allow=1) as g:
+        retrace.record_trace("t_budget")
+    assert g.new_traces == 1
+    with obs.retrace_guard("t_budget", allow=None) as g:  # observe only
+        retrace.record_trace("t_budget")
+        retrace.record_trace("t_budget")
+    assert g.new_traces == 2
+    assert g.traced == {("t_budget",): 2}
+
+
+def test_guard_scoped_to_its_scope_only():
+    with obs.retrace_guard("t_mine"):
+        retrace.record_trace("t_other")  # outside the guarded scope: fine
+
+
+def test_guard_does_not_mask_inflight_exception():
+    with pytest.raises(ValueError, match="original"):
+        with obs.retrace_guard("t_exc"):
+            retrace.record_trace("t_exc")
+            raise ValueError("original")
+
+
+# --- the real thing: the fused jax sweep never recompiles on same shapes ---
+
+
+def _scenario(seed: int):
+    from repro.core import get_instance, synthetic_trace
+    from repro.engine import BID_LIMITED_SCHEMES, Scenario
+
+    tr = synthetic_trace(get_instance("m1.xlarge"), 10, seed=seed)
+    return Scenario.from_trace(tr, 6 * 3600.0, [0.36, 0.37], schemes=BID_LIMITED_SCHEMES)
+
+
+def test_jax_engine_zero_retraces_on_same_shape_reruns():
+    pytest.importorskip("jax")
+    from repro.engine import get_engine
+
+    eng = get_engine("jax")
+    sc = _scenario(seed=2)
+    eng.run(sc)  # warm-up: compiles at most once
+    with obs.retrace_guard("spot_sweep") as g:
+        eng.run(sc)  # same scenario object: cached grid, cached program
+        eng.run(_scenario(seed=2))  # fresh equal scenario: same shapes
+    assert g.new_traces == 0
