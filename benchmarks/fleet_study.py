@@ -8,6 +8,11 @@ Usage::
 types under the four placement policies, a handful of seeds, in seconds.
 The full study covers the entire 64-type catalog, more seeds, and a small
 bid-margin sweep.
+
+Results persist through the content-addressed run store (``--store``,
+default ``results/store``): re-running an unchanged study configuration is
+a cache hit that loads the previous grid instead of simulating.  Pass
+``--no-store`` for the old always-simulate behaviour.
 """
 
 from __future__ import annotations
@@ -20,8 +25,9 @@ import time
 from repro import configure_logging
 from repro.core.market import HOUR
 from repro.core.provision import SLA
-from repro.engine import FleetScenario, run_fleet
+from repro.engine import FleetScenario
 from repro.fleet import SweepConfig, summarize
+from repro.suite import DEFAULT_ROOT, RunStore, run_fleet_stored
 
 log = logging.getLogger("repro.bench.fleet")
 
@@ -55,12 +61,29 @@ def full_config() -> SweepConfig:
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="small study (CI smoke)")
+    ap.add_argument("--store", default=DEFAULT_ROOT, help="run-store root directory")
+    ap.add_argument(
+        "--no-store", action="store_true", help="always simulate; do not touch the run store"
+    )
     args = ap.parse_args(argv)
     configure_logging()
 
     cfg = quick_config() if args.quick else full_config()
+    scenario = FleetScenario.from_sweep_config(cfg)
     t0 = time.perf_counter()
-    grid = run_fleet(FleetScenario.from_sweep_config(cfg))
+    if args.no_store:
+        from repro.engine import run_fleet
+
+        grid = run_fleet(scenario)
+    else:
+        grid, cached = run_fleet_stored(
+            scenario, RunStore(args.store), suite="fleet_study",
+            cell="quick" if args.quick else "full",
+        )
+        log.info(
+            "run store %s: %s", args.store,
+            "cache hit — loaded stored grid, zero simulation" if cached else "cache miss — simulated and stored",
+        )
     cells, results = grid.cells, grid.results
     wall = time.perf_counter() - t0
 

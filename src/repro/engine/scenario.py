@@ -25,7 +25,10 @@ today's infinitely deep market, byte for byte.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Sequence
+
+import numpy as np
 
 from repro.core.market import (
     HOUR,
@@ -49,6 +52,23 @@ BID_LIMITED_SCHEMES = (Scheme.NONE, Scheme.OPT, Scheme.HOUR, Scheme.EDGE, Scheme
 #: this is every bid-limited scheme; only ACC — a different control loop
 #: (bid-unlimited leases, poll-driven relaunch) — stays on the scalar path.
 BATCHED_SCHEMES = BID_LIMITED_SCHEMES
+
+
+def _trace_digest(trace: PriceTrace) -> dict:
+    """Content digest of a piecewise-constant trace for canonical hashing.
+
+    The full arrays never enter the canonical form (a 30-day trace is tens of
+    thousands of floats); their exact bytes do, via sha256, so any bit-level
+    change to the price path changes the owning scenario's content hash.
+    """
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(trace.times, dtype=np.float64).tobytes())
+    h.update(np.ascontiguousarray(trace.prices, dtype=np.float64).tobytes())
+    return {
+        "n_segments": len(trace.prices),
+        "horizon": float(trace.horizon),
+        "sha256": h.hexdigest(),
+    }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -292,6 +312,62 @@ class Scenario:
             return self.bids
         return tuple(round(f * market.on_demand, 3) for f in self.bids)
 
+    def canonical(self) -> dict:
+        """Stable plain-dict form of every engine-visible field.
+
+        The contract backing :mod:`repro.suite.hashing`: two scenarios are
+        equal-as-simulations iff their canonical dicts are equal.  The form is
+        independent of construction route (``Scenario.grid`` vs the raw
+        constructor vs a suite spec) and of any mapping order — consumers
+        serialize it with sorted keys.  Explicit traces enter as content
+        digests (:func:`_trace_digest`); every numeric field is normalized to
+        ``float``/``int`` so a spec that writes ``300`` and one that writes
+        ``300.0`` hash identically.
+        """
+        return {
+            "kind": "scenario",
+            "work_s": float(self.work_s),
+            "bids": [float(b) for b in self.bids],
+            "schemes": [s.value for s in self.schemes],
+            "params": {k: float(v) for k, v in dataclasses.asdict(self.params).items()},
+            "traces": None
+            if self.traces is None
+            else [_trace_digest(t) for t in self.traces],
+            "labels": None if self.labels is None else [str(x) for x in self.labels],
+            "instances": None
+            if self.instances is None
+            else [
+                {
+                    "name": it.name,
+                    "hardware": it.hardware,
+                    "region": it.region,
+                    "os": it.os,
+                    "on_demand": float(it.on_demand),
+                    "compute_units": float(it.compute_units),
+                }
+                for it in self.instances
+            ],
+            "horizon_days": float(self.horizon_days),
+            "seeds": [int(s) for s in self.seeds],
+            "initial_saved_work": float(self.initial_saved_work),
+            "sla": None
+            if self.sla is None
+            else {
+                "min_compute_units": float(self.sla.min_compute_units),
+                "regions": [str(r) for r in self.sla.regions],
+                "os": self.sla.os,
+            },
+            "bid_fractions": bool(self.bid_fractions),
+            "capacity": None if self.capacity is None else int(self.capacity),
+            "demand": int(self.demand),
+            "market": _canonical_market_params(self.market),
+        }
+
+
+def _canonical_market_params(params: MarketParams) -> dict:
+    d = dataclasses.asdict(params)
+    return {k: (None if v is None else float(v)) for k, v in d.items()}
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class FleetScenario:
@@ -359,3 +435,30 @@ class FleetScenario:
             deadline_slack=cfg.deadline_slack,
             **kwargs,
         )
+
+    def canonical(self) -> dict:
+        """Stable plain-dict form for content hashing (see
+        :meth:`Scenario.canonical` for the contract)."""
+        return {
+            "kind": "fleet",
+            "n_jobs": int(self.n_jobs),
+            "mean_interarrival_s": float(self.mean_interarrival_s),
+            "mean_work_h": float(self.mean_work_h),
+            "horizon_days": float(self.horizon_days),
+            "n_types": int(self.n_types),
+            "seeds": [int(s) for s in self.seeds],
+            "bid_margins": [float(m) for m in self.bid_margins],
+            "scheme": self.scheme.value,
+            "sla": {
+                "min_compute_units": float(self.sla.min_compute_units),
+                "regions": [str(r) for r in self.sla.regions],
+                "os": self.sla.os,
+            },
+            "n_replicas": int(self.n_replicas),
+            "deadline_slack": None if self.deadline_slack is None else float(self.deadline_slack),
+            "policies": [str(p) for p in self.policies],
+            "capacity": None if self.capacity is None else int(self.capacity),
+            "market": _canonical_market_params(self.market),
+            "bid_policy": str(self.bid_policy),
+            "rebid_markup": float(self.rebid_markup),
+        }

@@ -1,0 +1,65 @@
+"""Suite control plane: declarative scenario suites over a persistent store.
+
+The orchestration layer above :mod:`repro.engine` (the armi ``cases/`` +
+lib_layered_config pattern from the ROADMAP), in four pieces:
+
+  * **specs** (:mod:`repro.suite.spec`, :mod:`repro.suite.layers`) —
+    TOML/JSON suite files with layered overrides (``base`` ← ``suite`` ←
+    ``cell`` ← ``cli``) and per-field provenance, expanded via axis products
+    into frozen :class:`~repro.engine.scenario.Scenario` /
+    ``FleetScenario`` cells;
+  * **content-addressed store** (:mod:`repro.suite.store`,
+    :mod:`repro.suite.hashing`) — runs keyed by the sha256 of the canonical
+    scenario form + engine id + schema version; JSONL index + npz payloads
+    under ``results/store/``; re-running an identical cell is a cache hit
+    that performs zero simulation;
+  * **resumable runner** (:mod:`repro.suite.runner`) — executes only
+    missing cells, flushes each as it completes (interrupt-safe), counts
+    ``suite.cell`` / ``suite.cache_hit`` / ``suite.cache_miss`` via
+    :mod:`repro.obs`;
+  * **trend view** (:mod:`repro.suite.trend`) — metric drift per scenario
+    hash across git shas, joined with ``BENCH_history.jsonl``.
+
+CLI: ``python -m repro.suite run|list|trend`` (console script
+``repro-suite``).  See docs/suite.md.
+"""
+
+from repro.suite.hashing import SCHEMA_VERSION, canonical_json, run_key, scenario_hash
+from repro.suite.layers import Layer, Resolved, merge_layers, parse_override
+from repro.suite.runner import (
+    CellOutcome,
+    SuiteReport,
+    run_fleet_stored,
+    run_stored,
+    run_suite,
+)
+from repro.suite.spec import Suite, SuiteCell, build_scenario, load_suite
+from repro.suite.store import DEFAULT_ROOT, RunRecord, RunStore
+from repro.suite.trend import compute_trends, load_bench_history, render_trends, trend_report
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "CellOutcome",
+    "DEFAULT_ROOT",
+    "Layer",
+    "Resolved",
+    "RunRecord",
+    "RunStore",
+    "Suite",
+    "SuiteCell",
+    "SuiteReport",
+    "build_scenario",
+    "canonical_json",
+    "compute_trends",
+    "load_bench_history",
+    "load_suite",
+    "merge_layers",
+    "parse_override",
+    "render_trends",
+    "run_fleet_stored",
+    "run_key",
+    "run_stored",
+    "run_suite",
+    "scenario_hash",
+    "trend_report",
+]

@@ -1,0 +1,149 @@
+"""``python -m repro.suite`` / ``repro-suite``: the suite control-plane CLI.
+
+Subcommands::
+
+    repro-suite run <suite.toml> [--store DIR] [--engine NAME]
+                    [--set key.path=value ...] [--dry-run] [--max-cells N]
+                    [--expect-all-hits]
+    repro-suite list  [--store DIR]
+    repro-suite trend [--store DIR] [--history BENCH_history.jsonl] [--json]
+
+``run`` executes only the cells missing from the store (rerun to resume an
+interrupted sweep); ``--dry-run`` prints the expanded cell list with
+per-field layer provenance and simulates nothing; ``--expect-all-hits``
+fails (exit 1) unless the whole pass was served from the store with zero
+``engine.run`` telemetry spans — the CI regression contract for "re-running
+an unchanged suite performs zero simulation".
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import sys
+
+from repro import configure_logging
+from repro import obs
+from repro.suite.layers import parse_override
+from repro.suite.runner import run_suite
+from repro.suite.spec import load_suite
+from repro.suite.store import DEFAULT_ROOT, RunStore
+from repro.suite.trend import DEFAULT_HISTORY, compute_trends, load_bench_history, render_trends
+
+log = logging.getLogger("repro.suite.cli")
+
+
+def _cmd_run(args: argparse.Namespace) -> int:
+    suite = load_suite(args.suite)
+    cli = dict(parse_override(item) for item in args.set or [])
+    if args.dry_run:
+        cells = suite.expand(cli)
+        print(f"# suite {suite.name}: {len(cells)} cells (dry run, nothing simulated)")
+        for cell in cells:
+            print(cell.describe())
+        return 0
+    store = RunStore(args.store)
+    with obs.Telemetry() as tel:
+        report = run_suite(
+            suite, store, engine=args.engine, cli=cli or None, max_cells=args.max_cells
+        )
+    print(report.summary())
+    if args.expect_all_hits:
+        n_runs = len(tel.find_spans("engine.run"))
+        if report.n_misses or report.n_skipped or n_runs:
+            log.error(
+                "expected a fully cached pass: %d misses, %d skipped, %d engine.run spans",
+                report.n_misses, report.n_skipped, n_runs,
+            )
+            return 1
+        log.info(
+            "all %d cells served from the store (suite.cache_hit=%d, zero engine.run spans)",
+            len(report.outcomes), int(tel.counter("suite.cache_hit")),
+        )
+    return 0
+
+
+def _cmd_list(args: argparse.Namespace) -> int:
+    store = RunStore(args.store)
+    records = store.records()
+    print(f"# store {store.root}: {len(records)} runs")
+    for r in records:
+        suite = f" suite={r.suite}/{r.cell}" if r.suite else ""
+        print(
+            f"{r.run_key[:12]} {r.kind:<8} engine={r.engine:<9} "
+            f"sha={r.sha[:9] if r.sha else None} cells={r.n_cells}{suite}"
+        )
+    return 0
+
+
+def _cmd_trend(args: argparse.Namespace) -> int:
+    store = RunStore(args.store)
+    bench = load_bench_history(args.history)
+    groups = compute_trends(store.records(), bench)
+    if args.json:
+        payload = [
+            {
+                "scenario_hash": g.scenario_hash,
+                "engine": g.engine,
+                "kind": g.kind,
+                "suite": g.suite,
+                "shas": g.shas,
+                "n_runs": len(g.runs),
+                "drift": {k: list(v) for k, v in g.drift().items()},
+                "bench": g.bench_join(bench),
+            }
+            for g in groups
+        ]
+        print(json.dumps(payload, indent=1))
+    else:
+        print(render_trends(groups, bench))
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(prog="repro-suite", description=__doc__)
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    p_run = sub.add_parser("run", help="execute a suite file, resuming from the store")
+    p_run.add_argument("suite", help="path to a .toml/.json suite file")
+    p_run.add_argument("--store", default=DEFAULT_ROOT, help="run-store root directory")
+    p_run.add_argument("--engine", default=None, help="override every cell's engine backend")
+    p_run.add_argument(
+        "--set", action="append", metavar="KEY=VALUE",
+        help="CLI override layer (dotted keys, e.g. --set params.t_c=120)",
+    )
+    p_run.add_argument(
+        "--dry-run", action="store_true",
+        help="print the expanded cells with per-field provenance; simulate nothing",
+    )
+    p_run.add_argument(
+        "--max-cells", type=int, default=None,
+        help="simulate at most N missing cells this pass (cache hits are free)",
+    )
+    p_run.add_argument(
+        "--expect-all-hits", action="store_true",
+        help="fail unless every cell was a cache hit with zero engine.run spans",
+    )
+    p_run.set_defaults(fn=_cmd_run)
+
+    p_list = sub.add_parser("list", help="list the store index")
+    p_list.add_argument("--store", default=DEFAULT_ROOT)
+    p_list.set_defaults(fn=_cmd_list)
+
+    p_trend = sub.add_parser("trend", help="metric drift per scenario hash across git shas")
+    p_trend.add_argument("--store", default=DEFAULT_ROOT)
+    p_trend.add_argument("--history", default=DEFAULT_HISTORY, help="BENCH_history.jsonl path")
+    p_trend.add_argument("--json", action="store_true", help="machine-readable output")
+    p_trend.set_defaults(fn=_cmd_trend)
+
+    args = parser.parse_args(argv)
+    configure_logging()
+    try:
+        return args.fn(args)
+    except BrokenPipeError:  # e.g. `repro-suite list | head`
+        return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

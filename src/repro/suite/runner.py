@@ -1,0 +1,205 @@
+"""Resumable suite execution: run only the cells the store does not have.
+
+:func:`run_suite` walks a suite's expanded cells in order, computes each
+cell's content-addressed run key, and *skips* every cell the
+:class:`~repro.suite.store.RunStore` already holds — a cache hit touches the
+index only (no payload load, no trace generation, no simulation).  Missing
+cells are simulated and flushed to the store one by one, so an interrupted
+sweep loses at most the cell in flight and a rerun resumes with exactly the
+missing cells.
+
+Telemetry (:mod:`repro.obs`): the runner counts ``suite.cell`` /
+``suite.cache_hit`` / ``suite.cache_miss`` and wraps each simulated cell in
+a ``suite.cell`` span; the engine's own ``engine.run`` spans nest inside it,
+so "the second pass performed zero simulation" is a checkable property —
+``tel.counter("suite.cache_hit") == n_cells`` and no ``engine.run`` spans —
+which the ``--expect-all-hits`` CLI flag and the CI smoke job assert.
+
+:func:`run_stored` / :func:`run_fleet_stored` are the single-scenario
+primitives (used by ``benchmarks/paper_figs.py`` / ``fleet_study.py``):
+cache-or-run one scenario, returning the result either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+
+from repro.engine.base import EngineResult, get_engine
+from repro.engine.fleetgrid import FleetGridResult, run_fleet
+from repro.engine.scenario import FleetScenario, Scenario
+from repro.obs import telemetry as obs
+from repro.suite.hashing import run_key
+from repro.suite.spec import Suite, SuiteCell
+from repro.suite.store import RunRecord, RunStore
+
+__all__ = ["CellOutcome", "SuiteReport", "run_suite", "run_stored", "run_fleet_stored"]
+
+log = logging.getLogger("repro.suite.runner")
+
+#: Engine-name normalization for hashing *before* instantiating a backend
+#: (so a pure cache-hit pass over jax-produced runs needs no jax install).
+_ENGINE_ALIAS = {"auto": "batch"}
+
+#: The engine id fleet cells are keyed under: the scalar controller is the
+#: only fleet backend today.
+FLEET_ENGINE = "fleet"
+
+
+def _engine_id(cell_kind: str, engine_name: str) -> str:
+    if cell_kind == "fleet":
+        return FLEET_ENGINE
+    return _ENGINE_ALIAS.get(engine_name, engine_name)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellOutcome:
+    """How one suite cell was satisfied: from the store or by simulating."""
+
+    cell: SuiteCell
+    run_key: str
+    hit: bool
+    record: RunRecord
+    wall_s: float  # this pass's wall time (0.0 for a cache hit)
+
+
+@dataclasses.dataclass
+class SuiteReport:
+    """Outcome of one :func:`run_suite` pass."""
+
+    suite: Suite
+    outcomes: list[CellOutcome]
+    wall_s: float
+    n_skipped: int = 0  # cells left unexecuted by --max-cells
+
+    @property
+    def n_hits(self) -> int:
+        return sum(1 for o in self.outcomes if o.hit)
+
+    @property
+    def n_misses(self) -> int:
+        return sum(1 for o in self.outcomes if not o.hit)
+
+    def summary(self) -> str:
+        """Fixed-width per-cell table plus a hit/miss footer."""
+        width = max([len(o.cell.label) for o in self.outcomes] + [4])
+        lines = [f"# suite {self.suite.name}: {len(self.outcomes)} cells"]
+        lines.append(f"{'cell':<{width}}  {'engine':<9} {'source':<6} {'cells':>5}  metrics")
+        for o in self.outcomes:
+            metrics = "  ".join(f"{k}={v:.4g}" for k, v in sorted(o.record.metrics.items()))
+            lines.append(
+                f"{o.cell.label:<{width}}  {o.record.engine:<9} "
+                f"{'store' if o.hit else 'run':<6} {o.record.n_cells:>5}  {metrics}"
+            )
+        lines.append(
+            f"# {self.n_hits} cache hits, {self.n_misses} simulated"
+            + (f", {self.n_skipped} skipped (--max-cells)" if self.n_skipped else "")
+            + f", wall {self.wall_s:.2f}s"
+        )
+        return "\n".join(lines)
+
+
+def run_suite(
+    suite: Suite,
+    store: RunStore,
+    *,
+    engine: str | None = None,
+    cli: dict | None = None,
+    max_cells: int | None = None,
+) -> SuiteReport:
+    """Execute ``suite``, resuming from whatever ``store`` already holds.
+
+    ``engine`` overrides every cell's backend; ``cli`` is the outermost
+    override layer (dotted keys, see :func:`repro.suite.layers.nest_dotted`);
+    ``max_cells`` bounds the number of cells *simulated* this pass (cache
+    hits are free and never count) — the remaining cells are reported as
+    skipped and picked up by the next pass, which is also exactly what an
+    interrupt-and-rerun does.
+    """
+    t0 = time.perf_counter()
+    cells = suite.expand(cli)
+    tel = obs.current()
+    outcomes: list[CellOutcome] = []
+    n_skipped = 0
+    with tel.span("suite.run", suite=suite.name, n_cells=len(cells)):
+        for cell in cells:
+            eng_id = _engine_id(cell.kind, engine or cell.engine)
+            key = run_key(cell.scenario, eng_id)
+            tel.count("suite.cell")
+            if store.has(key):
+                tel.count("suite.cache_hit")
+                log.info("suite %s: cell %s — cache hit (%s)", suite.name, cell.label, key[:12])
+                outcomes.append(CellOutcome(cell, key, True, store.get(key), 0.0))
+                continue
+            if max_cells is not None and sum(1 for o in outcomes if not o.hit) >= max_cells:
+                n_skipped += 1
+                continue
+            tel.count("suite.cache_miss")
+            c0 = time.perf_counter()
+            with tel.span("suite.cell", suite=suite.name, cell=cell.label, engine=eng_id):
+                if cell.kind == "fleet":
+                    grid = run_fleet(cell.scenario)
+                    rec = store.put_fleet_result(
+                        cell.scenario, grid, suite=suite.name, cell=cell.label
+                    )
+                else:
+                    eng = get_engine(engine or cell.engine)
+                    res = eng.run(cell.scenario)
+                    rec = store.put_engine_result(
+                        cell.scenario, res, suite=suite.name, cell=cell.label
+                    )
+            if rec.run_key != key:
+                raise AssertionError(
+                    f"store key drift: expected {key}, stored {rec.run_key}"
+                )
+            wall = time.perf_counter() - c0
+            log.info("suite %s: cell %s — simulated in %.2fs", suite.name, cell.label, wall)
+            outcomes.append(CellOutcome(cell, key, False, rec, wall))
+    return SuiteReport(
+        suite=suite, outcomes=outcomes, wall_s=time.perf_counter() - t0, n_skipped=n_skipped
+    )
+
+
+def run_stored(
+    scenario: Scenario,
+    store: RunStore,
+    engine: str = "auto",
+    *,
+    suite: str | None = None,
+    cell: str | None = None,
+) -> tuple[EngineResult, bool]:
+    """Cache-or-run one scenario; returns ``(result, was_cache_hit)``.
+
+    Unlike :func:`run_suite` this loads the payload on a hit — callers want
+    the arrays — but still performs zero simulation.
+    """
+    eng_id = _ENGINE_ALIAS.get(engine, engine)
+    key = run_key(scenario, eng_id)
+    tel = obs.current()
+    if store.has(key):
+        tel.count("suite.cache_hit")
+        return store.load(key, scenario=scenario), True
+    tel.count("suite.cache_miss")
+    res = get_engine(engine).run(scenario)
+    store.put_engine_result(scenario, res, suite=suite, cell=cell)
+    return res, False
+
+
+def run_fleet_stored(
+    scenario: FleetScenario,
+    store: RunStore,
+    *,
+    suite: str | None = None,
+    cell: str | None = None,
+) -> tuple[FleetGridResult, bool]:
+    """Cache-or-run one fleet scenario; returns ``(grid, was_cache_hit)``."""
+    key = run_key(scenario, FLEET_ENGINE)
+    tel = obs.current()
+    if store.has(key):
+        tel.count("suite.cache_hit")
+        return store.load(key, scenario=scenario), True
+    tel.count("suite.cache_miss")
+    grid = run_fleet(scenario)
+    store.put_fleet_result(scenario, grid, suite=suite, cell=cell)
+    return grid, False

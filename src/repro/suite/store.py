@@ -1,0 +1,480 @@
+"""Content-addressed run store: JSONL index + per-run npz payloads.
+
+Layout (default root ``results/store/``, gitignored)::
+
+    results/store/
+      index.jsonl          # one RunRecord per line, append-only
+      runs/<run_key>.npz   # the result payload, one file per run
+
+The index is the queryable surface — every line carries the run key, the
+scenario content hash, engine id, schema version, git sha, creation time,
+wall time, and a small summary-metrics dict — so listing and trend analysis
+never open a payload.  Payloads are plain ``npz`` archives (structure-of-
+arrays outcome grids for :class:`~repro.engine.base.EngineResult`, per-cell
+attempt-record columns for fleet grids) with one JSON header entry; floats
+ride either in float64 arrays or through JSON's exact shortest-round-trip
+repr, so a store round trip is bit-for-bit.
+
+Crash safety: the payload is written to a temp file and renamed, and the
+index line is appended (and flushed) only afterwards — an interrupted run
+leaves either a complete entry or no entry, never a torn one.  Re-appending
+the same key later simply supersedes the older line (last wins on load).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import pathlib
+import subprocess
+import time
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.billing import Termination
+from repro.core.provision import SLA
+from repro.core.schemes import Scheme
+from repro.core.simulator import SimResult  # noqa: F401  (documented payload scope)
+from repro.engine.base import EngineResult, PhaseTimings, SchemePhases
+from repro.engine.fleetgrid import FleetGridResult
+from repro.engine.scenario import FleetScenario, MarketCell, Scenario
+from repro.fleet.controller import AttemptRecord, FleetResult, JobOutcome
+from repro.fleet.sweep import SweepCell
+from repro.fleet.workload import Job
+from repro.suite.hashing import SCHEMA_VERSION, run_key, scenario_hash
+
+__all__ = ["RunRecord", "RunStore", "DEFAULT_ROOT"]
+
+DEFAULT_ROOT = "results/store"
+
+
+def _git_sha() -> str | None:
+    """Current commit sha, or None outside a usable git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True, timeout=10
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    return out.stdout.strip() if out.returncode == 0 else None
+
+
+@dataclasses.dataclass(frozen=True)
+class RunRecord:
+    """One index line: everything about a run except its bulk payload."""
+
+    run_key: str
+    scenario_hash: str
+    engine: str
+    schema_version: int
+    kind: str  # "scenario" | "fleet"
+    created_at: float  # unix seconds
+    sha: str | None  # git commit the run was produced at
+    payload: str  # path relative to the store root
+    wall_s: float
+    n_cells: int
+    metrics: dict[str, float]
+    suite: str | None = None
+    cell: str | None = None
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RunRecord":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+class RunStore:
+    """A persistent, content-addressed database of simulation runs."""
+
+    def __init__(self, root: str | pathlib.Path = DEFAULT_ROOT):
+        self.root = pathlib.Path(root)
+        self.index_path = self.root / "index.jsonl"
+        self.runs_dir = self.root / "runs"
+        self._records: dict[str, RunRecord] = {}
+        self._sha: str | None | bool = False  # False = not yet resolved
+        self.reload()
+
+    # -- index --------------------------------------------------------------
+
+    def reload(self) -> None:
+        """Re-read the index from disk (last line wins per key)."""
+        self._records = {}
+        if not self.index_path.exists():
+            return
+        for line in self.index_path.read_text().splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = RunRecord.from_dict(json.loads(line))
+            except (json.JSONDecodeError, TypeError):
+                continue  # torn/foreign line: ignorable, the payload re-runs
+            self._records[rec.run_key] = rec
+
+    def records(self) -> list[RunRecord]:
+        """All index entries, oldest first."""
+        return sorted(self._records.values(), key=lambda r: r.created_at)
+
+    def get(self, key: str) -> RunRecord | None:
+        return self._records.get(key)
+
+    def has(self, key: str) -> bool:
+        """True when the key is indexed *and* its payload file exists."""
+        rec = self._records.get(key)
+        return rec is not None and (self.root / rec.payload).exists()
+
+    def __contains__(self, key: str) -> bool:
+        return self.has(key)
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def _resolve_sha(self, sha: str | None) -> str | None:
+        if sha is not None:
+            return sha
+        if self._sha is False:
+            self._sha = _git_sha()
+        return self._sha
+
+    def _flush(self, rec: RunRecord, payload: dict[str, np.ndarray]) -> RunRecord:
+        """Write payload-then-index (the interrupt-safety order)."""
+        self.runs_dir.mkdir(parents=True, exist_ok=True)
+        final = self.root / rec.payload
+        tmp = final.with_suffix(".tmp.npz")
+        with tmp.open("wb") as f:
+            np.savez_compressed(f, **payload)
+        os.replace(tmp, final)
+        with self.index_path.open("a") as f:
+            f.write(json.dumps(rec.asdict()) + "\n")
+            f.flush()
+        self._records[rec.run_key] = rec
+        return rec
+
+    # -- put ----------------------------------------------------------------
+
+    def put_engine_result(
+        self,
+        scenario: Scenario,
+        result: EngineResult,
+        *,
+        engine: str | None = None,
+        suite: str | None = None,
+        cell: str | None = None,
+        sha: str | None = None,
+    ) -> RunRecord:
+        """Persist one single-scenario run; returns its index record."""
+        engine = engine or result.engine
+        key = run_key(scenario, engine)
+        rec = RunRecord(
+            run_key=key,
+            scenario_hash=scenario_hash(scenario),
+            engine=engine,
+            schema_version=SCHEMA_VERSION,
+            kind="scenario",
+            created_at=time.time(),
+            sha=self._resolve_sha(sha),
+            payload=f"runs/{key}.npz",
+            wall_s=float(result.wall_s),
+            n_cells=result.n_cells,
+            metrics=_engine_metrics(result),
+            suite=suite,
+            cell=cell,
+        )
+        return self._flush(rec, _pack_engine_result(scenario, result))
+
+    def put_fleet_result(
+        self,
+        scenario: FleetScenario,
+        grid: FleetGridResult,
+        *,
+        suite: str | None = None,
+        cell: str | None = None,
+        sha: str | None = None,
+    ) -> RunRecord:
+        """Persist one fleet-grid run (engine id ``"fleet"``: the scalar
+        controller is the only fleet backend)."""
+        key = run_key(scenario, "fleet")
+        rec = RunRecord(
+            run_key=key,
+            scenario_hash=scenario_hash(scenario),
+            engine="fleet",
+            schema_version=SCHEMA_VERSION,
+            kind="fleet",
+            created_at=time.time(),
+            sha=self._resolve_sha(sha),
+            payload=f"runs/{key}.npz",
+            wall_s=float(grid.wall_s),
+            n_cells=len(grid.cells),
+            metrics=_fleet_metrics(grid),
+            suite=suite,
+            cell=cell,
+        )
+        return self._flush(rec, _pack_fleet_grid(scenario, grid))
+
+    # -- load ---------------------------------------------------------------
+
+    def load(
+        self,
+        record_or_key: RunRecord | str,
+        scenario: Scenario | FleetScenario | None = None,
+    ) -> EngineResult | FleetGridResult:
+        """Reconstruct a stored result.
+
+        Pass the materialized ``scenario`` when you have it (the runner
+        does) to get it attached to the result; without it the result's
+        ``scenario`` is ``None`` and market cells carry no trace — the
+        outcome arrays and metadata are complete either way.  Engine-result
+        payloads store the SoA grid only: per-run ``sim_results`` lists (a
+        reference-engine debugging aid) are not persisted.
+        """
+        rec = record_or_key if isinstance(record_or_key, RunRecord) else self._records[record_or_key]
+        with np.load(self.root / rec.payload) as z:
+            if rec.kind == "fleet":
+                return _unpack_fleet_grid(z, scenario)
+            return _unpack_engine_result(z, scenario)
+
+
+# ---------------------------------------------------------------------------
+# Summary metrics (index-row payload: the trend view reads only these)
+# ---------------------------------------------------------------------------
+
+
+def _engine_metrics(res: EngineResult) -> dict[str, float]:
+    done = res.completed.astype(bool)
+    mean_cost = float(np.mean(res.cost[done])) if done.any() else math.nan
+    mean_time_h = float(np.mean(res.completion_time[done]) / 3600.0) if done.any() else math.nan
+    return {
+        "completion_rate": float(done.mean()),
+        "mean_cost": mean_cost,
+        "mean_completion_h": mean_time_h,
+        "total_kills": float(res.n_kills.sum()),
+        "total_checkpoints": float(res.n_checkpoints.sum()),
+    }
+
+
+def _fleet_metrics(grid: FleetGridResult) -> dict[str, float]:
+    cells = grid.cells
+    if not cells:
+        return {"mean_total_cost": math.nan, "mean_kill_rate": math.nan, "completion_rate": math.nan}
+    n_jobs = sum(c.n_jobs for c in cells)
+    return {
+        "mean_total_cost": float(np.mean([c.total_cost for c in cells])),
+        "mean_kill_rate": float(np.mean([c.kill_rate for c in cells])),
+        "completion_rate": sum(c.n_completed for c in cells) / max(1, n_jobs),
+        "mean_migrations": float(np.mean([c.n_migrations for c in cells])),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Engine-result codec
+# ---------------------------------------------------------------------------
+
+_ENGINE_ARRAYS = (
+    "completed",
+    "completion_time",
+    "cost",
+    "n_checkpoints",
+    "n_kills",
+    "n_self_terminations",
+    "work_lost_s",
+)
+
+
+def _pack_engine_result(scenario: Scenario, res: EngineResult) -> dict[str, np.ndarray]:
+    header = {
+        "engine": res.engine,
+        "wall_s": res.wall_s,
+        "bids": [float(b) for b in res.bids],
+        "schemes": [s.value for s in res.schemes],
+        "markets": [
+            {"label": m.label, "seed": int(m.seed), "on_demand": float(m.on_demand)}
+            for m in res.markets
+        ],
+        "timings": res.timings.asdict() if res.timings is not None else None,
+        "scenario": scenario.canonical(),
+    }
+    out = {name: getattr(res, name) for name in _ENGINE_ARRAYS}
+    out["header"] = np.array(json.dumps(header))
+    return out
+
+
+def _unpack_engine_result(z, scenario: Scenario | None) -> EngineResult:
+    header = json.loads(str(z["header"][()]))
+    timings = None
+    if header["timings"] is not None:
+        t = dict(header["timings"])
+        t["per_scheme"] = {k: SchemePhases(**v) for k, v in t["per_scheme"].items()}
+        timings = PhaseTimings(**t)
+    return EngineResult(
+        scenario=scenario,
+        engine=str(header["engine"]),
+        markets=[
+            MarketCell(m["label"], int(m["seed"]), None, float(m["on_demand"]))
+            for m in header["markets"]
+        ],
+        bids=tuple(float(b) for b in header["bids"]),
+        schemes=tuple(Scheme(s) for s in header["schemes"]),
+        wall_s=float(header["wall_s"]),
+        timings=timings,
+        **{name: z[name] for name in _ENGINE_ARRAYS},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fleet-grid codec
+# ---------------------------------------------------------------------------
+
+_RECORD_COLUMNS = (
+    ("job_id", np.int64),
+    ("replica", np.int64),
+    ("instance", None),  # unicode
+    ("bid", np.float64),
+    ("launch", np.float64),
+    ("end", np.float64),
+    ("termination", None),  # unicode enum value
+    ("cost", np.float64),
+    ("work_start", np.float64),
+    ("initial_saved_ref", np.float64),
+    ("saved_after_ref", np.float64),
+    ("killed", np.bool_),
+    ("completed", np.bool_),
+    ("cancelled", np.bool_),
+    ("self_terminated", np.bool_),
+)
+
+
+def _str_array(values: list[str]) -> np.ndarray:
+    return np.array(values, dtype="U1") if not values else np.array(values)
+
+
+def _job_dict(job: Job) -> dict:
+    return {
+        "id": job.id,
+        "arrival_s": job.arrival_s,
+        "work_s": job.work_s,
+        "deadline_s": job.deadline_s,
+        "sla": {
+            "min_compute_units": job.sla.min_compute_units,
+            "regions": list(job.sla.regions),
+            "os": job.sla.os,
+        },
+    }
+
+
+def _job_from_dict(d: Mapping[str, Any]) -> Job:
+    return Job(
+        id=int(d["id"]),
+        arrival_s=float(d["arrival_s"]),
+        work_s=float(d["work_s"]),
+        deadline_s=None if d["deadline_s"] is None else float(d["deadline_s"]),
+        sla=SLA(
+            min_compute_units=float(d["sla"]["min_compute_units"]),
+            regions=tuple(d["sla"]["regions"]),
+            os=d["sla"]["os"],
+        ),
+    )
+
+
+def _pack_fleet_grid(scenario: FleetScenario, grid: FleetGridResult) -> dict[str, np.ndarray]:
+    payload: dict[str, np.ndarray] = {}
+    results_meta = []
+    for i, ((policy, margin, seed), res) in enumerate(sorted(grid.results.items())):
+        index_of = {id(r): j for j, r in enumerate(res.records)}
+        results_meta.append(
+            {
+                "key": [policy, margin, seed],
+                "policy": res.policy,
+                "scheme": res.scheme.value,
+                "horizon": res.horizon,
+                "outcomes": [
+                    {
+                        "job": _job_dict(o.job),
+                        "completed": o.completed,
+                        "completion_time": o.completion_time,
+                        "cost": o.cost,
+                        "n_kills": o.n_kills,
+                        "n_migrations": o.n_migrations,
+                        # attempts are shared with the records list: persist
+                        # indices so reloading restores the same sharing
+                        "attempts": [index_of[id(r)] for r in o.attempts],
+                    }
+                    for _, o in sorted(res.outcomes.items())
+                ],
+            }
+        )
+        for col, dtype in _RECORD_COLUMNS:
+            values = [getattr(r, col) for r in res.records]
+            if col == "termination":
+                payload[f"r{i}_{col}"] = _str_array([v.value for v in values])
+            elif dtype is None:
+                payload[f"r{i}_{col}"] = _str_array([str(v) for v in values])
+            else:
+                payload[f"r{i}_{col}"] = np.array(values, dtype=dtype)
+    header = {
+        "wall_s": grid.wall_s,
+        "cells": [dataclasses.asdict(c) for c in grid.cells],
+        "results": results_meta,
+        "scenario": scenario.canonical(),
+    }
+    payload["header"] = np.array(json.dumps(header))
+    return payload
+
+
+def _unpack_fleet_grid(z, scenario: FleetScenario | None) -> FleetGridResult:
+    header = json.loads(str(z["header"][()]))
+    results: dict[tuple[str, float, int], FleetResult] = {}
+    for i, meta in enumerate(header["results"]):
+        cols = {col: z[f"r{i}_{col}"] for col, _ in _RECORD_COLUMNS}
+        n = len(cols["job_id"])
+        records = [
+            AttemptRecord(
+                job_id=int(cols["job_id"][j]),
+                replica=int(cols["replica"][j]),
+                instance=str(cols["instance"][j]),
+                bid=float(cols["bid"][j]),
+                launch=float(cols["launch"][j]),
+                end=float(cols["end"][j]),
+                termination=Termination(str(cols["termination"][j])),
+                cost=float(cols["cost"][j]),
+                work_start=float(cols["work_start"][j]),
+                initial_saved_ref=float(cols["initial_saved_ref"][j]),
+                saved_after_ref=float(cols["saved_after_ref"][j]),
+                killed=bool(cols["killed"][j]),
+                completed=bool(cols["completed"][j]),
+                cancelled=bool(cols["cancelled"][j]),
+                self_terminated=bool(cols["self_terminated"][j]),
+            )
+            for j in range(n)
+        ]
+        outcomes: dict[int, JobOutcome] = {}
+        for o in meta["outcomes"]:
+            job = _job_from_dict(o["job"])
+            outcomes[job.id] = JobOutcome(
+                job=job,
+                completed=bool(o["completed"]),
+                completion_time=float(o["completion_time"]),
+                cost=float(o["cost"]),
+                n_kills=int(o["n_kills"]),
+                n_migrations=int(o["n_migrations"]),
+                attempts=[records[j] for j in o["attempts"]],
+            )
+        policy, margin, seed = meta["key"]
+        results[(str(policy), float(margin), int(seed))] = FleetResult(
+            policy=str(meta["policy"]),
+            scheme=Scheme(meta["scheme"]),
+            outcomes=outcomes,
+            records=records,
+            horizon=float(meta["horizon"]),
+        )
+    return FleetGridResult(
+        scenario=scenario,
+        cells=[SweepCell(**c) for c in header["cells"]],
+        results=results,
+        wall_s=float(header["wall_s"]),
+    )

@@ -1,0 +1,112 @@
+"""Content-address invariants: what must and must not move the run key."""
+
+import pytest
+
+from repro.core import get_instance, synthetic_trace
+from repro.engine import Scenario
+from repro.suite import SCHEMA_VERSION, canonical_json, run_key, scenario_hash
+from repro.suite.spec import build_scenario
+
+BASE_SPEC = {
+    "work_s": 1800.0,
+    "bids": [0.4, 0.45],
+    "instances": ["m1.xlarge/eu-west-1"],
+    "horizon_days": 2.0,
+    "schemes": ["opt", "hour"],
+    "seeds": [0, 1],
+}
+
+
+def test_canonical_json_is_field_order_independent():
+    a = {"x": 1.5, "y": {"b": 2, "a": [1, 2]}}
+    b = {"y": {"a": [1, 2], "b": 2}, "x": 1.5}
+    assert canonical_json(a) == canonical_json(b)
+
+
+def test_hash_invariant_under_spec_field_order():
+    items = list(BASE_SPEC.items())
+    forward = build_scenario("scenario", dict(items))
+    backward = build_scenario("scenario", dict(reversed(items)))
+    assert scenario_hash(forward) == scenario_hash(backward)
+
+
+def test_hash_invariant_under_default_materialization():
+    # omitting a field == spelling out its dataclass default
+    implicit = build_scenario("scenario", BASE_SPEC)
+    explicit = build_scenario(
+        "scenario",
+        {
+            **BASE_SPEC,
+            "params": {},  # -> SimParams() defaults
+            "initial_saved_work": 0.0,
+            "bid_fractions": False,
+            "demand": 1,
+            "capacity": "none",
+        },
+    )
+    assert scenario_hash(implicit) == scenario_hash(explicit)
+
+
+def test_hash_invariant_under_numeric_spelling():
+    ints = build_scenario("scenario", {**BASE_SPEC, "work_s": 1800, "horizon_days": 2})
+    floats = build_scenario("scenario", BASE_SPEC)
+    assert scenario_hash(ints) == scenario_hash(floats)
+
+
+@pytest.mark.parametrize(
+    "mutation",
+    [
+        {"work_s": 1801.0},
+        {"bids": [0.4]},
+        {"bids": [0.4, 0.450001]},
+        {"schemes": ["opt", "edge"]},
+        {"seeds": [0, 2]},
+        {"horizon_days": 3.0},
+        {"instances": ["m1.large/eu-west-1"]},
+        {"params": {"t_c": 999.0}},
+        {"initial_saved_work": 60.0},
+        {"capacity": 8},
+        {"capacity": 8, "demand": 2},
+        {"market": {"price_impact": 0.07}},
+    ],
+)
+def test_any_engine_visible_field_change_changes_hash(mutation):
+    base = build_scenario("scenario", BASE_SPEC)
+    mutated = build_scenario("scenario", {**BASE_SPEC, **mutation})
+    assert scenario_hash(base) != scenario_hash(mutated)
+
+
+def test_explicit_traces_hash_by_content():
+    it = get_instance("m1.xlarge", "eu-west-1")
+    tr_a = synthetic_trace(it, 3, seed=0)
+    tr_a2 = synthetic_trace(it, 3, seed=0)  # regenerated, same content
+    tr_b = synthetic_trace(it, 3, seed=1)
+    mk = lambda tr: Scenario(work_s=1800.0, bids=(0.4,), traces=(tr,))
+    assert scenario_hash(mk(tr_a)) == scenario_hash(mk(tr_a2))
+    assert scenario_hash(mk(tr_a)) != scenario_hash(mk(tr_b))
+
+
+def test_fleet_hash_responds_to_fields():
+    base = build_scenario("fleet", {"n_jobs": 5, "seeds": [0]})
+    same = build_scenario("fleet", {"seeds": [0], "n_jobs": 5})
+    other = build_scenario("fleet", {"n_jobs": 6, "seeds": [0]})
+    assert scenario_hash(base) == scenario_hash(same)
+    assert scenario_hash(base) != scenario_hash(other)
+
+
+def test_run_key_mixes_engine_and_schema_version():
+    sc = build_scenario("scenario", BASE_SPEC)
+    assert run_key(sc, "batch") == run_key(sc, "batch")
+    assert run_key(sc, "batch") != run_key(sc, "jax")
+    assert run_key(sc, "batch") != run_key(sc, "batch", schema_version=SCHEMA_VERSION + 1)
+    # the scenario hash itself is engine-independent (trend grouping key)
+    assert scenario_hash(sc) == scenario_hash(sc)
+
+
+def test_kind_disambiguates():
+    # a scenario and a fleet spec can never collide: canonical() embeds kind
+    single = build_scenario("scenario", BASE_SPEC)
+    fleet = build_scenario("fleet", {"n_jobs": 5})
+    assert single.canonical()["kind"] == "scenario"
+    assert fleet.canonical()["kind"] == "fleet"
+    assert scenario_hash(single) != scenario_hash(fleet)

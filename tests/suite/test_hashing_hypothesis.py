@@ -1,0 +1,94 @@
+"""Property tests for the content address: order-free, default-free, sensitive.
+
+Requires hypothesis (in requirements-dev.txt); skipped when absent, the
+deterministic variants in test_hashing.py always run.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.suite import canonical_json, run_key, scenario_hash
+from repro.suite.spec import build_scenario
+
+finite = st.floats(allow_nan=False, allow_infinity=False)
+work = st.floats(min_value=60.0, max_value=1e6)
+bid = st.floats(min_value=0.01, max_value=5.0)
+horizon = st.floats(min_value=1.0, max_value=60.0)
+
+
+@st.composite
+def specs(draw):
+    """A valid kind="scenario" spec dict with a generated (catalog) market."""
+    spec = {
+        "work_s": draw(work),
+        "bids": draw(st.lists(bid, min_size=1, max_size=4, unique=True)),
+        "instances": ["m1.xlarge/eu-west-1"],
+        "horizon_days": draw(horizon),
+        "seeds": draw(st.lists(st.integers(0, 10_000), min_size=1, max_size=3, unique=True)),
+    }
+    if draw(st.booleans()):
+        spec["schemes"] = draw(
+            st.lists(st.sampled_from(["opt", "hour", "edge", "adapt"]), min_size=1,
+                     max_size=3, unique=True)
+        )
+    if draw(st.booleans()):
+        spec["params"] = {"t_c": draw(st.floats(min_value=1.0, max_value=600.0))}
+    return spec
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=specs(), data=st.data())
+def test_hash_ignores_spec_field_order(spec, data):
+    order = data.draw(st.permutations(list(spec)))
+    reordered = {k: spec[k] for k in order}
+    assert scenario_hash(build_scenario("scenario", spec)) == scenario_hash(
+        build_scenario("scenario", reordered)
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=specs(), data=st.data())
+def test_hash_moves_with_any_engine_visible_field(spec, data):
+    mutators = {
+        "work_s": lambda v: v + 1.0,
+        "horizon_days": lambda v: v + 0.5,
+        "bids": lambda v: v + [max(v) + 0.25],
+        "seeds": lambda v: v + [max(v) + 1],
+    }
+    field = data.draw(st.sampled_from(sorted(mutators)))
+    mutated = {**spec, field: mutators[field](spec[field])}
+    assert scenario_hash(build_scenario("scenario", spec)) != scenario_hash(
+        build_scenario("scenario", mutated)
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    payload=st.recursive(
+        st.one_of(st.none(), st.booleans(), st.integers(-2**40, 2**40), finite, st.text()),
+        lambda inner: st.one_of(
+            st.lists(inner, max_size=4), st.dictionaries(st.text(), inner, max_size=4)
+        ),
+        max_leaves=12,
+    ),
+    data=st.data(),
+)
+def test_canonical_json_round_trips_and_ignores_dict_order(payload, data):
+    import json
+
+    text = canonical_json(payload)
+    assert json.loads(text) == payload or payload != payload  # NaN-free by strategy
+    if isinstance(payload, dict) and len(payload) > 1:
+        order = data.draw(st.permutations(list(payload)))
+        assert canonical_json({k: payload[k] for k in order}) == text
+
+
+@settings(max_examples=20, deadline=None)
+@given(spec=specs(), engine=st.sampled_from(["batch", "reference", "jax", "pallas"]))
+def test_run_key_is_deterministic_and_engine_scoped(spec, engine):
+    sc = build_scenario("scenario", spec)
+    assert run_key(sc, engine) == run_key(sc, engine)
+    assert run_key(sc, engine) != run_key(sc, engine + "-x")

@@ -1,0 +1,85 @@
+"""Layer merge semantics: order, deep-merge, provenance, dotted overrides."""
+
+import pytest
+
+from repro.suite.layers import Layer, merge_layers, nest_dotted, parse_override, parse_value
+
+
+def test_later_layer_wins_per_leaf():
+    r = merge_layers(
+        [
+            Layer("suite", {"work_s": 1000.0, "horizon_days": 5.0}),
+            Layer("cell", {"work_s": 2000.0}),
+        ]
+    )
+    assert r.values == {"work_s": 2000.0, "horizon_days": 5.0}
+    assert r.origin("work_s") == "cell"
+    assert r.origin("horizon_days") == "suite"
+    assert r.origin("never_set") == "default"
+
+
+def test_tables_merge_lists_replace():
+    r = merge_layers(
+        [
+            Layer("suite", {"params": {"t_c": 60.0, "t_r": 120.0}, "bids": [0.4, 0.5]}),
+            Layer("cell", {"params": {"t_c": 90.0}, "bids": [0.6]}),
+        ]
+    )
+    # tables merge key-by-key; lists replace wholesale
+    assert r.values["params"] == {"t_c": 90.0, "t_r": 120.0}
+    assert r.values["bids"] == [0.6]
+    assert r.origin("params.t_c") == "cell"
+    assert r.origin("params.t_r") == "suite"
+    assert r.origin("bids") == "cell"
+
+
+def test_table_replaced_by_scalar_drops_stale_provenance():
+    r = merge_layers(
+        [
+            Layer("suite", {"sla": {"os": "linux", "min_compute_units": 4.0}}),
+            Layer("cli", {"sla": "none"}),
+        ]
+    )
+    assert r.values["sla"] == "none"
+    assert r.origin("sla") == "cli"
+    assert "sla.os" not in r.provenance
+    assert "sla.min_compute_units" not in r.provenance
+
+
+def test_scalar_replaced_by_table():
+    r = merge_layers(
+        [Layer("suite", {"capacity": 8}), Layer("cell", {"capacity": {"nested": 1}})]
+    )
+    assert r.values["capacity"] == {"nested": 1}
+    assert r.origin("capacity.nested") == "cell"
+    assert r.origin("capacity") == "default"  # the leaf became a table
+
+
+def test_nest_dotted():
+    assert nest_dotted({"params.t_c": 120, "work_s": 1.0, "sla.os": "linux"}) == {
+        "params": {"t_c": 120},
+        "work_s": 1.0,
+        "sla": {"os": "linux"},
+    }
+
+
+def test_nest_dotted_conflict():
+    with pytest.raises(ValueError, match="non-table"):
+        nest_dotted({"params": 1, "params.t_c": 2})
+
+
+def test_parse_value_json_else_raw_string():
+    assert parse_value("120") == 120
+    assert parse_value("1.5") == 1.5
+    assert parse_value("[0.4, 0.5]") == [0.4, 0.5]
+    assert parse_value("true") is True
+    assert parse_value("hour") == "hour"  # not JSON: raw string, no quoting needed
+
+
+def test_parse_override():
+    assert parse_override("params.t_c=120") == ("params.t_c", 120)
+    assert parse_override("scheme=hour") == ("scheme", "hour")
+    with pytest.raises(ValueError):
+        parse_override("no-equals-sign")
+    with pytest.raises(ValueError):
+        parse_override("=value")

@@ -1,0 +1,138 @@
+"""Runner contract: resume = only missing cells; rerun = zero simulation."""
+
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import get_instance
+from repro.engine import FleetScenario, Scenario
+from repro.suite import RunStore, run_fleet_stored, run_stored, run_suite
+from repro.suite.spec import load_suite
+
+pytest.importorskip("tomli", reason="TOML suite files need tomllib (py3.11+) or tomli")
+
+SUITE = """
+    [suite]
+    name = "tiny"
+    kind = "scenario"
+    engine = "auto"
+
+    [base]
+    work_s = 1800.0
+    instances = ["m1.xlarge/eu-west-1"]
+    bids = [0.4, 0.45]
+    horizon_days = 2.0
+
+    [axes]
+    schemes = ["opt", "hour"]
+    seeds = [0, 1]
+"""
+
+
+@pytest.fixture
+def suite(tmp_path):
+    p = tmp_path / "tiny.toml"
+    p.write_text(textwrap.dedent(SUITE))
+    return load_suite(p)
+
+
+def test_second_pass_is_all_cache_hits_with_zero_simulation(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+
+    with obs.Telemetry() as tel:
+        first = run_suite(suite, store)
+    assert first.n_misses == 4 and first.n_hits == 0
+    assert tel.counter("suite.cache_miss") == 4
+    assert len(tel.find_spans("engine.run")) == 4  # one per simulated cell
+
+    with obs.Telemetry() as tel:
+        second = run_suite(suite, store)
+    # the acceptance property: n_cells cache hits, zero engine.run spans
+    assert second.n_hits == len(second.outcomes) == 4
+    assert tel.counter("suite.cache_hit") == 4
+    assert tel.counter("suite.cell") == 4
+    assert tel.find_spans("engine.run") == []
+    assert all(o.wall_s == 0.0 for o in second.outcomes)
+    assert "4 cache hits, 0 simulated" in second.summary()
+
+
+def test_interrupted_run_resumes_with_only_missing_cells(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+
+    # "interrupt" after two cells: max_cells bounds simulated cells per pass
+    first = run_suite(suite, store, max_cells=2)
+    assert first.n_misses == 2 and first.n_skipped == 2
+    assert len(store) == 2
+
+    with obs.Telemetry() as tel:
+        second = run_suite(suite, store)
+    assert second.n_hits == 2 and second.n_misses == 2 and second.n_skipped == 0
+    assert len(tel.find_spans("engine.run")) == 2  # exactly the missing cells
+    assert len(store) == 4
+
+    third = run_suite(suite, store)
+    assert third.n_hits == 4 and third.n_misses == 0
+
+
+def test_cli_layer_changes_the_key(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+    run_suite(suite, store)
+    report = run_suite(suite, store, cli={"work_s": 3600.0})
+    assert report.n_misses == 4  # overridden cells are different content
+
+
+def test_run_stored_round_trip(tmp_path):
+    sc = Scenario(
+        work_s=1800.0, bids=(0.4,),
+        instances=(get_instance("m1.xlarge", "eu-west-1"),), horizon_days=2.0, seeds=(0,),
+    )
+    store = RunStore(tmp_path / "store")
+    res, hit = run_stored(sc, store)
+    assert not hit
+    res2, hit2 = run_stored(sc, store)
+    assert hit2
+    np.testing.assert_array_equal(res2.cost, res.cost)
+    np.testing.assert_array_equal(res2.completed, res.completed)
+    assert res2.scenario is sc
+
+
+def test_run_fleet_stored(tmp_path):
+    sc = FleetScenario(n_jobs=4, seeds=(0,), horizon_days=2.0, n_types=4)
+    store = RunStore(tmp_path / "store")
+    grid, hit = run_fleet_stored(sc, store, suite="t")
+    assert not hit
+    grid2, hit2 = run_fleet_stored(sc, store, suite="t")
+    assert hit2
+    assert set(grid2.results) == set(grid.results)
+    assert grid2.cells == grid.cells
+
+
+def test_fleet_suite_runs_through_store(tmp_path):
+    p = tmp_path / "fleet.toml"
+    p.write_text(
+        textwrap.dedent(
+            """
+            [suite]
+            name = "tiny-fleet"
+            kind = "fleet"
+
+            [base]
+            n_jobs = 4
+            horizon_days = 2.0
+            n_types = 4
+            policies = ["cost_greedy"]
+
+            [axes]
+            seeds = [0, 1]
+            """
+        )
+    )
+    suite = load_suite(p)
+    store = RunStore(tmp_path / "store")
+    first = run_suite(suite, store)
+    assert first.n_misses == 2
+    assert all(o.record.engine == "fleet" for o in first.outcomes)
+    second = run_suite(suite, store)
+    assert second.n_hits == 2

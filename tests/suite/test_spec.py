@@ -1,0 +1,238 @@
+"""Suite files: parsing, axis expansion, layering, provenance, coercion."""
+
+import textwrap
+
+import pytest
+
+from repro.core import Scheme
+from repro.engine import FleetScenario, Scenario
+from repro.suite import load_suite
+from repro.suite.spec import build_scenario
+
+pytest.importorskip("tomli", reason="TOML suite files need tomllib (py3.11+) or tomli")
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(text))
+    return p
+
+
+BASIC = """
+    [suite]
+    name = "basic"
+    kind = "scenario"
+    engine = "auto"
+
+    [base]
+    work_s = 1800.0
+    instances = ["m1.xlarge/eu-west-1"]
+    bids = [0.4, 0.45]
+    horizon_days = 2.0
+
+    [axes]
+    schemes = ["opt", "hour"]
+    seeds = [0, 1]
+"""
+
+
+def test_axis_product_expansion(tmp_path):
+    suite = load_suite(_write(tmp_path, "basic.toml", BASIC))
+    assert suite.name == "basic" and suite.kind == "scenario"
+    assert suite.n_cells == 4
+    cells = suite.expand()
+    assert [c.label for c in cells] == [
+        "schemes=opt,seeds=0",
+        "schemes=opt,seeds=1",
+        "schemes=hour,seeds=0",
+        "schemes=hour,seeds=1",
+    ]
+    # scalar axis values wrap to one-element grids on grid-typed fields
+    for c in cells:
+        assert isinstance(c.scenario, Scenario)
+        assert len(c.scenario.schemes) == 1 and len(c.scenario.seeds) == 1
+    assert cells[0].scenario.schemes == (Scheme.OPT,)
+    assert cells[3].scenario.seeds == (1,)
+
+
+def test_provenance_layers(tmp_path):
+    suite = load_suite(_write(tmp_path, "basic.toml", BASIC))
+    cells = suite.expand(cli={"work_s": 3600.0})
+    r = cells[0].resolved
+    assert r.origin("bids") == "suite"  # the file's own [base] table
+    assert r.origin("schemes") == "cell"  # axis point
+    assert r.origin("work_s") == "cli"  # --set override
+    assert cells[0].scenario.work_s == 3600.0
+    desc = cells[0].describe()
+    assert "<- cli" in desc and "<- suite" in desc and "<- cell" in desc
+
+
+def test_extends_chain(tmp_path):
+    _write(
+        tmp_path,
+        "common.toml",
+        """
+        [base]
+        work_s = 1800.0
+        instances = ["m1.xlarge/eu-west-1"]
+        bids = [0.4]
+        horizon_days = 2.0
+        """,
+    )
+    child = _write(
+        tmp_path,
+        "child.toml",
+        """
+        [suite]
+        name = "child"
+        extends = "common.toml"
+
+        [base]
+        bids = [0.5, 0.6]
+        """,
+    )
+    suite = load_suite(child)
+    cells = suite.expand()
+    assert len(cells) == 1
+    assert cells[0].scenario.work_s == 1800.0  # inherited
+    assert cells[0].scenario.bids == (0.5, 0.6)  # overridden
+    assert cells[0].resolved.origin("work_s") == "base:common.toml"
+    assert cells[0].resolved.origin("bids") == "suite"
+
+
+def test_extends_cycle(tmp_path):
+    _write(tmp_path, "a.toml", "[suite]\nextends = 'b.toml'\n")
+    _write(tmp_path, "b.toml", "[suite]\nextends = 'a.toml'\n")
+    with pytest.raises(ValueError, match="cycle"):
+        load_suite(tmp_path / "a.toml")
+
+
+def test_explicit_cells_and_none_coercion(tmp_path):
+    suite = load_suite(
+        _write(
+            tmp_path,
+            "cells.toml",
+            """
+            [suite]
+            name = "cells"
+
+            [base]
+            work_s = 1800.0
+            instances = ["m1.xlarge/eu-west-1"]
+            bids = [0.4]
+            horizon_days = 2.0
+
+            [[cells]]
+            label = "free"
+            capacity = "none"
+
+            [[cells]]
+            label = "contended"
+            capacity = 4
+            demand = 2
+            """,
+        )
+    )
+    cells = suite.expand()
+    assert [c.label for c in cells] == ["free", "contended"]
+    assert cells[0].scenario.capacity is None
+    assert cells[1].scenario.capacity == 4 and cells[1].scenario.demand == 2
+
+
+def test_engine_is_layerable(tmp_path):
+    suite = load_suite(
+        _write(
+            tmp_path,
+            "eng.toml",
+            """
+            [suite]
+            name = "eng"
+            engine = "batch"
+
+            [base]
+            work_s = 1800.0
+            instances = ["m1.xlarge/eu-west-1"]
+            bids = [0.4]
+            horizon_days = 2.0
+
+            [[cells]]
+            label = "default"
+
+            [[cells]]
+            label = "scalar"
+            engine = "reference"
+            """,
+        )
+    )
+    cells = suite.expand()
+    assert cells[0].engine == "batch"
+    assert cells[1].engine == "reference"
+
+
+def test_fleet_kind(tmp_path):
+    suite = load_suite(
+        _write(
+            tmp_path,
+            "fleet.toml",
+            """
+            [suite]
+            name = "tiny-fleet"
+            kind = "fleet"
+
+            [base]
+            n_jobs = 4
+            horizon_days = 2.0
+            n_types = 4
+            policies = ["cost_greedy"]
+
+            [axes]
+            seeds = [0, 1]
+            """,
+        )
+    )
+    cells = suite.expand()
+    assert len(cells) == 2
+    assert all(isinstance(c.scenario, FleetScenario) for c in cells)
+    assert cells[1].scenario.seeds == (1,)
+
+
+def test_json_suite_file(tmp_path):
+    p = tmp_path / "s.json"
+    p.write_text(
+        '{"suite": {"name": "j"}, "base": {"work_s": 1800.0, "bids": [0.4],'
+        ' "instances": ["m1.xlarge/eu-west-1"], "horizon_days": 2.0}}'
+    )
+    cells = load_suite(p).expand()
+    assert len(cells) == 1 and cells[0].scenario.work_s == 1800.0
+
+
+def test_unknown_keys_rejected(tmp_path):
+    with pytest.raises(ValueError, match="top-level"):
+        load_suite(_write(tmp_path, "bad1.toml", "[typo]\nx = 1\n"))
+    suite = load_suite(
+        _write(
+            tmp_path,
+            "bad2.toml",
+            "[base]\nwork_s = 1.0\nbids = [0.4]\nnot_a_field = 3\n",
+        )
+    )
+    with pytest.raises(ValueError, match="not_a_field"):
+        suite.expand()
+    with pytest.raises(ValueError, match="params"):
+        build_scenario("scenario", {"work_s": 1.0, "bids": [0.4], "params": {"bogus": 1}})
+    with pytest.raises(ValueError, match="scheme"):
+        build_scenario("scenario", {"work_s": 1.0, "bids": [0.4], "schemes": ["nope"]})
+
+
+def test_sla_filters_instances():
+    sc = build_scenario(
+        "scenario",
+        {
+            "work_s": 1800.0,
+            "bids": [0.4],
+            "horizon_days": 2.0,
+            "sla": {"min_compute_units": 20.0, "os": "linux"},
+        },
+    )
+    assert sc.instances  # catalog filtered, not empty
+    assert all(it.compute_units >= 20.0 and it.os == "linux" for it in sc.instances)

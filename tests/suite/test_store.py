@@ -1,0 +1,130 @@
+"""Run store: bit-for-bit round trips, index semantics, crash safety."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Scheme, get_instance
+from repro.engine import FleetScenario, Scenario, get_engine, run_fleet
+from repro.suite import SCHEMA_VERSION, RunStore, run_key, scenario_hash
+
+IT = get_instance("m1.xlarge", "eu-west-1")
+
+
+@pytest.fixture(scope="module")
+def engine_run():
+    sc = Scenario(
+        work_s=1800.0,
+        bids=(0.4, 0.45),
+        schemes=(Scheme.OPT, Scheme.HOUR),
+        instances=(IT,),
+        horizon_days=2.0,
+        seeds=(0, 1),
+    )
+    return sc, get_engine("batch").run(sc)
+
+
+@pytest.fixture(scope="module")
+def fleet_run():
+    sc = FleetScenario(n_jobs=5, seeds=(0,), horizon_days=3.0, n_types=4)
+    return sc, run_fleet(sc)
+
+
+def test_engine_round_trip_bit_for_bit(tmp_path, engine_run):
+    sc, res = engine_run
+    store = RunStore(tmp_path / "store")
+    rec = store.put_engine_result(sc, res, suite="s", cell="c")
+
+    # a fresh store instance reads everything back from disk
+    reloaded = RunStore(tmp_path / "store")
+    assert len(reloaded) == 1
+    key = run_key(sc, "batch")
+    assert reloaded.has(key) and key in reloaded
+    got = reloaded.load(key, scenario=sc)
+
+    for name in ("completed", "completion_time", "cost", "n_checkpoints",
+                 "n_kills", "n_self_terminations", "work_lost_s"):
+        np.testing.assert_array_equal(getattr(got, name), getattr(res, name), err_msg=name)
+    assert got.engine == res.engine
+    assert got.wall_s == res.wall_s  # exact: JSON float repr round-trips
+    assert got.bids == res.bids and got.schemes == res.schemes
+    assert [m.label for m in got.markets] == [m.label for m in res.markets]
+    assert [m.on_demand for m in got.markets] == [m.on_demand for m in res.markets]
+    if res.timings is not None:
+        assert got.timings == res.timings
+    assert got.scenario is sc
+
+    assert rec.run_key == key
+    assert rec.scenario_hash == scenario_hash(sc)
+    assert rec.schema_version == SCHEMA_VERSION
+    assert rec.kind == "scenario" and rec.engine == "batch"
+    assert rec.suite == "s" and rec.cell == "c"
+    assert set(rec.metrics) >= {"completion_rate", "mean_cost", "total_kills"}
+
+
+def test_fleet_round_trip_preserves_sharing(tmp_path, fleet_run):
+    sc, grid = fleet_run
+    store = RunStore(tmp_path / "store")
+    store.put_fleet_result(sc, grid, suite="f")
+
+    got = RunStore(tmp_path / "store").load(run_key(sc, "fleet"), scenario=sc)
+    assert got.wall_s == grid.wall_s
+    assert set(got.results) == set(grid.results)
+    for key, res in grid.results.items():
+        g = got.results[key]
+        assert g.policy == res.policy and g.scheme == res.scheme and g.horizon == res.horizon
+        assert g.records == res.records  # AttemptRecord dataclass equality, exact floats
+        assert set(g.outcomes) == set(res.outcomes)
+        for jid, o in res.outcomes.items():
+            go = g.outcomes[jid]
+            assert go.job == o.job
+            assert (go.completed, go.cost, go.completion_time, go.n_kills, go.n_migrations) == (
+                o.completed, o.cost, o.completion_time, o.n_kills, o.n_migrations
+            )
+            assert go.attempts == o.attempts
+            # attempts alias the records list, exactly like the live result
+            for a in go.attempts:
+                assert any(a is r for r in g.records)
+    assert [type(c).__name__ for c in got.cells] == [type(c).__name__ for c in grid.cells]
+    assert got.cells == grid.cells
+
+
+def test_has_requires_payload_file(tmp_path, engine_run):
+    sc, res = engine_run
+    store = RunStore(tmp_path / "store")
+    rec = store.put_engine_result(sc, res)
+    (store.root / rec.payload).unlink()
+    assert store.get(rec.run_key) is not None  # still indexed
+    assert not store.has(rec.run_key)  # but not servable
+
+
+def test_reappend_last_wins(tmp_path, engine_run):
+    sc, res = engine_run
+    store = RunStore(tmp_path / "store")
+    first = store.put_engine_result(sc, res)
+    second = store.put_engine_result(sc, res)
+    assert first.run_key == second.run_key
+    assert len(store.index_path.read_text().splitlines()) == 2  # append-only file
+    reloaded = RunStore(tmp_path / "store")
+    assert len(reloaded) == 1  # one key
+    assert reloaded.get(first.run_key).created_at == second.created_at
+
+
+def test_torn_index_line_is_skipped(tmp_path, engine_run):
+    sc, res = engine_run
+    store = RunStore(tmp_path / "store")
+    rec = store.put_engine_result(sc, res)
+    with store.index_path.open("a") as f:
+        f.write('{"run_key": "truncated-mid-wr')  # interrupted append
+    reloaded = RunStore(tmp_path / "store")
+    assert len(reloaded) == 1 and reloaded.has(rec.run_key)
+
+
+def test_index_row_is_plain_json(tmp_path, engine_run):
+    sc, res = engine_run
+    store = RunStore(tmp_path / "store")
+    store.put_engine_result(sc, res)
+    row = json.loads(store.index_path.read_text().splitlines()[0])
+    assert row["schema_version"] == SCHEMA_VERSION
+    assert row["payload"].startswith("runs/") and row["payload"].endswith(".npz")

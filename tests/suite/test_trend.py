@@ -1,0 +1,105 @@
+"""Trend view: grouping by scenario identity, drift math, bench join."""
+
+import json
+import math
+
+import pytest
+
+from repro.core import get_instance
+from repro.engine import Scenario, get_engine
+from repro.suite import RunStore, compute_trends, load_bench_history, render_trends, trend_report
+from repro.suite.store import RunRecord
+
+
+def _rec(key, shash, sha, created, metrics, engine="batch", suite=None):
+    return RunRecord(
+        run_key=key,
+        scenario_hash=shash,
+        engine=engine,
+        schema_version=1,
+        kind="scenario",
+        created_at=created,
+        sha=sha,
+        payload=f"runs/{key}.npz",
+        wall_s=0.1,
+        n_cells=4,
+        metrics=metrics,
+        suite=suite,
+    )
+
+
+def test_groups_by_scenario_hash_and_engine():
+    records = [
+        _rec("k1", "hashA", "sha1", 1.0, {"mean_cost": 10.0}, suite="s"),
+        _rec("k2", "hashA", "sha2", 2.0, {"mean_cost": 12.0, "new_metric": 1.0}),
+        _rec("k3", "hashA", "sha1", 1.5, {"mean_cost": 11.0}, engine="jax"),
+        _rec("k4", "hashB", "sha2", 3.0, {"mean_cost": 5.0}),
+    ]
+    groups = compute_trends(records)
+    assert [(g.scenario_hash, g.engine, len(g.runs)) for g in groups] == [
+        ("hashA", "batch", 2),
+        ("hashA", "jax", 1),
+        ("hashB", "batch", 1),
+    ]
+    g = groups[0]
+    assert g.suite == "s"  # carried from whichever run recorded it
+    assert g.runs[0].created_at < g.runs[1].created_at  # oldest first
+    assert g.shas == ["sha1", "sha2"]
+
+
+def test_drift_math():
+    g = compute_trends(
+        [
+            _rec("k1", "h", "sha1", 1.0, {"mean_cost": 10.0, "rate": 1.0, "bad": math.nan}),
+            _rec("k2", "h", "sha2", 2.0, {"mean_cost": 12.5, "rate": 1.0, "bad": math.nan}),
+        ]
+    )[0]
+    drift = g.drift()
+    assert drift["mean_cost"] == (10.0, 12.5, 2.5)
+    assert drift["rate"] == (1.0, 1.0, 0.0)
+    assert drift["bad"][2] == 0.0  # nan on both ends = unchanged, not drift
+
+
+def test_bench_join(tmp_path):
+    history = tmp_path / "BENCH_history.jsonl"
+    rows = [
+        {"sha": "sha1", "backends": {"jax": {"speedup": 8.0}, "batch": {"speedup": None}}},
+        {"sha": "sha1", "backends": {"jax": {"speedup": 9.0}}},  # later run, same sha: wins
+        {"sha": "sha2", "backends": {"pallas": {"speedup": 12.0}}},
+    ]
+    history.write_text("\n".join(json.dumps(r) for r in rows) + "\nnot-json\n")
+    bench = load_bench_history(history)
+    assert set(bench) == {"sha1", "sha2"}
+
+    g = compute_trends(
+        [
+            _rec("k1", "h", "sha1", 1.0, {"mean_cost": 1.0}),
+            _rec("k2", "h", "sha2", 2.0, {"mean_cost": 2.0}),
+        ]
+    )[0]
+    joined = g.bench_join(bench)
+    assert joined == {"first": {"jax": 9.0}, "last": {"pallas": 12.0}}
+
+
+def test_load_bench_history_missing_file(tmp_path):
+    assert load_bench_history(tmp_path / "nope.jsonl") == {}
+
+
+def test_render_trends_and_report(tmp_path):
+    assert "empty run store" in render_trends([])
+
+    store = RunStore(tmp_path / "store")
+    sc = Scenario(
+        work_s=1800.0, bids=(0.4,),
+        instances=(get_instance("m1.xlarge", "eu-west-1"),), horizon_days=2.0,
+    )
+    store.put_engine_result(sc, get_engine("batch").run(sc), suite="demo", sha="abcdef1234")
+    text = trend_report(store, history_path=tmp_path / "no_history.jsonl")
+    assert "1 scenario identities" in text
+    assert "suite=demo" in text and "single run" in text
+
+    # a second run of the same content at another sha makes drift reportable
+    rec = store.get(store.records()[0].run_key)
+    later = RunRecord.from_dict({**rec.asdict(), "created_at": rec.created_at + 1, "sha": "fedcba4321"})
+    text = render_trends(compute_trends([rec, later]))
+    assert "unchanged" in text  # identical metrics between the two runs
