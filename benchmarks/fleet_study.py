@@ -3,11 +3,22 @@
 Usage::
 
     PYTHONPATH=src python benchmarks/fleet_study.py [--quick]
+    PYTHONPATH=src python benchmarks/fleet_study.py --bench [--quick]
+                    [--min-speedup 10] [--repeats 3] [--skip-jax]
 
 ``--quick`` runs the acceptance-sized study: >= 50 jobs across >= 16 instance
 types under the four placement policies, a handful of seeds, in seconds.
 The full study covers the entire 64-type catalog, more seeds, and a small
 bid-margin sweep.
+
+``--bench`` benchmarks the fleet engines against each other instead: the
+scalar controller loop vs the vectorized batch engine (vs the jax-scored
+variant when jax is importable), asserting bit-identical results before
+timing, writing ``BENCH_fleet.json``, appending to ``BENCH_history.jsonl``,
+and failing (exit 1) unless the batch engine clears ``--min-speedup`` — the
+CI gate for the vectorized fleet engine.  All engines share one cached
+input grid (traces, workloads, memo), so the comparison times the
+evaluation loops, not trace generation.
 
 Results persist through the content-addressed run store (``--store``,
 default ``results/store``): re-running an unchanged study configuration is
@@ -18,7 +29,9 @@ a cache hit that loads the previous grid instead of simulating.  Pass
 from __future__ import annotations
 
 import argparse
+import json
 import logging
+import pathlib
 import sys
 import time
 
@@ -58,6 +71,136 @@ def full_config() -> SweepConfig:
     )
 
 
+def bench_scenario(quick: bool) -> FleetScenario:
+    """The grid the engine comparison runs on (uncontended, fixed margins —
+    the vectorized engines' domain)."""
+    if quick:
+        return FleetScenario(
+            n_jobs=50,
+            mean_interarrival_s=0.4 * HOUR,
+            mean_work_h=4.0,
+            horizon_days=10.0,
+            n_types=16,
+            seeds=(0, 1, 2, 3),
+            bid_margins=(0.5, 0.56),
+            sla=SLA(min_compute_units=4.0, os="linux"),
+        )
+    return FleetScenario(
+        n_jobs=120,
+        mean_interarrival_s=0.3 * HOUR,
+        mean_work_h=5.0,
+        horizon_days=14.0,
+        n_types=32,
+        seeds=(0, 1, 2, 3),
+        bid_margins=(0.5, 0.56),
+        sla=SLA(min_compute_units=4.0, os="linux"),
+    )
+
+
+def _grids_equal(ref, got) -> bool:
+    """Bit-exact grid equality: same cells, same records, same outcomes."""
+    if list(got.results) != list(ref.results):
+        return False
+    for key, a in ref.results.items():
+        b = got.results[key]
+        if b.records != a.records:
+            return False
+        for job_id, oa in a.outcomes.items():
+            ob = b.outcomes[job_id]
+            if (
+                ob.completed != oa.completed
+                or ob.completion_time != oa.completion_time
+                or ob.cost != oa.cost
+                or ob.n_kills != oa.n_kills
+                or ob.n_migrations != oa.n_migrations
+            ):
+                return False
+    return True
+
+
+def _time_engine(scenario: FleetScenario, engine: str, repeats: int):
+    """(best wall over ``repeats``, last grid) after one warm-up run.
+
+    The warm-up populates the shared input cache (and the jit cache for the
+    jax engine), so every engine is timed on identical warm inputs.
+    """
+    from repro.engine import run_fleet
+
+    grid = run_fleet(scenario, engine=engine)  # warm-up
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        grid = run_fleet(scenario, engine=engine)
+        best = min(best, time.perf_counter() - t0)
+    return best, grid
+
+
+def run_bench(args) -> int:
+    # engine_bench (sibling script on sys.path) owns the history-log helpers
+    from engine_bench import append_history, git_sha
+
+    scenario = bench_scenario(args.quick)
+    engines = ["controller", "batch"]
+    if not args.skip_jax:
+        try:
+            import jax  # noqa: F401
+
+            engines.append("jax")
+        except ImportError:
+            log.info("jax not importable; benchmarking controller vs batch only")
+    walls: dict[str, float] = {}
+    grids: dict[str, object] = {}
+    for engine in engines:
+        walls[engine], grids[engine] = _time_engine(scenario, engine, args.repeats)
+    n_cells = len(grids["controller"].cells)
+
+    parity_ok = all(_grids_equal(grids["controller"], grids[e]) for e in engines[1:])
+    if not parity_ok:
+        log.error("FAIL: engine results diverge from the controller; not timing a wrong answer")
+
+    record = {
+        "grid": {
+            "n_jobs": scenario.n_jobs,
+            "n_types": scenario.n_types,
+            "n_seeds": len(scenario.seeds),
+            "n_margins": len(scenario.bid_margins),
+            "n_policies": len(scenario.policies),
+            "n_cells": n_cells,
+            "horizon_days": scenario.horizon_days,
+            "quick": bool(args.quick),
+        },
+        "backends": {},
+        "parity_ok": parity_ok,
+    }
+    base = walls["controller"]
+    for engine in engines:
+        entry = {"wall_s": walls[engine], "cells_per_s": n_cells / walls[engine]}
+        if engine != "controller":
+            entry["speedup"] = base / walls[engine]
+        record["backends"][engine] = entry
+        log.info(
+            "%-10s wall %.3fs (%.1f cells/s)%s", engine, walls[engine],
+            n_cells / walls[engine],
+            f"  {base / walls[engine]:.1f}x" if engine != "controller" else "",
+        )
+
+    pathlib.Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+    log.info("wrote %s", args.out)
+    append_history(args.history, record, git_sha())
+
+    failures = []
+    if not parity_ok:
+        failures.append("engine parity")
+    for engine in engines[1:]:
+        sp = record["backends"][engine]["speedup"]
+        if sp < args.min_speedup:
+            failures.append(f"{engine} speedup {sp:.1f}x < {args.min_speedup:.0f}x")
+    if failures:
+        log.error("FAIL: %s", "; ".join(failures))
+        return 1
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="small study (CI smoke)")
@@ -65,8 +208,25 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument(
         "--no-store", action="store_true", help="always simulate; do not touch the run store"
     )
+    ap.add_argument(
+        "--bench", action="store_true",
+        help="benchmark controller vs batch (vs jax) fleet engines instead of the study",
+    )
+    ap.add_argument(
+        "--min-speedup", type=float, default=10.0,
+        help="--bench gate: fail unless every vectorized engine clears this factor",
+    )
+    ap.add_argument("--repeats", type=int, default=3, help="--bench: best-of-N timing")
+    ap.add_argument("--skip-jax", action="store_true", help="--bench: never try the jax engine")
+    ap.add_argument("--out", default="BENCH_fleet.json", help="--bench: benchmark record path")
+    ap.add_argument(
+        "--history", default="BENCH_history.jsonl", help="--bench: history log to append to"
+    )
     args = ap.parse_args(argv)
     configure_logging()
+
+    if args.bench:
+        return run_bench(args)
 
     cfg = quick_config() if args.quick else full_config()
     scenario = FleetScenario.from_sweep_config(cfg)

@@ -20,7 +20,8 @@ returns an :class:`EngineResult` — per-cell outcome arrays shaped
     default (native TPU compilation is an explicit f32-pending opt-in).
 
 ``run(scenario)`` is the one-call surface; ``engine="auto"`` picks the batch
-backend (which itself falls back to the reference for ACC cells only).
+backend.  Every scheme is batched — ACC included — so no backend falls back
+to the scalar reference for any cell.
 """
 
 from __future__ import annotations
@@ -56,15 +57,15 @@ class PhaseTimings:
     (the old free-form dict is gone).  Phases that a backend does not have
     stay at their zero defaults: the fused device backends report one
     ``sim_s`` covering all schemes, the NumPy batch driver reports per-scheme
-    ``per_scheme[name].sim_s`` instead, the scalar paths (reference engine,
-    ACC fallback) report ``scalar_s``.
+    ``per_scheme[name].sim_s`` instead, the scalar reference engine reports
+    ``scalar_s``.
     """
 
     engine: str
     total_s: float
     grid_s: float = 0.0  # period grid + ADAPT tables (cache misses only)
     sim_s: float = 0.0  # fused one-compile sim phase (jax/pallas)
-    scalar_s: float = 0.0  # scalar event-loop phase (reference, ACC fallback)
+    scalar_s: float = 0.0  # scalar event-loop phase (reference engine)
     impl: str | None = None  # spot_sweep implementation label, when applicable
     per_scheme: Mapping[str, SchemePhases] = dataclasses.field(default_factory=dict)
 
@@ -258,9 +259,8 @@ class Engine(Protocol):
 def get_engine(name: str = "auto") -> Engine:
     """Resolve an engine by name: ``"reference"``, ``"batch"``, ``"jax"``,
     ``"pallas"`` (the fused Pallas sweep kernel, interpreter mode — exact
-    but slow), or ``"auto"`` (currently the batch backend,
-    which is parity-checked against the reference and falls back to it
-    per-cell for ACC only).
+    but slow), or ``"auto"`` (currently the batch backend, parity-checked
+    ``==`` against the reference on every scheme, ACC included).
 
     Backend choice is explicit: ``"jax"`` / ``"pallas"`` raise
     :class:`ImportError` with an install hint when jax is missing rather

@@ -19,9 +19,10 @@ in the process; this driver doubles as the ``impl="ref"`` path of the
 :mod:`repro.kernels.spot_sweep` triad.  ADAPT's per-step hazard decision is precomputed into
 binned survival tables per (market, bid) cell (:class:`AdaptTables`), so it
 advances in lockstep like the other schemes instead of falling back to the
-scalar loop.  Only ACC — a different control loop entirely (bid-unlimited
-leases, poll-driven relaunch) — still runs on the per-cell scalar path shared
-with :class:`~repro.engine.reference.ReferenceEngine`.
+scalar loop.  ACC — a different control loop entirely (bid-unlimited leases,
+poll-driven relaunch) — runs as a cell-decoupled seek/lease state machine
+(:func:`_run_acc`) over the same period grid, so no scheme falls back to the
+per-cell scalar path anymore.
 
 Exactness is the design contract, not an aspiration (see
 :mod:`repro.engine.kernels` and :mod:`repro.engine.parity`): parity with the
@@ -43,6 +44,7 @@ from repro.engine.kernels import (
     _kernel_none,
     _kernel_opt,
     _kernel_windows,
+    acc_lease_tick,
 )
 from repro.engine.scenario import BATCHED_SCHEMES, MarketCell, Scenario
 from repro.obs import telemetry as obs
@@ -76,13 +78,13 @@ def grid_and_tables(
 def run_batched(scenario: Scenario, engine_name: str, run_schemes) -> EngineResult:
     """Shared driver for the array backends (batch, jax, pallas).
 
-    Materializes the market, splits schemes into the batched set and the
-    scalar fallback (ACC only), resolves the cached period grid + ADAPT
-    decision tables, dispatches the whole batched set to
-    ``run_schemes(schemes, grid, scenario, adapt_tables)`` — one call, so a
-    backend may evaluate every scheme in a single compiled program — and
-    scalar-fills the rest.  The backends can never drift in their
-    orchestration, only in their kernels.
+    Materializes the market, resolves the cached period grid + ADAPT decision
+    tables, and dispatches the whole scheme set to ``run_schemes(schemes,
+    grid, scenario, adapt_tables)`` — one call, so a backend may evaluate
+    every scheme in a single compiled program.  Every scheme is batched now
+    (``BATCHED_SCHEMES`` covers ACC too); the scalar-fill branch survives
+    only as a guard should a scheme ever leave the batched set again.  The
+    backends can never drift in their orchestration, only in their kernels.
 
     Every phase is timed as a telemetry span (``grid`` / ``sim`` / ``bill``
     / ``scalar`` under one ``engine.run`` root); the span tree lands in the
@@ -116,10 +118,10 @@ def run_batched(scenario: Scenario, engine_name: str, run_schemes) -> EngineResu
                 res.n_checkpoints[:, :, s] = out["n_checkpoints"].reshape(M, B)
                 res.n_kills[:, :, s] = out["n_kills"].reshape(M, B)
                 res.work_lost_s[:, :, s] = out["work_lost_s"].reshape(M, B)
+                if "n_self_terminations" in out:
+                    res.n_self_terminations[:, :, s] = out["n_self_terminations"].reshape(M, B)
 
-        if fallback:
-            # ACC is a different control loop (bid-unlimited leases): run it
-            # on the scalar path shared with ReferenceEngine, never drifting
+        if fallback:  # pragma: no cover - BATCHED_SCHEMES covers every scheme
             from repro.engine.reference import scalar_fill
 
             with tel.span("scalar", schemes=[s.value for s in fallback]):
@@ -145,8 +147,8 @@ def run_schemes_numpy(schemes, grid, scenario, adapt_tables):
 
 class BatchEngine:
     """Vectorized evaluation; bit-identical to :class:`ReferenceEngine` on
-    cost / completion_time / n_kills / n_checkpoints for every bid-limited
-    scheme (NONE/OPT/HOUR/EDGE/ADAPT)."""
+    cost / completion_time / n_kills / n_checkpoints for every scheme,
+    ACC included."""
 
     name = "batch"
 
@@ -293,6 +295,12 @@ def _run_scheme(
         # cursor and the loop count is the busiest cell's tick total, not the
         # per-period maximum summed over the padded period axis.
         return _run_adapt(grid, scenario, adapt_tables)
+    if scheme == Scheme.ACC:
+        # ACC is not period-structured (bid-unlimited leases, poll-driven
+        # relaunch): a cell-decoupled seek/lease state machine over the same
+        # period grid, with per-lane monotone period cursors answering every
+        # price-vs-bid query.
+        return _run_acc(grid, scenario)
     params = scenario.params
     work_s = scenario.work_s
     t_r, t_c, delta = params.t_r, params.t_c, params.billing_period_s
@@ -531,6 +539,214 @@ def _run_adapt(
         "n_checkpoints": n_ckpt,
         "n_kills": n_kills,
         "work_lost_s": work_lost,
+    }
+
+
+# ---------------------------------------------------------------------------
+# ACC driver — cell-decoupled seek/lease state machine over poll ticks
+# ---------------------------------------------------------------------------
+
+
+def _run_acc(grid: _PeriodGrid, scenario: Scenario) -> dict[str, np.ndarray]:
+    """Walk every ACC cell through its lease chain in one lockstep loop.
+
+    ACC (paper §VI) is not period-structured: an instance launches at the
+    first admissible poll tick, is never provider-killed, and walks hour
+    boundaries to completion, self-termination, or the horizon
+    (``simulator._simulate_acc``).  Each lane is one (market, bid) cell in
+    one of two modes — *seeking* (the ``_next_launch_time`` poll walk,
+    replicated step for step because the visited poll ticks are
+    path-dependent float lattice values) or *in-lease* (hour ticks via
+    :func:`repro.engine.kernels.acc_lease_tick`, the leased-work variant of
+    ``windows_advance``).
+
+    Two vectorization devices make this exact *and* cheap:
+
+    * ``price_at(t) <= a_bid`` iff ``t`` falls inside an availability period
+      of the cell — the same float comparisons ``available_periods`` made on
+      the original ``trace.times`` values — and every lane's query stream is
+      monotone in ``t`` (seek ticks, then ``t_cd < t_td`` per hour, then the
+      relaunch seek), so one forward-only per-lane period cursor answers all
+      membership queries in amortized O(1).
+    * A seeking lane whose cursor has run out of periods (no availability
+      ends after the current tick) can never launch again; it is retired
+      immediately instead of polling segment by segment to the horizon — the
+      scalar walk returns ``None`` there with no observable state change.
+
+    Self-terminated lanes re-enter seek from ``terminated_at + _EPS``; a
+    lease that runs off the horizon is billed OUT_OF_BID-style over
+    ``[launch, horizon)`` with no work_lost charge, mirroring the scalar.
+    ACC reports ``n_kills = 0`` (never provider-killed), so the
+    kill-counting half of :func:`_bill_runs_flat` is discarded.
+    """
+    params = scenario.params
+    work_s = scenario.work_s
+    t_r, t_c, t_w = params.t_r, params.t_c, params.t_w
+    delta, poll = params.billing_period_s, params.poll_s
+    C, P = grid.A.shape
+
+    done = np.zeros(C, dtype=bool)
+    comp_time = np.full(C, np.inf)
+    n_ckpt = np.zeros(C, dtype=np.int64)
+    n_term = np.zeros(C, dtype=np.int64)
+    work_lost = np.zeros(C)
+    # flat run records (lease ordinal, cell, launch, end, user) — the ordinal
+    # keeps each cell's runs chronological for the billing lexsort
+    Rp: list[np.ndarray] = []
+    Rc: list[np.ndarray] = []
+    Ra: list[np.ndarray] = []
+    Re: list[np.ndarray] = []
+    Ru: list[np.ndarray] = []
+
+    def record(pv, cv, av, ev, user: bool) -> None:
+        Rp.append(pv)
+        Rc.append(cv)
+        Ra.append(av)
+        Re.append(ev)
+        Ru.append(np.full(len(cv), user, dtype=bool))
+
+    # padded per-market boundary times: vectorized trace.next_change
+    tlists = [m.trace.times for m in grid.markets]
+    Tpad = np.full((grid.n_markets, max(len(tt) for tt in tlists) + 1), np.inf)
+    for m_i, tt in enumerate(tlists):
+        Tpad[m_i, : len(tt)] = tt
+
+    idx = np.arange(C)  # global cell ids of the active set
+    N = C
+    m_a = idx // grid.n_bids
+    pcnt_a = grid.valid.sum(axis=1)
+    hor_a = grid.horizon
+    ptr = np.zeros(N, dtype=np.int64)  # per-lane monotone period cursor
+
+    def admissible(mask, tq):
+        # price_at(tq) <= a_bid  ⟺  tq inside an availability period; NaN
+        # pads compare False, so the cursor stops at the first real period
+        # ending after tq (or runs out: ptr == pcnt_a)
+        while True:
+            pc = np.minimum(ptr, P - 1)
+            mv = mask & (ptr < pcnt_a) & (grid.B[idx, pc] <= tq)
+            if not mv.any():
+                break
+            ptr[mv] += 1
+        pc = np.minimum(ptr, P - 1)
+        return mask & (ptr < pcnt_a) & (grid.A[idx, pc] <= tq) & (tq < grid.B[idx, pc])
+
+    alive = np.ones(N, dtype=bool)
+    sv = np.full(N, float(scenario.initial_saved_work))
+    L = np.zeros(N)
+    t = np.zeros(N)
+    work = np.zeros(N)
+    kk = np.ones(N, dtype=np.int64)  # hour index within the current lease
+    ordn = np.zeros(N, dtype=np.int64)
+    # immediate launch at t=0 when the opening price already admits the bid;
+    # everyone else starts the poll walk from ceil(0/poll - eps) * poll
+    adm0 = admissible(alive, np.zeros(N))
+    seeking = ~adm0
+    ts = np.where(seeking, np.ceil(0.0 / poll - _EPS) * poll, 0.0)
+    work = np.where(adm0, sv, work)
+    t = np.where(adm0, t_r, t)  # L = 0.0, t = L + t_r
+
+    while alive.any():
+        # -- seek: walk every seeking lane to its launch tick (or retire it)
+        seek = alive & seeking
+        while seek.any():
+            dead = seek & (ts >= hor_a)
+            ok = admissible(seek & ~dead, ts)
+            # cursor exhausted: no availability ends after ts — never launches
+            dead |= seek & ~dead & ~ok & (ptr >= pcnt_a)
+            alive &= ~dead
+            seek &= ~dead
+            if ok.any():
+                L = np.where(ok, ts, L)
+                t = np.where(ok, ts + t_r, t)  # t = L + t_r
+                work = np.where(ok, sv, work)
+                kk = np.where(ok, 1, kk)
+                seeking &= ~ok
+                seek &= ~ok
+            rows = np.nonzero(seek)[0]
+            if rows.size:
+                # t = max(t + poll, ceil(next_change(t)/poll - eps) * poll)
+                j = (Tpad[m_a[rows]] <= ts[rows, None]).sum(axis=1)
+                nxt = Tpad[m_a[rows], j]
+                ts[rows] = np.maximum(ts[rows] + poll, np.ceil(nxt / poll - _EPS) * poll)
+
+        live = alive & ~seeking
+        if not live.any():
+            continue
+
+        t_h = L + kk * delta
+        runoff = live & (t_h > hor_a)
+        if runoff.any():
+            # lease runs off the horizon: billed OUT_OF_BID over [L, horizon)
+            # (full hours charged, partial final hour free), no work_lost
+            rb = runoff & (hor_a > L)
+            if rb.any():
+                record(ordn[rb], idx[rb], L[rb], hor_a[rb], False)
+            alive &= ~runoff
+            live &= ~runoff
+            if not live.any():
+                continue
+
+        # Eq. (3)-(4) decision points (schemes.decision_points, inlined)
+        t_cd = t_h - t_c - t_w
+        t_td = t_h - t_w
+        take = live & ~admissible(live, t_cd)
+        term_q = live & ~admissible(live, t_td)
+        live2, t, work, sv, d_at, fin, ck, term = acc_lease_tick(
+            np, live, t_h, take, term_q, t, work, sv, work_s, t_c
+        )
+        if fin.any():
+            rows = idx[fin]
+            comp_time[rows] = d_at[fin]
+            done[rows] = True
+            record(ordn[fin], rows, L[fin], d_at[fin], True)
+            alive &= ~fin
+        if ck.any():
+            n_ckpt[idx[ck]] += 1
+        if term.any():
+            rows = idx[term]
+            record(ordn[term], rows, L[term], t_h[term], True)
+            ordn[term] += 1
+            n_term[rows] += 1
+            work_lost[rows] += work[term] - sv[term]
+            seeking |= term  # lane stays alive, back to the poll walk
+            # _next_launch_time(terminated_at + _EPS, ...) opening tick
+            ts = np.where(term, np.ceil((t_h + _EPS) / poll - _EPS) * poll, ts)
+        kk = np.where(live2, kk + 1, kk)
+
+        # -- compact: drop finished cells so the tail runs on small arrays
+        na = int(alive.sum())
+        if na and na <= N // 2:
+            obs.current().count("acc.compactions")
+            keep = alive
+            idx, pcnt_a, hor_a, m_a = idx[keep], pcnt_a[keep], hor_a[keep], m_a[keep]
+            ptr, sv, L, t, work = ptr[keep], sv[keep], L[keep], t[keep], work[keep]
+            kk, ts, ordn, seeking = kk[keep], ts[keep], ordn[keep], seeking[keep]
+            alive = np.ones(na, dtype=bool)
+            N = na
+
+    with obs.current().span("bill", scheme=Scheme.ACC.value):
+        if Rc:
+            total, _ = _bill_runs_flat(
+                grid,
+                np.concatenate(Rp),
+                np.concatenate(Rc),
+                np.concatenate(Ra),
+                np.concatenate(Re),
+                np.concatenate(Ru),
+                delta,
+            )
+        else:
+            total = np.zeros(C)
+
+    return {
+        "completed": done & np.isfinite(comp_time),
+        "completion_time": comp_time,
+        "cost": total,
+        "n_checkpoints": n_ckpt,
+        "n_kills": np.zeros(C, dtype=np.int64),  # ACC is never provider-killed
+        "work_lost_s": work_lost,
+        "n_self_terminations": n_term,
     }
 
 

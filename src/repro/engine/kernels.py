@@ -40,6 +40,7 @@ __all__ = [
     "_kernel_none",
     "_kernel_opt",
     "_kernel_windows",
+    "acc_lease_tick",
     "adapt_decision",
     "adapt_tick",
     "adapt_tick_core",
@@ -214,6 +215,7 @@ def _kernel_windows(
     """
     C = b.shape[0]
     b_full = b
+    work_s_full = work_s  # per-lane work_s must survive compaction (fleet lanes)
     rows = np.arange(C)  # current → original row mapping (host-side)
     work = saved
     t = start_work
@@ -274,6 +276,8 @@ def _kernel_windows(
             done_now, done_at, ckpt_add = done_now[keep], done_at[keep], ckpt_add[keep]
             tail = tail[keep]
             in_loop = in_loop[keep]
+            if np.ndim(work_s):
+                work_s = work_s[keep]
             if edge_state is not None:
                 base, n_edges, ptr = base[keep], n_edges[keep], ptr[keep]
 
@@ -283,6 +287,7 @@ def _kernel_windows(
         out["done_now"], out["done_at"], out["ckpt_add"], out["tail"],
     )
     b = b_full
+    work_s = work_s_full
 
     # tail segment: work to b, maybe completing
     lhs = work + (b - t)
@@ -533,3 +538,42 @@ def _kernel_adapt(xp, a, b, start_work, saved, work_s, t_c, t_r, interval, table
         )
     _, _, work, sv, _, done_now, done_at, ckpt_add = state
     return done_now, done_at, work, sv, ckpt_add
+
+
+def acc_lease_tick(xp, live, t_h, take_ckpt, term_q, t, work, sv, work_s, t_c):
+    """One ACC hour-boundary step for every in-lease lane.
+
+    The leased-work variant of :func:`windows_advance`: mirrors one iteration
+    of the ``while True`` loop in ``repro.core.simulator._acc_lease``, with
+    the two price queries hoisted to the caller — ``take_ckpt`` is
+    ``price_at(t_h - t_c - t_w) > a_bid`` and ``term_q`` is
+    ``price_at(t_h - t_w) > a_bid`` (Eq. 4 decision points).  The caller
+    owns the hour cadence (``t_h = launch + k * billing_period``) and the
+    horizon-runoff break, which happen *before* this tick.
+
+    Order matters and is the scalar's, expression for expression: the
+    checkpoint-shortened segment end, the completion test (association
+    ``work + (seg_end - t)`` and ``t + (work_s - work)``), the
+    *unconditional* ``t = seg_end`` for lanes that neither finished nor
+    advanced, then checkpoint commit (``sv = work``, ``t = t_h``), then the
+    self-termination query.
+
+    Returns ``(live, t, work, sv, d_at, fin, ck, term)``: surviving lanes,
+    advanced clocks, the would-be completion time ``d_at`` (valid on ``fin``
+    lanes), and the completion / checkpoint-taken / self-terminated masks
+    (terminated lanes stop at ``t_h``).
+    """
+    seg_end = xp.where(take_ckpt, t_h - t_c, t_h)
+    adv = live & (seg_end > t)
+    fin = adv & (work + (seg_end - t) >= work_s - _EPS)
+    d_at = t + (work_s - work)
+    live = live & ~fin
+    adv = adv & ~fin
+    work = xp.where(adv, work + (seg_end - t), work)
+    t = xp.where(live, seg_end, t)
+    ck = live & take_ckpt
+    sv = xp.where(ck, work, sv)
+    t = xp.where(ck, t_h, t)
+    term = live & term_q
+    live = live & ~term
+    return live, t, work, sv, d_at, fin, ck, term

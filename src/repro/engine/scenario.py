@@ -48,10 +48,12 @@ from repro.market import MarketParams, effective_trace
 BID_LIMITED_SCHEMES = (Scheme.NONE, Scheme.OPT, Scheme.HOUR, Scheme.EDGE, Scheme.ADAPT)
 
 #: Schemes the array backends (batch / jax) lower onto structure-of-arrays
-#: lockstep ops.  Since ADAPT's hazard decision became a binned-table lookup
-#: this is every bid-limited scheme; only ACC — a different control loop
-#: (bid-unlimited leases, poll-driven relaunch) — stays on the scalar path.
-BATCHED_SCHEMES = BID_LIMITED_SCHEMES
+#: lockstep ops.  ADAPT's hazard decision became a binned-table lookup, and
+#: ACC — a different control loop (bid-unlimited leases, poll-driven
+#: relaunch) — runs as a cell-decoupled seek/lease state machine
+#: (``engine.batch._run_acc``), so this is now *every* scheme: nothing falls
+#: back to the per-cell scalar path.
+BATCHED_SCHEMES = BID_LIMITED_SCHEMES + (Scheme.ACC,)
 
 
 def _trace_digest(trace: PriceTrace) -> dict:

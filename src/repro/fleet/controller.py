@@ -152,7 +152,18 @@ class FleetResult:
         type, one price spike stalls them all simultaneously (at minimum for
         the t_r recovery of the migration), whereas a diversified fleet keeps
         computing through a regional spike.
+
+        ``eps`` is a *relative* tolerance: a record (or gap) only counts when
+        it is longer than ``eps * max(1.0, |t|)``.  Fleet timestamps reach
+        ~1e6 s, where float64 spacing is ~1e-10 s — an absolute ``1e-6``
+        cutoff near the horizon silently classified real zero-length
+        touch-points as outages (and vice versa) depending on how far into
+        the trace they fell.
         """
+
+        def tol(t: float) -> float:
+            return eps * max(1.0, abs(t))
+
         deltas: list[tuple[float, int, int]] = []  # (time, job_delta, work_delta)
         for o in self.outcomes.values():
             a = o.job.arrival_s
@@ -161,7 +172,7 @@ class FleetResult:
                 deltas.append((a, 1, 0))
                 deltas.append((b, -1, 0))
         for r in self.records:
-            if r.end > r.work_start + eps:
+            if r.end > r.work_start + tol(r.work_start):
                 deltas.append((r.work_start, 0, 1))
                 deltas.append((r.end, 0, -1))
         deltas.sort()
@@ -176,7 +187,7 @@ class FleetResult:
             if is_outage and not was_outage:
                 start = t
             elif was_outage and not is_outage and start is not None:
-                if t - start > eps:
+                if t - start > tol(start):
                     out.append((start, t))
                 start = None
         return out

@@ -1,0 +1,40 @@
+"""JAX twin of the fleet EET scoring op.
+
+``build_eet_kernel`` returns the traceable body; :mod:`.ops` jits and caches
+it per padded shape.  The expressions mirror :func:`.ref.eet_scores_numpy`
+term for term (which itself mirrors the scalar
+:func:`repro.core.provision.expected_execution_time` combine), so jitted
+scores agree ``==`` with the NumPy path — asserted by the fleet parity suite.
+
+Imports of jax are deferred into the built function: this module can be
+imported (e.g. by test collection) on environments without jax.
+"""
+
+from __future__ import annotations
+
+
+def build_eet_kernel(count_cb=None):
+    """Return ``fn(p_fail, wasted, w_scaled, avail) -> eet`` for jitting.
+
+    ``count_cb`` (if given) is invoked inside the traced body, so every XLA
+    retrace bumps the :mod:`repro.obs.retrace` registry — the retrace-guard
+    hook shared with the spot_sweep programs.
+    """
+
+    def eet_scores_jax(p_fail, wasted, w_scaled, avail):
+        import jax.numpy as jnp
+
+        if count_cb is not None:
+            count_cb()
+        p_succeed = 1.0 - p_fail
+        ok = avail & (p_succeed > 0.0)
+        den = jnp.where(ok, p_succeed, 1.0)
+        # w_scaled >= 0 and p_succeed >= 0, so abs() is the identity here —
+        # but it breaks the fmul+fadd shape the CPU backend would otherwise
+        # contract into an FMA (optimization_barrier does not stop that),
+        # which rounds once where NumPy rounds twice and drifts scores 1 ulp
+        # off the reference.  Scores must stay bitwise identical.
+        num = jnp.abs(w_scaled * p_succeed)
+        return jnp.where(ok, (num + wasted) / den, jnp.inf)
+
+    return eet_scores_jax

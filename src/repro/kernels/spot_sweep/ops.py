@@ -51,8 +51,12 @@ def trace_count(schemes) -> int:
 
     Thin shim over the process-wide :mod:`repro.obs.retrace` registry (scope
     ``"spot_sweep"``); :func:`repro.obs.retrace_guard` is the general API.
+    ACC never enters the device program (it runs on the host-side NumPy
+    seek/lease driver), so it is filtered from the cache key here exactly as
+    :func:`spot_sweep_grid` filters it from the compiled scheme set.
     """
-    return retrace.trace_count(TRACE_SCOPE, tuple(s.value for s in schemes))
+    key = tuple(s.value for s in schemes if s is not Scheme.ACC)
+    return retrace.trace_count(TRACE_SCOPE, key)
 
 
 def _scan_fn(schemes, jax_mod):
@@ -130,12 +134,25 @@ def spot_sweep_grid(
 
         return run_schemes_numpy(schemes, grid, scenario, adapt_tables)
 
+    tel = obs.current()
+    outs: dict[Scheme, dict] = {}
+    if Scheme.ACC in schemes:
+        # ACC is not period-structured (host-side seek/lease state machine):
+        # every device impl routes it to the NumPy driver and fuses the rest.
+        # A pure-ACC scheme set never touches jax at all.
+        from repro.engine.batch import _run_acc
+
+        with tel.span("sim", scheme=Scheme.ACC.value, impl="ref"):
+            outs[Scheme.ACC] = _run_acc(grid, scenario)
+        schemes = tuple(s for s in schemes if s is not Scheme.ACC)
+        if not schemes:
+            return outs, {"impl": impl}
+
     from repro.engine.jax_backend import _require_jax
 
     jax_mod, jnp, _ = _require_jax()
     from repro.engine.batch import _bill_runs_flat
 
-    tel = obs.current()
     params = scenario.params
     delta = float(params.billing_period_s)
     need_edge = Scheme.EDGE in schemes
@@ -148,7 +165,6 @@ def spot_sweep_grid(
             need_edge, need_adapt, delta, S, block_c,
         )
 
-    outs: dict[Scheme, dict] = {}
     for si, scheme in enumerate(schemes):
         with tel.span("bill", scheme=scheme.value):
             done, comp_time, n_ckpt, work_lost, n_kills = finals[si]

@@ -32,6 +32,7 @@ allocation, no clock read.  The engine bench gates the end-to-end cost
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Iterator
 
@@ -137,7 +138,20 @@ class Telemetry:
         self.counters: dict[str, float] = {}
         self.gauges: dict[str, float] = {}
         self.events: list[SimEvent] = []
-        self._stack: list[Span] = []
+        # span nesting is tracked per thread: one collector may receive spans
+        # from several worker threads (e.g. `repro-suite run --jobs N`) and a
+        # shared stack would interleave their nesting arbitrarily.  Each
+        # thread's roots land in ``spans`` (list.append is atomic under the
+        # GIL); counter read-modify-writes take the lock.
+        self._local = threading.local()
+        self._lock = threading.Lock()
+
+    @property
+    def _stack(self) -> list[Span]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
 
     # -- recording ----------------------------------------------------------
 
@@ -147,7 +161,8 @@ class Telemetry:
 
     def count(self, name: str, value: float = 1) -> None:
         """Add ``value`` to the monotonic counter ``name``."""
-        self.counters[name] = self.counters.get(name, 0) + value
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + value
 
     def gauge(self, name: str, value: float) -> None:
         """Record the latest observation of ``name``."""

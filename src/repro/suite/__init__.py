@@ -20,7 +20,7 @@ lib_layered_config pattern from the ROADMAP), in four pieces:
   * **trend view** (:mod:`repro.suite.trend`) — metric drift per scenario
     hash across git shas, joined with ``BENCH_history.jsonl``.
 
-CLI: ``python -m repro.suite run|list|trend`` (console script
+CLI: ``python -m repro.suite run|list|gc|trend`` (console script
 ``repro-suite``).  See docs/suite.md.
 """
 
@@ -34,13 +34,14 @@ from repro.suite.runner import (
     run_suite,
 )
 from repro.suite.spec import Suite, SuiteCell, build_scenario, load_suite
-from repro.suite.store import DEFAULT_ROOT, RunRecord, RunStore
+from repro.suite.store import DEFAULT_ROOT, GcStats, RunRecord, RunStore
 from repro.suite.trend import compute_trends, load_bench_history, render_trends, trend_report
 
 __all__ = [
     "SCHEMA_VERSION",
     "CellOutcome",
     "DEFAULT_ROOT",
+    "GcStats",
     "Layer",
     "Resolved",
     "RunRecord",

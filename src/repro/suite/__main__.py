@@ -2,18 +2,22 @@
 
 Subcommands::
 
-    repro-suite run <suite.toml> [--store DIR] [--engine NAME]
+    repro-suite run <suite.toml> [--store DIR] [--engine NAME] [--jobs N]
                     [--set key.path=value ...] [--dry-run] [--max-cells N]
                     [--expect-all-hits]
     repro-suite list  [--store DIR]
+    repro-suite gc    [--store DIR] [--dry-run]
     repro-suite trend [--store DIR] [--history BENCH_history.jsonl] [--json]
 
 ``run`` executes only the cells missing from the store (rerun to resume an
-interrupted sweep); ``--dry-run`` prints the expanded cell list with
-per-field layer provenance and simulates nothing; ``--expect-all-hits``
-fails (exit 1) unless the whole pass was served from the store with zero
-``engine.run`` telemetry spans — the CI regression contract for "re-running
-an unchanged suite performs zero simulation".
+interrupted sweep), simulating up to ``--jobs`` cells concurrently (store
+writes stay on the main thread); ``--dry-run`` prints the expanded cell
+list with per-field layer provenance and simulates nothing;
+``--expect-all-hits`` fails (exit 1) unless the whole pass was served from
+the store with zero ``engine.run`` telemetry spans — the CI regression
+contract for "re-running an unchanged suite performs zero simulation".
+``gc`` compacts superseded index lines and deletes orphaned payload files,
+reporting the bytes reclaimed.
 """
 
 from __future__ import annotations
@@ -46,7 +50,8 @@ def _cmd_run(args: argparse.Namespace) -> int:
     store = RunStore(args.store)
     with obs.Telemetry() as tel:
         report = run_suite(
-            suite, store, engine=args.engine, cli=cli or None, max_cells=args.max_cells
+            suite, store, engine=args.engine, cli=cli or None,
+            max_cells=args.max_cells, jobs=args.jobs,
         )
     print(report.summary())
     if args.expect_all_hits:
@@ -61,6 +66,15 @@ def _cmd_run(args: argparse.Namespace) -> int:
             "all %d cells served from the store (suite.cache_hit=%d, zero engine.run spans)",
             len(report.outcomes), int(tel.counter("suite.cache_hit")),
         )
+    return 0
+
+
+def _cmd_gc(args: argparse.Namespace) -> int:
+    store = RunStore(args.store)
+    stats = store.gc(dry_run=args.dry_run)
+    print(f"# store {store.root}: {stats.summary()}")
+    for path in stats.payloads_deleted:
+        print(f"{'would delete' if args.dry_run else 'deleted'} {path}")
     return 0
 
 
@@ -125,11 +139,22 @@ def main(argv: list[str] | None = None) -> int:
         "--expect-all-hits", action="store_true",
         help="fail unless every cell was a cache hit with zero engine.run spans",
     )
+    p_run.add_argument(
+        "--jobs", type=int, default=1, metavar="N",
+        help="simulate up to N missing cells concurrently (store writes stay serial)",
+    )
     p_run.set_defaults(fn=_cmd_run)
 
     p_list = sub.add_parser("list", help="list the store index")
     p_list.add_argument("--store", default=DEFAULT_ROOT)
     p_list.set_defaults(fn=_cmd_list)
+
+    p_gc = sub.add_parser("gc", help="compact the index and delete orphaned payloads")
+    p_gc.add_argument("--store", default=DEFAULT_ROOT)
+    p_gc.add_argument(
+        "--dry-run", action="store_true", help="report what would be reclaimed; change nothing"
+    )
+    p_gc.set_defaults(fn=_cmd_gc)
 
     p_trend = sub.add_parser("trend", help="metric drift per scenario hash across git shas")
     p_trend.add_argument("--store", default=DEFAULT_ROOT)

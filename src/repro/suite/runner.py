@@ -5,8 +5,9 @@ cell's content-addressed run key, and *skips* every cell the
 :class:`~repro.suite.store.RunStore` already holds — a cache hit touches the
 index only (no payload load, no trace generation, no simulation).  Missing
 cells are simulated and flushed to the store one by one, so an interrupted
-sweep loses at most the cell in flight and a rerun resumes with exactly the
-missing cells.
+sweep loses at most the cells in flight and a rerun resumes with exactly the
+missing cells.  ``jobs > 1`` spreads the simulations over a thread pool
+while keeping every store write on the calling thread.
 
 Telemetry (:mod:`repro.obs`): the runner counts ``suite.cell`` /
 ``suite.cache_hit`` / ``suite.cache_miss`` and wraps each simulated cell in
@@ -100,6 +101,32 @@ class SuiteReport:
         return "\n".join(lines)
 
 
+def _simulate_cell(cell: SuiteCell, eng_id: str, engine: str | None, suite_name: str):
+    """Simulate one cell (no store access: safe to call from a worker thread).
+
+    The collector's span nesting is per-thread, so the ``suite.cell`` span is
+    a root span when this runs on a pool worker — counters aggregate the same
+    either way.
+    """
+    tel = obs.current()
+    with tel.span("suite.cell", suite=suite_name, cell=cell.label, engine=eng_id):
+        if cell.kind == "fleet":
+            return run_fleet(cell.scenario)
+        return get_engine(engine or cell.engine).run(cell.scenario)
+
+
+def _flush_cell(store: RunStore, suite_name: str, cell: SuiteCell, key: str, result):
+    """Persist one simulated cell (main thread only: the store is not
+    thread-safe) and cross-check the content-addressed key."""
+    if cell.kind == "fleet":
+        rec = store.put_fleet_result(cell.scenario, result, suite=suite_name, cell=cell.label)
+    else:
+        rec = store.put_engine_result(cell.scenario, result, suite=suite_name, cell=cell.label)
+    if rec.run_key != key:
+        raise AssertionError(f"store key drift: expected {key}, stored {rec.run_key}")
+    return rec
+
+
 def run_suite(
     suite: Suite,
     store: RunStore,
@@ -107,6 +134,7 @@ def run_suite(
     engine: str | None = None,
     cli: dict | None = None,
     max_cells: int | None = None,
+    jobs: int = 1,
 ) -> SuiteReport:
     """Execute ``suite``, resuming from whatever ``store`` already holds.
 
@@ -116,46 +144,65 @@ def run_suite(
     hits are free and never count) — the remaining cells are reported as
     skipped and picked up by the next pass, which is also exactly what an
     interrupt-and-rerun does.
+
+    ``jobs > 1`` simulates the missing cells on a thread pool (cache-hit
+    classification stays a single in-order pass, so hit/miss/skip semantics
+    are identical).  Workers only simulate; every store flush happens on the
+    calling thread as results complete, preserving the store's
+    payload-then-index crash-safety order without locking.  Outcomes are
+    reported in suite order regardless of completion order.
     """
     t0 = time.perf_counter()
     cells = suite.expand(cli)
     tel = obs.current()
-    outcomes: list[CellOutcome] = []
     n_skipped = 0
     with tel.span("suite.run", suite=suite.name, n_cells=len(cells)):
-        for cell in cells:
+        # classification pass, in suite order: hit, miss, or skipped
+        done: dict[int, CellOutcome] = {}
+        plan: list[tuple[int, SuiteCell, str, str]] = []  # missing cells
+        for idx, cell in enumerate(cells):
             eng_id = _engine_id(cell.kind, engine or cell.engine)
             key = run_key(cell.scenario, eng_id)
             tel.count("suite.cell")
             if store.has(key):
                 tel.count("suite.cache_hit")
                 log.info("suite %s: cell %s — cache hit (%s)", suite.name, cell.label, key[:12])
-                outcomes.append(CellOutcome(cell, key, True, store.get(key), 0.0))
+                done[idx] = CellOutcome(cell, key, True, store.get(key), 0.0)
                 continue
-            if max_cells is not None and sum(1 for o in outcomes if not o.hit) >= max_cells:
+            if max_cells is not None and len(plan) >= max_cells:
                 n_skipped += 1
                 continue
             tel.count("suite.cache_miss")
-            c0 = time.perf_counter()
-            with tel.span("suite.cell", suite=suite.name, cell=cell.label, engine=eng_id):
-                if cell.kind == "fleet":
-                    grid = run_fleet(cell.scenario)
-                    rec = store.put_fleet_result(
-                        cell.scenario, grid, suite=suite.name, cell=cell.label
+            plan.append((idx, cell, eng_id, key))
+        if jobs > 1 and len(plan) > 1:
+            import concurrent.futures
+
+            with concurrent.futures.ThreadPoolExecutor(
+                max_workers=jobs, thread_name_prefix="suite-cell"
+            ) as pool:
+                futures = {
+                    pool.submit(_simulate_cell, cell, eng_id, engine, suite.name): (
+                        idx, cell, key, time.perf_counter(),
                     )
-                else:
-                    eng = get_engine(engine or cell.engine)
-                    res = eng.run(cell.scenario)
-                    rec = store.put_engine_result(
-                        cell.scenario, res, suite=suite.name, cell=cell.label
+                    for idx, cell, eng_id, key in plan
+                }
+                for fut in concurrent.futures.as_completed(futures):
+                    idx, cell, key, c0 = futures[fut]
+                    rec = _flush_cell(store, suite.name, cell, key, fut.result())
+                    wall = time.perf_counter() - c0
+                    log.info(
+                        "suite %s: cell %s — simulated in %.2fs", suite.name, cell.label, wall
                     )
-            if rec.run_key != key:
-                raise AssertionError(
-                    f"store key drift: expected {key}, stored {rec.run_key}"
-                )
-            wall = time.perf_counter() - c0
-            log.info("suite %s: cell %s — simulated in %.2fs", suite.name, cell.label, wall)
-            outcomes.append(CellOutcome(cell, key, False, rec, wall))
+                    done[idx] = CellOutcome(cell, key, False, rec, wall)
+        else:
+            for idx, cell, eng_id, key in plan:
+                c0 = time.perf_counter()
+                result = _simulate_cell(cell, eng_id, engine, suite.name)
+                rec = _flush_cell(store, suite.name, cell, key, result)
+                wall = time.perf_counter() - c0
+                log.info("suite %s: cell %s — simulated in %.2fs", suite.name, cell.label, wall)
+                done[idx] = CellOutcome(cell, key, False, rec, wall)
+        outcomes = [done[i] for i in sorted(done)]
     return SuiteReport(
         suite=suite, outcomes=outcomes, wall_s=time.perf_counter() - t0, n_skipped=n_skipped
     )

@@ -18,7 +18,9 @@ repr, so a store round trip is bit-for-bit.
 Crash safety: the payload is written to a temp file and renamed, and the
 index line is appended (and flushed) only afterwards — an interrupted run
 leaves either a complete entry or no entry, never a torn one.  Re-appending
-the same key later simply supersedes the older line (last wins on load).
+the same key later simply supersedes the older line (last wins on load);
+:meth:`RunStore.gc` compacts superseded lines away and deletes payload
+files nothing references (``repro-suite gc``).
 """
 
 from __future__ import annotations
@@ -46,7 +48,7 @@ from repro.fleet.sweep import SweepCell
 from repro.fleet.workload import Job
 from repro.suite.hashing import SCHEMA_VERSION, run_key, scenario_hash
 
-__all__ = ["RunRecord", "RunStore", "DEFAULT_ROOT"]
+__all__ = ["GcStats", "RunRecord", "RunStore", "DEFAULT_ROOT"]
 
 DEFAULT_ROOT = "results/store"
 
@@ -87,6 +89,30 @@ class RunRecord:
     def from_dict(cls, d: Mapping[str, Any]) -> "RunRecord":
         known = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in d.items() if k in known})
+
+
+@dataclasses.dataclass(frozen=True)
+class GcStats:
+    """What :meth:`RunStore.gc` reclaimed (or would reclaim, on a dry run)."""
+
+    index_lines_before: int
+    index_lines_after: int
+    index_bytes_reclaimed: int
+    payloads_deleted: list[str]  # store-relative paths
+    payload_bytes_reclaimed: int
+    dry_run: bool
+
+    @property
+    def bytes_reclaimed(self) -> int:
+        return self.index_bytes_reclaimed + self.payload_bytes_reclaimed
+
+    def summary(self) -> str:
+        verb = "would reclaim" if self.dry_run else "reclaimed"
+        return (
+            f"index: {self.index_lines_before} -> {self.index_lines_after} lines; "
+            f"{len(self.payloads_deleted)} orphaned payloads; "
+            f"{verb} {self.bytes_reclaimed} bytes"
+        )
 
 
 class RunStore:
@@ -155,6 +181,54 @@ class RunStore:
             f.flush()
         self._records[rec.run_key] = rec
         return rec
+
+    # -- maintenance --------------------------------------------------------
+
+    def gc(self, *, dry_run: bool = False) -> "GcStats":
+        """Compact the index and delete orphaned payloads.
+
+        The append-only index accumulates one superseded line per re-run of
+        a key, and a superseded payload (or a run whose index append was
+        interrupted) leaves an ``npz`` nothing references.  ``gc`` rewrites
+        the index with only the surviving record per key (oldest first, via
+        tmp-file + ``os.replace`` so a crash leaves the old or the new index,
+        never a torn one) and unlinks every file under ``runs/`` no surviving
+        record points to — including stale ``.tmp.npz`` leftovers.
+
+        ``dry_run=True`` reports what would be reclaimed without touching
+        disk.  Returns :class:`GcStats`.
+        """
+        self.reload()
+        lines_before = 0
+        index_bytes_before = 0
+        if self.index_path.exists():
+            text = self.index_path.read_text()
+            index_bytes_before = len(text.encode())
+            lines_before = sum(1 for ln in text.splitlines() if ln.strip())
+        recs = self.records()
+        new_text = "".join(json.dumps(r.asdict()) + "\n" for r in recs)
+        referenced = {(self.root / r.payload).resolve() for r in recs}
+        orphans = []
+        if self.runs_dir.is_dir():
+            orphans = sorted(
+                p for p in self.runs_dir.glob("*.npz") if p.resolve() not in referenced
+            )
+        payload_bytes = sum(p.stat().st_size for p in orphans)
+        if not dry_run:
+            if self.index_path.exists():
+                tmp = self.index_path.with_suffix(".jsonl.tmp")
+                tmp.write_text(new_text)
+                os.replace(tmp, self.index_path)
+            for p in orphans:
+                p.unlink()
+        return GcStats(
+            index_lines_before=lines_before,
+            index_lines_after=len(recs),
+            index_bytes_reclaimed=index_bytes_before - len(new_text.encode()),
+            payloads_deleted=[str(p.relative_to(self.root)) for p in orphans],
+            payload_bytes_reclaimed=payload_bytes,
+            dry_run=dry_run,
+        )
 
     # -- put ----------------------------------------------------------------
 

@@ -86,23 +86,23 @@ def test_parity_random_step_traces():
         )
         init = float(rng.uniform(0, work)) if trial % 3 == 0 else 0.0
         sc = Scenario.from_trace(
-            tr, work, bids, schemes=BID_LIMITED_SCHEMES, params=params, initial_saved_work=init
+            tr, work, bids, schemes=tuple(Scheme), params=params, initial_saved_work=init
         )
         assert_parity(sc)
 
 
-def test_parity_all_schemes_acc_via_fallback():
-    """ACC cells (the one remaining scalar scheme) fall back to the scalar
-    path inside BatchEngine, so a full-scheme scenario still agrees
-    cell-for-cell."""
+def test_parity_all_schemes_including_acc():
+    """Full-scheme parity — ACC now runs on the batched seek/lease driver
+    (no scalar path anywhere), and still agrees cell-for-cell."""
     tr = synthetic_trace(IT, 20, seed=1)
     sc = Scenario.from_trace(tr, 30 * 3600.0, [0.36, 0.37, 0.38], schemes=tuple(Scheme))
     assert_parity(sc)
 
 
-def test_adapt_is_batched_not_scalar(monkeypatch):
-    """ADAPT cells must run through the SoA lockstep kernel: BatchEngine may
-    only reach scalar_fill for ACC (the ISSUE's acceptance criterion)."""
+def test_no_scheme_is_scalar(monkeypatch):
+    """Every scheme — ACC included — must run through the SoA lockstep
+    drivers: BatchEngine may never reach scalar_fill (the ISSUE's
+    acceptance criterion)."""
     import repro.engine.reference as reference
 
     seen: list[tuple] = []
@@ -116,12 +116,12 @@ def test_adapt_is_batched_not_scalar(monkeypatch):
     tr = synthetic_trace(IT, 20, seed=4)
     sc = Scenario.from_trace(tr, 20 * 3600.0, [0.36, 0.38], schemes=tuple(Scheme))
     BatchEngine().run(sc)
-    assert seen == [(Scheme.ACC,)]
+    assert seen == []  # ACC is in BATCHED_SCHEMES: zero scalar fallbacks
 
     seen.clear()
     sc2 = Scenario.from_trace(tr, 20 * 3600.0, [0.36, 0.38], schemes=BID_LIMITED_SCHEMES)
     BatchEngine().run(sc2)
-    assert seen == []  # no scalar fallback at all without ACC
+    assert seen == []
 
 
 def test_adapt_parity_across_decision_cadences():

@@ -1,0 +1,118 @@
+"""Fuzz parity: batched ACC lease walk vs the scalar reference.
+
+``repro.fleet.batch.acc_attempts_batched`` is the public surface of the
+vectorized ACC core the fleet engine uses for its simulation waves.  Its
+contract is lane-for-lane ``==`` equality (AttemptResult is a frozen
+dataclass, so ``==`` is bit-exact on every float) with
+:func:`repro.core.simulator.simulate_acc_attempt` on arbitrary step traces —
+including self-termination at hour boundaries, mid-lease completion,
+horizon runoff, immediate launch at ``start_t == 0``, poll-tick launch
+seeking, no-launch lanes (``None``), and resumed leases carrying
+``initial_saved_work``.
+
+Runs under hypothesis when installed; otherwise a deterministic seeded
+sweep over the same case generator (the container image has no hypothesis,
+so CI exercises the fallback path).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import HOUR, SimParams, simulate_acc_attempt, step_trace
+from repro.fleet.batch import acc_attempts_batched
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - container image has no hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _random_case(rng):
+    """One fuzz case: a random step trace plus a small batch of lanes."""
+    horizon = float(rng.uniform(1.0, 6.0)) * 24 * HOUR
+    n_seg = int(rng.integers(1, 12))
+    cuts = np.sort(rng.uniform(0.0, horizon, size=n_seg - 1))
+    prices = rng.uniform(0.1, 1.0, size=n_seg)
+    segments = [(0.0, float(prices[0]))]
+    segments += [(float(t), float(p)) for t, p in zip(cuts, prices[1:])]
+    trace = step_trace(segments, horizon_s=horizon)
+    a_bid = float(rng.uniform(0.15, 0.9))
+    lanes = int(rng.integers(1, 9))
+    work_s = rng.uniform(600.0, 30 * HOUR, size=lanes)
+    # mix immediate-launch lanes (start_t == 0) with mid-trace resumes
+    start_ts = np.where(
+        rng.random(lanes) < 0.3, 0.0, rng.uniform(0.0, horizon * 1.02, size=lanes)
+    )
+    saved0 = np.where(
+        rng.random(lanes) < 0.5, 0.0, rng.uniform(0.0, work_s * 0.9)
+    )
+    return trace, work_s, a_bid, start_ts, saved0
+
+
+def _check_case(seed: int, params: SimParams, stats: dict | None = None):
+    rng = np.random.default_rng(seed)
+    trace, work_s, a_bid, start_ts, saved0 = _random_case(rng)
+    got = acc_attempts_batched(
+        trace, work_s, a_bid, start_ts, params, initial_saved_work=saved0
+    )
+    assert len(got) == len(start_ts)
+    for i in range(len(start_ts)):
+        ref = simulate_acc_attempt(
+            trace,
+            float(work_s[i]),
+            a_bid,
+            float(start_ts[i]),
+            params,
+            initial_saved_work=float(saved0[i]),
+        )
+        assert got[i] == ref, f"seed {seed} lane {i}: {got[i]!r} != {ref!r}"
+        if stats is not None and ref is not None:
+            stats["launched"] = stats.get("launched", 0) + 1
+            if ref.completed:
+                stats["completed"] = stats.get("completed", 0) + 1
+            if ref.self_terminated:
+                stats["self_terminated"] = stats.get("self_terminated", 0) + 1
+            if not ref.completed and not ref.self_terminated:
+                stats["runoff"] = stats.get("runoff", 0) + 1
+        elif stats is not None:
+            stats["none"] = stats.get("none", 0) + 1
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_acc_batched_matches_scalar_fuzz(seed):
+        _check_case(seed, SimParams())
+
+else:
+
+    @pytest.mark.parametrize("seed", range(80))
+    def test_acc_batched_matches_scalar_fuzz(seed):
+        _check_case(seed, SimParams())
+
+
+def test_acc_fuzz_covers_every_outcome_kind():
+    """The generator must hit every terminal kind, or the fuzz is vacuous:
+    completion, hour-boundary self-termination, horizon runoff, and lanes
+    with no admissible launch at all."""
+    stats: dict = {}
+    for seed in range(80):
+        _check_case(seed, SimParams(), stats)
+    assert stats.get("completed", 0) > 0
+    assert stats.get("self_terminated", 0) > 0
+    assert stats.get("runoff", 0) > 0
+    assert stats.get("none", 0) > 0
+
+
+def test_acc_batched_matches_scalar_nondefault_params():
+    # coarser polling and a longer checkpoint write shift every decision
+    # point; parity must not depend on the default SimParams
+    params = SimParams(t_c=900.0, t_w=30.0, poll_s=300.0)
+    for seed in range(20):
+        _check_case(seed, params)

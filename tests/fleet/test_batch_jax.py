@@ -1,0 +1,73 @@
+"""JAX-scored fleet batch engine: identical results, zero retraces.
+
+``engine="jax"`` only swaps the EET scoring combine for the jitted
+``fleet_step`` kernel — every other float comes off the same NumPy wave
+machinery — so results must stay ``==`` with both the controller and the
+NumPy batch engine, and re-running the same scenario must not re-trace any
+fleet_step program.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core.schemes import Scheme
+from repro.engine.scenario import FleetScenario
+from repro.obs import retrace_guard
+
+from test_batch_parity import assert_grid_equal, small_scenario
+
+
+@pytest.fixture(autouse=True)
+def _need_jax():
+    pytest.importorskip("jax")
+
+
+def test_jax_engine_matches_controller_and_batch():
+    from repro.engine.fleetgrid import run_fleet
+
+    scenario = small_scenario()
+    ref = run_fleet(scenario, engine="controller")
+    via_numpy = run_fleet(scenario, engine="batch")
+    via_jax = run_fleet(scenario, engine="jax")
+    assert via_jax.engine == "jax"
+    assert_grid_equal(ref, via_jax)
+    assert_grid_equal(via_numpy, via_jax)
+
+
+def test_jax_engine_zero_retrace_on_rerun():
+    from repro.engine.fleetgrid import run_fleet
+
+    scenario = small_scenario(scheme=Scheme.EDGE)
+    run_fleet(scenario, engine="jax")  # warm the jit caches
+    with retrace_guard("fleet_step"):
+        run_fleet(scenario, engine="jax")
+        run_fleet(scenario, engine="jax")
+
+
+def test_jax_scores_match_numpy_bitwise():
+    import numpy as np
+
+    from repro.kernels.fleet_step import eet_scores
+
+    rng = np.random.default_rng(7)
+    for lanes in (1, 5, 8, 37):
+        p_fail = rng.uniform(0.0, 1.0, size=(lanes, 16))
+        wasted = rng.uniform(0.0, 1e4, size=(lanes, 16))
+        w_scaled = rng.uniform(60.0, 1e5, size=(lanes, 16))
+        avail = rng.uniform(size=(lanes, 16)) < 0.8
+        p_fail[0, :4] = 1.0  # exercise the p_succeed <= 0 guard
+        ref = eet_scores(p_fail, wasted, w_scaled, avail, impl="numpy")
+        got = eet_scores(p_fail, wasted, w_scaled, avail, impl="jax")
+        assert got.shape == ref.shape
+        assert np.array_equal(ref, got)  # bitwise, inf included
+
+
+def test_unknown_impl_rejected():
+    import numpy as np
+
+    from repro.kernels.fleet_step import eet_scores
+
+    z = np.zeros((2, 3))
+    with pytest.raises(ValueError, match="unknown fleet_step impl"):
+        eet_scores(z, z, z, np.ones((2, 3), dtype=bool), impl="mlx")

@@ -1,0 +1,151 @@
+"""Bit-parity of the vectorized fleet engine against FleetController.
+
+The batch engine's contract is exact equality on uncontended scenarios:
+identical AttemptRecord lists (frozen dataclass ``==`` covers every float bit
+pattern), identical outcomes, and identical ``fleet.*`` telemetry counters in
+the same accumulation order.  Contended / re-bidding scenarios delegate to
+the controller inside ``run_fleet`` and stay ``==`` trivially — asserted here
+so the delegation can never silently drop.
+"""
+
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.core.schemes import Scheme
+from repro.engine.fleetgrid import run_fleet
+from repro.engine.scenario import FleetScenario
+from repro.obs import telemetry as obs
+
+
+def small_scenario(**kw):
+    base = dict(
+        n_jobs=12,
+        mean_interarrival_s=1800.0,
+        mean_work_h=3.0,
+        horizon_days=4.0,
+        n_types=8,
+        seeds=(0, 1),
+        bid_margins=(0.56,),
+        scheme=Scheme.HOUR,
+    )
+    base.update(kw)
+    return FleetScenario(**base)
+
+
+def fleet_counters(tel):
+    return {k: v for k, v in tel.counters.items() if k.startswith("fleet.")}
+
+
+def run_both(scenario, engine="batch"):
+    with obs.Telemetry() as tel_c:
+        ref = run_fleet(scenario, engine="controller")
+    with obs.Telemetry() as tel_b:
+        got = run_fleet(scenario, engine=engine)
+    return ref, got, fleet_counters(tel_c), fleet_counters(tel_b)
+
+
+def assert_result_equal(res_ref, res_got):
+    assert res_got.policy == res_ref.policy
+    assert res_got.scheme == res_ref.scheme
+    assert res_got.horizon == res_ref.horizon
+    assert res_got.records == res_ref.records  # frozen dataclass: bit-exact
+    assert list(res_got.outcomes) == list(res_ref.outcomes)
+    for job_id, o_ref in res_ref.outcomes.items():
+        o_got = res_got.outcomes[job_id]
+        assert o_got.job == o_ref.job
+        assert o_got.completed == o_ref.completed
+        assert o_got.completion_time == o_ref.completion_time
+        assert o_got.cost == o_ref.cost
+        assert o_got.n_kills == o_ref.n_kills
+        assert o_got.n_migrations == o_ref.n_migrations
+        assert o_got.attempts == o_ref.attempts
+
+
+def assert_grid_equal(ref, got):
+    assert list(got.results) == list(ref.results)
+    for key, res_ref in ref.results.items():
+        assert_result_equal(res_ref, got.results[key])
+    # SweepCell rows match on everything but wall_s (batch splits wall evenly)
+    for c_ref, c_got in zip(ref.cells, got.cells):
+        for field in (
+            "policy", "bid_margin", "seed", "total_cost", "makespan_h",
+            "mean_completion_h", "kill_rate", "n_kills", "n_migrations",
+            "n_completed", "n_jobs", "n_outages",
+        ):
+            assert getattr(c_got, field) == getattr(c_ref, field), field
+
+
+@pytest.mark.parametrize(
+    "scheme", [Scheme.HOUR, Scheme.NONE, Scheme.OPT, Scheme.EDGE, Scheme.ADAPT]
+)
+def test_batch_bit_parity_schemes(scheme):
+    scenario = small_scenario(scheme=scheme)
+    ref, got, counters_ref, counters_got = run_both(scenario)
+    assert_grid_equal(ref, got)
+    assert counters_got == counters_ref
+
+
+def test_batch_bit_parity_acc():
+    scenario = small_scenario(scheme=Scheme.ACC, horizon_days=3.0, seeds=(0,))
+    ref, got, counters_ref, counters_got = run_both(scenario)
+    assert_grid_equal(ref, got)
+    assert counters_got == counters_ref
+    # ACC fleets must exercise the self-termination -> migration path
+    assert any(r.self_terminated for res in ref.results.values() for r in res.records)
+
+
+def test_batch_bit_parity_replicated_policies():
+    # diversified2 exercises sibling cancellation records; 3 replicas the
+    # replica-index record ordering on multi-way cancels
+    scenario = small_scenario(policies=("diversified",), n_replicas=3, seeds=(0, 1, 2))
+    ref, got, counters_ref, counters_got = run_both(scenario)
+    assert_grid_equal(ref, got)
+    assert counters_got == counters_ref
+    assert any(r.cancelled for res in ref.results.values() for r in res.records)
+
+
+def test_batch_bit_parity_multi_margin():
+    scenario = small_scenario(bid_margins=(0.4, 0.56, 1.0))
+    ref, got, _, _ = run_both(scenario)
+    assert_grid_equal(ref, got)
+
+
+def test_batch_exercises_kills_and_migrations():
+    # the parity suite must not pass vacuously: the default grid has kills,
+    # migrations, completions and (at low margins) non-completions
+    scenario = small_scenario(bid_margins=(0.4, 0.56))
+    ref, _, counters, _ = run_both(scenario)
+    assert counters.get("fleet.kills", 0) > 0
+    assert counters.get("fleet.migrations", 0) > 0
+    assert counters.get("fleet.completions", 0) > 0
+    assert any(not o.completed for res in ref.results.values() for o in res.outcomes.values())
+    assert any(o.completed for res in ref.results.values() for o in res.outcomes.values())
+
+
+def test_contended_delegates_to_controller():
+    scenario = small_scenario(seeds=(0,), capacity=3, n_jobs=8)
+    ref = run_fleet(scenario, engine="controller")
+    got = run_fleet(scenario, engine="batch")
+    assert got.engine == "batch"
+    assert_grid_equal(ref, got)
+
+
+def test_rebid_delegates_to_controller():
+    scenario = small_scenario(seeds=(0,), bid_policy="rebid", n_jobs=8)
+    ref = run_fleet(scenario, engine="controller")
+    got = run_fleet(scenario, engine="batch")
+    assert_grid_equal(ref, got)
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown fleet engine"):
+        run_fleet(small_scenario(), engine="warp")
+
+
+def test_grid_result_engine_field():
+    scenario = small_scenario(seeds=(0,), n_jobs=6)
+    assert run_fleet(scenario, engine="controller").engine == "controller"
+    assert run_fleet(scenario, engine="batch").engine == "batch"

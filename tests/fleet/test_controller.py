@@ -242,3 +242,68 @@ def test_acc_fleet_migrates_on_self_termination():
             # user termination: the final partial hour is billed in full
             assert r.termination == Termination.USER
             assert not r.killed and not r.completed
+
+
+def _synthetic_result(records, horizon=2_000_000.0):
+    from repro.fleet.controller import FleetResult, JobOutcome
+    from repro.fleet.workload import Job
+
+    job = Job(id=0, arrival_s=0.0, work_s=1.0)
+    outcome = JobOutcome(
+        job=job, completed=False, completion_time=math.inf, cost=0.0,
+        n_kills=0, n_migrations=0, attempts=list(records),
+    )
+    return FleetResult(
+        policy="synthetic", scheme=Scheme.HOUR, outcomes={0: outcome},
+        records=list(records), horizon=horizon,
+    )
+
+
+def _work_record(work_start, end):
+    from repro.fleet.controller import AttemptRecord
+
+    return AttemptRecord(
+        job_id=0, replica=0, instance="m1.xlarge", bid=0.5,
+        launch=work_start, end=end, termination=Termination.OUT_OF_BID,
+        cost=0.0, work_start=work_start, initial_saved_ref=0.0,
+        saved_after_ref=0.0, killed=True, completed=False, cancelled=False,
+    )
+
+
+def test_outage_epsilon_is_relative_to_timestamp():
+    """Late in a long trace, float jitter between one record's end and the
+    next one's work_start is far larger than an absolute 1e-6 s — the merge
+    tolerance must scale with the timestamp or phantom outages appear."""
+    t = 1_000_000.0
+    res = _synthetic_result([
+        _work_record(0.0, t),
+        _work_record(t + 1e-4, 2_000_000.0),  # 1e-4 s seam: jitter, not an outage
+    ])
+    assert res.outage_intervals() == []
+    # a genuinely long stall at the same magnitude is still reported
+    res2 = _synthetic_result([
+        _work_record(0.0, t),
+        _work_record(t + 100.0, 2_000_000.0),
+    ])
+    assert res2.outage_intervals() == [(t, t + 100.0)]
+
+
+def test_outage_jitter_record_does_not_split_real_outage():
+    """A sub-tolerance sliver of 'work' in the middle of a real stall must
+    not split it into two outage intervals."""
+    t = 1_000_000.0
+    res = _synthetic_result([
+        _work_record(0.0, t),
+        _work_record(t + 50.0, t + 50.0 + 1e-4),  # jitter-length sliver
+        _work_record(t + 100.0, 2_000_000.0),
+    ])
+    assert res.outage_intervals() == [(t, t + 100.0)]
+
+
+def test_outage_epsilon_unchanged_near_origin():
+    # small timestamps keep the historical absolute 1e-6 s behaviour
+    res = _synthetic_result([
+        _work_record(0.0, 1.0),
+        _work_record(1.0 + 1e-5, 2_000_000.0),
+    ])
+    assert res.outage_intervals() == [(1.0, 1.0 + 1e-5)]
