@@ -1,6 +1,10 @@
 """Fault-tolerance substrate: sharded, atomic, async, (optionally) quantized
-checkpointing with elastic restore."""
+checkpointing with elastic restore and typed corruption detection."""
 
-from repro.checkpoint.manager import CheckpointManager, CheckpointMeta
+from repro.checkpoint.manager import (
+    CheckpointCorruptionError,
+    CheckpointManager,
+    CheckpointMeta,
+)
 
-__all__ = ["CheckpointManager", "CheckpointMeta"]
+__all__ = ["CheckpointCorruptionError", "CheckpointManager", "CheckpointMeta"]

@@ -20,7 +20,19 @@ Properties:
     bit-exact.
   * **Elastic**: files store *global* arrays + the logical-axes tree; restore
     re-shards onto any mesh via device_put with the target NamedShardings.
-  * **Integrity**: sha256 per leaf file, verified on restore.
+  * **Integrity**: sha256 per leaf file, verified on restore.  Every way a
+    checkpoint can be unreadable (missing/torn leaf, hash mismatch, mangled
+    manifest) raises the typed :class:`CheckpointCorruptionError`, so callers
+    can distinguish "this checkpoint is damaged — fall back to an older one"
+    (see :meth:`SpotTrainer's <repro.train.spot_trainer.SpotTrainer>` degraded
+    recovery) from programming errors.  :meth:`CheckpointManager.quarantine`
+    renames a damaged step directory to ``*.corrupt`` — out of
+    :meth:`steps`'s view, but preserved on disk as evidence.
+
+Fault-injection sites (:mod:`repro.faults`): ``ckpt.save`` fires per write
+(``raise`` = I/O failure, ``torn`` = a leaf file silently truncated after
+hashing — detected only at restore) and ``ckpt.restore`` fires per restore
+attempt (``raise`` = unreadable checkpoint), both keyed by step.
 """
 
 from __future__ import annotations
@@ -36,6 +48,7 @@ import time
 import jax
 import numpy as np
 
+from repro import faults
 from repro.kernels.ckpt_codec import ref as codec
 
 
@@ -47,6 +60,18 @@ class CheckpointMeta:
     wall_time_s: float
     bytes_written: int
     extra: dict
+
+
+class CheckpointCorruptionError(IOError):
+    """A checkpoint on disk cannot be restored (torn file, bad hash, mangled
+    manifest).  Carries the step and path so recovery code can quarantine
+    exactly the damaged snapshot and fall back to an older one."""
+
+    def __init__(self, step: int | None, path: str, reason: str):
+        self.step = step
+        self.path = path
+        self.reason = reason
+        super().__init__(f"corrupt checkpoint step={step} ({path}): {reason}")
 
 
 def _tree_paths(tree) -> list[str]:
@@ -81,7 +106,7 @@ class CheckpointManager:
     def steps(self) -> list[int]:
         out = []
         for d in os.listdir(self.root):
-            if d.startswith("step_") and not d.endswith(".tmp"):
+            if d.startswith("step_") and not d.endswith((".tmp", ".corrupt")):
                 if os.path.exists(os.path.join(self.root, d, "manifest.json")):
                     out.append(int(d.split("_")[1]))
         return sorted(out)
@@ -89,6 +114,16 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         s = self.steps()
         return s[-1] if s else None
+
+    def quarantine(self, step: int) -> str:
+        """Move a damaged checkpoint out of :meth:`steps`'s view (renamed to
+        ``step_X.corrupt``, kept on disk as evidence); returns the new path."""
+        src = os.path.join(self.root, f"step_{step:09d}")
+        dst = src + ".corrupt"
+        if os.path.exists(dst):  # re-quarantine after a re-save of the step
+            shutil.rmtree(dst, ignore_errors=True)
+        os.replace(src, dst)
+        return dst
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree, extra: dict | None = None, *, block: bool = True) -> CheckpointMeta:
@@ -110,7 +145,8 @@ class CheckpointManager:
         if block or not self.async_io:
             write()
             if self._last_error:
-                raise self._last_error
+                err, self._last_error = self._last_error, None
+                raise err
             return meta_holder["meta"]
         self._thread = threading.Thread(target=write, daemon=True)
         self._thread.start()
@@ -129,6 +165,9 @@ class CheckpointManager:
         name = f"step_{step:09d}"
         tmp = os.path.join(self.root, name + ".tmp")
         final = os.path.join(self.root, name)
+        action = faults.current().fire("ckpt.save", key=step)
+        if action is not None and action.kind == "raise":
+            raise faults.InjectedFault(action)  # async saves surface this on wait()
         os.makedirs(tmp, exist_ok=True)
         files = []
         total = 0
@@ -153,6 +192,12 @@ class CheckpointManager:
             h = hashlib.sha256(open(path, "rb").read()).hexdigest()
             total += os.path.getsize(path)
             files.append({"file": os.path.basename(path), "sha256": h, "dtype": str(leaf.dtype)})
+        if action is not None and action.kind == "torn" and files:
+            # silent torn write: the commit completes but one leaf is
+            # truncated after hashing — only restore's integrity check sees it
+            torn = os.path.join(tmp, files[0]["file"])
+            data = open(torn, "rb").read()
+            open(torn, "wb").write(data[: len(data) // 2])
         manifest = {
             "step": step,
             "codec": self.codec_name,
@@ -187,7 +232,13 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         d = os.path.join(self.root, f"step_{step:09d}")
-        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        action = faults.current().fire("ckpt.restore", key=step)
+        if action is not None:
+            raise CheckpointCorruptionError(step, d, f"injected: {action.describe()}")
+        try:
+            manifest = json.load(open(os.path.join(d, "manifest.json")))
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CheckpointCorruptionError(step, d, f"unreadable manifest: {e}") from e
         leaves_t, treedef = jax.tree.flatten(template)
         if len(manifest["files"]) != len(leaves_t):
             raise ValueError(
@@ -196,22 +247,30 @@ class CheckpointManager:
         out = []
         for i, (entry, tmpl) in enumerate(zip(manifest["files"], leaves_t)):
             path = os.path.join(d, entry["file"])
-            data = open(path, "rb").read()
+            try:
+                data = open(path, "rb").read()
+            except OSError as e:
+                raise CheckpointCorruptionError(step, path, f"missing leaf file: {e}") from e
             if hashlib.sha256(data).hexdigest() != entry["sha256"]:
-                raise IOError(f"integrity check failed for {path}")
-            if path.endswith(".npz"):
-                z = np.load(path)
-                import jax.numpy as jnp
+                raise CheckpointCorruptionError(step, path, "leaf sha256 mismatch (torn write?)")
+            try:
+                if path.endswith(".npz"):
+                    z = np.load(path)
+                    import jax.numpy as jnp
 
-                arr = np.asarray(
-                    codec.dequantize(jnp.asarray(z["q"]), jnp.asarray(z["scales"]), tuple(z["shape"]))
-                ).astype(_np_dtype(entry["dtype"]))
-            else:
-                arr = np.load(path)
-                if entry["dtype"] == "bfloat16":
-                    import ml_dtypes  # vendored with jax
+                    arr = np.asarray(
+                        codec.dequantize(
+                            jnp.asarray(z["q"]), jnp.asarray(z["scales"]), tuple(z["shape"])
+                        )
+                    ).astype(_np_dtype(entry["dtype"]))
+                else:
+                    arr = np.load(path)
+                    if entry["dtype"] == "bfloat16":
+                        import ml_dtypes  # vendored with jax
 
-                    arr = arr.view(ml_dtypes.bfloat16)
+                        arr = arr.view(ml_dtypes.bfloat16)
+            except (ValueError, KeyError, EOFError, OSError) as e:
+                raise CheckpointCorruptionError(step, path, f"undecodable leaf: {e}") from e
             if tuple(arr.shape) != tuple(tmpl.shape):
                 raise ValueError(f"leaf {i}: shape {arr.shape} != template {tmpl.shape}")
             out.append(arr)

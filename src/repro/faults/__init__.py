@@ -1,0 +1,38 @@
+"""Fault injection: deterministic, ambient, replayable failure schedules.
+
+The chaos-engineering counterpart of :mod:`repro.obs` — a LIFO-activated
+:class:`FaultPlan` (no-op :data:`NULL` when nothing is active) fires seeded
+failures at named sites threaded through the control plane's I/O and
+execution paths (``suite.worker``, ``store.payload_write``,
+``store.index_append``, ``ckpt.save``, ``ckpt.restore``), so the recovery
+machinery — store verify/repair, runner retries and watchdog, trainer
+checkpoint fallback — is tested under the same "may become unavailable at
+any time without any notice" regime the paper assumes of the infrastructure.
+See docs/resilience.md.
+"""
+
+from repro.faults.plan import (
+    ENV_VAR,
+    NULL,
+    FaultAction,
+    FaultPlan,
+    FaultRule,
+    InjectedFault,
+    activate,
+    current,
+    load_plan,
+    plan_from_env,
+)
+
+__all__ = [
+    "ENV_VAR",
+    "NULL",
+    "FaultAction",
+    "FaultPlan",
+    "FaultRule",
+    "InjectedFault",
+    "activate",
+    "current",
+    "load_plan",
+    "plan_from_env",
+]

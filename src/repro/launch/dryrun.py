@@ -22,7 +22,13 @@ from repro.configs.shapes import SHAPES, applicable, batch_specs  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_chip_count  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.optim import AdamWConfig, adamw_init  # noqa: E402
-from repro.parallel.sharding import DEFAULT_RULES, axis_rules, logical_sharding, shard_params  # noqa: E402
+from repro.parallel.sharding import (  # noqa: E402
+    DEFAULT_RULES,
+    axis_rules,
+    logical_sharding,
+    shard_params,
+    use_compat_mesh,
+)
 from repro.train.steps import make_train_step  # noqa: E402
 
 """Multi-pod dry-run (deliverable e).
@@ -239,7 +245,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, variant:
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh_chip_count(mesh)
     try:
-        with jax.sharding.set_mesh(mesh):
+        with use_compat_mesh(mesh):
             t0 = time.time()
             fn, args, used_rules = build_cell(arch, shape_name, mesh, variant=variant)
             with axis_rules(used_rules):

@@ -28,13 +28,21 @@ from repro.suite.hashing import SCHEMA_VERSION, canonical_json, run_key, scenari
 from repro.suite.layers import Layer, Resolved, merge_layers, parse_override
 from repro.suite.runner import (
     CellOutcome,
+    RetryPolicy,
     SuiteReport,
     run_fleet_stored,
     run_stored,
     run_suite,
 )
 from repro.suite.spec import Suite, SuiteCell, build_scenario, load_suite
-from repro.suite.store import DEFAULT_ROOT, GcStats, RunRecord, RunStore
+from repro.suite.store import (
+    DEFAULT_ROOT,
+    GcStats,
+    RunRecord,
+    RunStore,
+    StoreCorruptionError,
+    VerifyStats,
+)
 from repro.suite.trend import compute_trends, load_bench_history, render_trends, trend_report
 
 __all__ = [
@@ -44,11 +52,14 @@ __all__ = [
     "GcStats",
     "Layer",
     "Resolved",
+    "RetryPolicy",
     "RunRecord",
     "RunStore",
+    "StoreCorruptionError",
     "Suite",
     "SuiteCell",
     "SuiteReport",
+    "VerifyStats",
     "build_scenario",
     "canonical_json",
     "compute_trends",

@@ -2,12 +2,13 @@
 
 Subcommands::
 
-    repro-suite run <suite.toml> [--store DIR] [--engine NAME] [--jobs N]
-                    [--set key.path=value ...] [--dry-run] [--max-cells N]
-                    [--expect-all-hits]
-    repro-suite list  [--store DIR]
-    repro-suite gc    [--store DIR] [--dry-run]
-    repro-suite trend [--store DIR] [--history BENCH_history.jsonl] [--json]
+    repro-suite run    <suite.toml> [--store DIR] [--engine NAME] [--jobs N]
+                       [--set key.path=value ...] [--dry-run] [--max-cells N]
+                       [--expect-all-hits] [--retries N] [--cell-timeout S]
+    repro-suite list   [--store DIR]
+    repro-suite gc     [--store DIR] [--dry-run]
+    repro-suite verify [--store DIR] [--repair] [--deep] [--parity DIR]
+    repro-suite trend  [--store DIR] [--history BENCH_history.jsonl] [--json]
 
 ``run`` executes only the cells missing from the store (rerun to resume an
 interrupted sweep), simulating up to ``--jobs`` cells concurrently (store
@@ -16,21 +17,32 @@ list with per-field layer provenance and simulates nothing;
 ``--expect-all-hits`` fails (exit 1) unless the whole pass was served from
 the store with zero ``engine.run`` telemetry spans — the CI regression
 contract for "re-running an unchanged suite performs zero simulation".
+A crashing or hung cell no longer aborts the pass: it retries under
+``--retries``/``--cell-timeout`` (see :class:`repro.suite.RetryPolicy`),
+every completed cell is flushed, the failures are listed, and the exit
+code is nonzero — rerun to heal.  Setting ``REPRO_FAULTS=<schedule>``
+activates a :mod:`repro.faults` plan around the pass (the CI chaos job).
 ``gc`` compacts superseded index lines and deletes orphaned payload files,
-reporting the bytes reclaimed.
+reporting the bytes reclaimed.  ``verify`` checks every payload against
+its index checksum (``--deep``: full decode), ``--repair`` quarantines
+corrupt entries so the next run re-simulates them, and ``--parity OTHER``
+asserts bitwise payload agreement with another store (exit 1 on
+divergence).
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import logging
 import sys
 
 from repro import configure_logging
+from repro import faults
 from repro import obs
 from repro.suite.layers import parse_override
-from repro.suite.runner import run_suite
+from repro.suite.runner import RetryPolicy, run_suite
 from repro.suite.spec import load_suite
 from repro.suite.store import DEFAULT_ROOT, RunStore
 from repro.suite.trend import DEFAULT_HISTORY, compute_trends, load_bench_history, render_trends
@@ -48,12 +60,32 @@ def _cmd_run(args: argparse.Namespace) -> int:
             print(cell.describe())
         return 0
     store = RunStore(args.store)
-    with obs.Telemetry() as tel:
+    retry = RetryPolicy(
+        max_attempts=max(1, args.retries),
+        timeout_s=args.cell_timeout,
+    )
+    plan = faults.plan_from_env()
+    plan_ctx = faults.activate(plan) if plan is not None else contextlib.nullcontext()
+    if plan is not None:
+        log.warning("fault injection active (%s): %s", faults.ENV_VAR, plan.describe())
+    with plan_ctx, obs.Telemetry() as tel:
         report = run_suite(
             suite, store, engine=args.engine, cli=cli or None,
-            max_cells=args.max_cells, jobs=args.jobs,
+            max_cells=args.max_cells, jobs=args.jobs, retry=retry,
         )
     print(report.summary())
+    if plan is not None and plan.log:
+        log.warning(
+            "injected %d faults: %s", len(plan.log),
+            ", ".join(a.describe() for a in plan.log),
+        )
+    if report.n_failed:
+        log.error(
+            "%d cell(s) failed after retries: %s — completed cells are stored; "
+            "rerun to retry only the failures",
+            report.n_failed, ", ".join(o.cell.label for o in report.failures),
+        )
+        return 1
     if args.expect_all_hits:
         n_runs = len(tel.find_spans("engine.run"))
         if report.n_misses or report.n_skipped or n_runs:
@@ -76,6 +108,31 @@ def _cmd_gc(args: argparse.Namespace) -> int:
     for path in stats.payloads_deleted:
         print(f"{'would delete' if args.dry_run else 'deleted'} {path}")
     return 0
+
+
+def _cmd_verify(args: argparse.Namespace) -> int:
+    store = RunStore(args.store)
+    with obs.Telemetry():
+        stats = store.verify(repair=args.repair, deep=args.deep)
+    print(f"# store {store.root}: {stats.summary()}")
+    for key, reason in stats.corrupt:
+        print(f"corrupt {key[:12]}: {reason}")
+    for path in stats.quarantined:
+        print(f"quarantined {path}")
+    rc = 0 if stats.ok or args.repair else 1
+    if args.parity:
+        other = RunStore(args.parity)
+        mismatches = store.parity(other)
+        shared = len(set(r.run_key for r in store.records())
+                     & set(r.run_key for r in other.records()))
+        if mismatches:
+            for key, reason in sorted(mismatches.items()):
+                print(f"parity mismatch {key[:12]}: {reason}")
+            log.error("parity vs %s: %d/%d shared runs diverge", other.root,
+                      len(mismatches), shared)
+            return 1
+        print(f"# parity vs {other.root}: {shared} shared runs bit-identical")
+    return rc
 
 
 def _cmd_list(args: argparse.Namespace) -> int:
@@ -143,6 +200,14 @@ def main(argv: list[str] | None = None) -> int:
         "--jobs", type=int, default=1, metavar="N",
         help="simulate up to N missing cells concurrently (store writes stay serial)",
     )
+    p_run.add_argument(
+        "--retries", type=int, default=3, metavar="N",
+        help="attempts per cell before recording it as failed (default 3)",
+    )
+    p_run.add_argument(
+        "--cell-timeout", type=float, default=None, metavar="S",
+        help="wall-clock watchdog per cell on the --jobs path (default: off)",
+    )
     p_run.set_defaults(fn=_cmd_run)
 
     p_list = sub.add_parser("list", help="list the store index")
@@ -155,6 +220,21 @@ def main(argv: list[str] | None = None) -> int:
         "--dry-run", action="store_true", help="report what would be reclaimed; change nothing"
     )
     p_gc.set_defaults(fn=_cmd_gc)
+
+    p_verify = sub.add_parser("verify", help="checksum-verify payloads; quarantine with --repair")
+    p_verify.add_argument("--store", default=DEFAULT_ROOT)
+    p_verify.add_argument(
+        "--repair", action="store_true",
+        help="move corrupt payloads to quarantine/ and drop their index lines",
+    )
+    p_verify.add_argument(
+        "--deep", action="store_true", help="additionally decode every payload end to end"
+    )
+    p_verify.add_argument(
+        "--parity", default=None, metavar="DIR",
+        help="also require bitwise payload parity with the store at DIR",
+    )
+    p_verify.set_defaults(fn=_cmd_verify)
 
     p_trend = sub.add_parser("trend", help="metric drift per scenario hash across git shas")
     p_trend.add_argument("--store", default=DEFAULT_ROOT)

@@ -21,21 +21,38 @@ leaves either a complete entry or no entry, never a torn one.  Re-appending
 the same key later simply supersedes the older line (last wins on load);
 :meth:`RunStore.gc` compacts superseded lines away and deletes payload
 files nothing references (``repro-suite gc``).
+
+Integrity: every payload's sha256 is computed over the exact bytes the
+record describes and stored in the index line, so a torn write, bit rot, or
+a foreign file under ``runs/`` is *detected* rather than surfacing as a raw
+``zipfile.BadZipFile`` three layers up: :meth:`RunStore.load` verifies the
+checksum (and wraps every decode failure) into a typed
+:class:`StoreCorruptionError` carrying the run key and payload path, and
+:meth:`RunStore.verify` sweeps the whole store — with ``repair=True``
+quarantining corrupt entries under ``quarantine/`` and dropping their index
+lines so the next ``repro-suite run`` simply re-simulates them
+(``repro-suite verify [--repair]``).  The fault-injection sites
+``store.payload_write`` (raise | torn) and ``store.index_append`` (raise)
+from :mod:`repro.faults` live on this module's write path.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import io
 import json
 import math
 import os
 import pathlib
 import subprocess
 import time
+import zipfile
 from typing import Any, Mapping
 
 import numpy as np
 
+from repro import faults
 from repro.core.billing import Termination
 from repro.core.provision import SLA
 from repro.core.schemes import Scheme
@@ -46,11 +63,38 @@ from repro.engine.scenario import FleetScenario, MarketCell, Scenario
 from repro.fleet.controller import AttemptRecord, FleetResult, JobOutcome
 from repro.fleet.sweep import SweepCell
 from repro.fleet.workload import Job
+from repro.obs import telemetry as obs
 from repro.suite.hashing import SCHEMA_VERSION, run_key, scenario_hash
 
-__all__ = ["GcStats", "RunRecord", "RunStore", "DEFAULT_ROOT"]
+__all__ = [
+    "GcStats",
+    "RunRecord",
+    "RunStore",
+    "StoreCorruptionError",
+    "VerifyStats",
+    "DEFAULT_ROOT",
+]
 
 DEFAULT_ROOT = "results/store"
+
+#: Header keys that legitimately differ between two runs of the same cell
+#: (wall-clock measurements); payload parity ignores them.
+_VOLATILE_HEADER_KEYS = ("wall_s", "timings")
+
+
+class StoreCorruptionError(RuntimeError):
+    """A stored payload failed its checksum or could not be decoded.
+
+    Carries the run key and payload path so callers (and the
+    ``repro-suite verify`` workflow) can quarantine the exact entry instead
+    of crashing on a raw ``zipfile.BadZipFile``/``KeyError``.
+    """
+
+    def __init__(self, run_key: str, payload: "pathlib.Path | str", reason: str):
+        self.run_key = run_key
+        self.payload = str(payload)
+        self.reason = reason
+        super().__init__(f"corrupt run {run_key} ({self.payload}): {reason}")
 
 
 def _git_sha() -> str | None:
@@ -81,6 +125,7 @@ class RunRecord:
     metrics: dict[str, float]
     suite: str | None = None
     cell: str | None = None
+    sha256: str | None = None  # checksum of the payload bytes (None: pre-checksum record)
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -115,6 +160,35 @@ class GcStats:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class VerifyStats:
+    """What :meth:`RunStore.verify` found (and, with ``repair``, moved)."""
+
+    n_records: int
+    n_ok: int
+    n_unchecksummed: int  # pre-checksum index lines: decode-checked only when deep
+    corrupt: list[tuple[str, str]]  # (run_key, reason)
+    quarantined: list[str]  # store-relative paths moved under quarantine/
+    repaired: bool
+    deep: bool
+
+    @property
+    def ok(self) -> bool:
+        return not self.corrupt
+
+    def summary(self) -> str:
+        mode = "deep" if self.deep else "checksum"
+        head = (
+            f"{self.n_records} records ({mode} verify): {self.n_ok} ok, "
+            f"{len(self.corrupt)} corrupt"
+        )
+        if self.n_unchecksummed:
+            head += f", {self.n_unchecksummed} without checksums"
+        if self.repaired:
+            head += f"; quarantined {len(self.quarantined)} payloads"
+        return head
+
+
 class RunStore:
     """A persistent, content-addressed database of simulation runs."""
 
@@ -122,6 +196,7 @@ class RunStore:
         self.root = pathlib.Path(root)
         self.index_path = self.root / "index.jsonl"
         self.runs_dir = self.root / "runs"
+        self.quarantine_dir = self.root / "quarantine"
         self._records: dict[str, RunRecord] = {}
         self._sha: str | None | bool = False  # False = not yet resolved
         self.reload()
@@ -169,13 +244,34 @@ class RunStore:
         return self._sha
 
     def _flush(self, rec: RunRecord, payload: dict[str, np.ndarray]) -> RunRecord:
-        """Write payload-then-index (the interrupt-safety order)."""
+        """Write payload-then-index (the interrupt-safety order).
+
+        The payload is serialized in memory first so the index line's sha256
+        describes the *intended* bytes — a write torn between serialization
+        and disk (crash, or the ``store.payload_write`` fault site) is then
+        detectable by :meth:`load`/:meth:`verify` instead of silent.
+        """
         self.runs_dir.mkdir(parents=True, exist_ok=True)
+        buf = io.BytesIO()
+        np.savez_compressed(buf, **payload)
+        data = buf.getvalue()
+        rec = dataclasses.replace(rec, sha256=hashlib.sha256(data).hexdigest())
         final = self.root / rec.payload
         tmp = final.with_suffix(".tmp.npz")
-        with tmp.open("wb") as f:
-            np.savez_compressed(f, **payload)
+        action = faults.current().fire("store.payload_write", key=rec.run_key)
+        if action is not None and action.kind == "raise":
+            # crash mid-write: a stale tmp file is left behind (gc's problem),
+            # the final payload and the index are untouched
+            tmp.write_bytes(data[: len(data) // 2])
+            raise faults.InjectedFault(action)
+        if action is not None and action.kind == "torn":
+            # torn write the OS never reported: the commit completes but the
+            # payload on disk is truncated — only the checksum can tell
+            tmp.write_bytes(data[: len(data) // 2])
+        else:
+            tmp.write_bytes(data)
         os.replace(tmp, final)
+        faults.current().check("store.index_append", key=rec.run_key)
         with self.index_path.open("a") as f:
             f.write(json.dumps(rec.asdict()) + "\n")
             f.flush()
@@ -308,10 +404,141 @@ class RunStore:
         reference-engine debugging aid) are not persisted.
         """
         rec = record_or_key if isinstance(record_or_key, RunRecord) else self._records[record_or_key]
-        with np.load(self.root / rec.payload) as z:
-            if rec.kind == "fleet":
-                return _unpack_fleet_grid(z, scenario)
-            return _unpack_engine_result(z, scenario)
+        data = self._read_verified(rec)
+        try:
+            with np.load(io.BytesIO(data)) as z:
+                if rec.kind == "fleet":
+                    return _unpack_fleet_grid(z, scenario)
+                return _unpack_engine_result(z, scenario)
+        except (zipfile.BadZipFile, KeyError, ValueError, EOFError, OSError,
+                json.JSONDecodeError) as e:
+            raise StoreCorruptionError(
+                rec.run_key, self.root / rec.payload, f"undecodable payload: {e!r}"
+            ) from e
+
+    def _read_verified(self, rec: RunRecord) -> bytes:
+        """The payload bytes, checksum-verified when the record carries one."""
+        path = self.root / rec.payload
+        try:
+            data = path.read_bytes()
+        except OSError as e:
+            raise StoreCorruptionError(rec.run_key, path, f"unreadable payload: {e}") from e
+        if rec.sha256 is not None:
+            got = hashlib.sha256(data).hexdigest()
+            if got != rec.sha256:
+                raise StoreCorruptionError(
+                    rec.run_key, path,
+                    f"checksum mismatch: index has {rec.sha256[:12]}…, payload is {got[:12]}…",
+                )
+        return data
+
+    # -- verify / repair -----------------------------------------------------
+
+    def verify(self, *, repair: bool = False, deep: bool = False) -> VerifyStats:
+        """Sweep every indexed record for corruption.
+
+        The default pass checks payload existence and sha256 (fast: no
+        decode); ``deep=True`` additionally decodes every payload through the
+        full codec.  With ``repair=True`` each corrupt entry is *quarantined*
+        instead of left to crash a future load: its payload (when present)
+        moves to ``quarantine/<run_key>.npz`` and its index line is dropped
+        (tmp-file + ``os.replace``, same crash-safety as :meth:`gc`), so the
+        next suite pass treats the cell as missing and re-simulates it.
+        Counts ``store.quarantined`` per quarantined entry.
+        """
+        self.reload()
+        n_records = len(self._records)
+        corrupt: list[tuple[str, str]] = []
+        quarantined: list[str] = []
+        n_unchecksummed = 0
+        for rec in self.records():
+            n_unchecksummed += rec.sha256 is None
+            try:
+                data = self._read_verified(rec)
+                if deep:
+                    with np.load(io.BytesIO(data)) as z:
+                        if rec.kind == "fleet":
+                            _unpack_fleet_grid(z, None)
+                        else:
+                            _unpack_engine_result(z, None)
+            except StoreCorruptionError as e:
+                corrupt.append((rec.run_key, e.reason))
+            except (zipfile.BadZipFile, KeyError, ValueError, EOFError, OSError,
+                    json.JSONDecodeError) as e:
+                corrupt.append((rec.run_key, f"undecodable payload: {e!r}"))
+        if repair and corrupt:
+            tel = obs.current()
+            bad_keys = {k for k, _ in corrupt}
+            for key in sorted(bad_keys):
+                rec = self._records[key]
+                src = self.root / rec.payload
+                if src.exists():
+                    self.quarantine_dir.mkdir(parents=True, exist_ok=True)
+                    dst = self.quarantine_dir / f"{rec.run_key}.npz"
+                    os.replace(src, dst)
+                    quarantined.append(str(dst.relative_to(self.root)))
+                tel.count("store.quarantined")
+                del self._records[key]
+            survivors = "".join(json.dumps(r.asdict()) + "\n" for r in self.records())
+            tmp = self.index_path.with_suffix(".jsonl.tmp")
+            tmp.write_text(survivors)
+            os.replace(tmp, self.index_path)
+        return VerifyStats(
+            n_records=n_records,
+            n_ok=n_records - len(corrupt),
+            n_unchecksummed=n_unchecksummed,
+            corrupt=corrupt,
+            quarantined=quarantined,
+            repaired=repair,
+            deep=deep,
+        )
+
+    # -- parity --------------------------------------------------------------
+
+    def parity(self, other: "RunStore") -> dict[str, str]:
+        """Bitwise payload comparison against ``other`` on the shared keys.
+
+        Returns ``{run_key: reason}`` for every divergence (empty = parity).
+        Array entries must match bit for bit; the JSON header is compared
+        after dropping wall-clock fields (``wall_s``, ``timings``, per-cell
+        ``wall_s``) that legitimately differ between runs.  The chaos CI job
+        uses this to assert a faulted-then-repaired store converges to the
+        never-faulted baseline.
+        """
+        mismatches: dict[str, str] = {}
+        shared = sorted(set(self._records) & set(other._records))
+        for key in shared:
+            try:
+                mine = dict(np.load(io.BytesIO(self._read_verified(self._records[key]))))
+                theirs = dict(np.load(io.BytesIO(other._read_verified(other._records[key]))))
+            except StoreCorruptionError as e:
+                mismatches[key] = f"corrupt: {e.reason}"
+                continue
+            if set(mine) != set(theirs):
+                mismatches[key] = (
+                    f"entry sets differ: {sorted(set(mine) ^ set(theirs))}"
+                )
+                continue
+            for name in sorted(mine):
+                if name == "header":
+                    if _comparable_header(mine[name]) != _comparable_header(theirs[name]):
+                        mismatches[key] = "header differs beyond wall-clock fields"
+                        break
+                elif not np.array_equal(mine[name], theirs[name]):
+                    mismatches[key] = f"array {name!r} differs"
+                    break
+        return mismatches
+
+
+def _comparable_header(header_entry: np.ndarray) -> dict:
+    """A payload header with wall-clock fields stripped, for parity checks."""
+    header = json.loads(str(header_entry[()]))
+    for key in _VOLATILE_HEADER_KEYS:
+        header.pop(key, None)
+    for cell in header.get("cells", []):  # fleet SweepCells carry wall_s too
+        if isinstance(cell, dict):
+            cell.pop("wall_s", None)
+    return header
 
 
 # ---------------------------------------------------------------------------

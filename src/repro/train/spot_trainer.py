@@ -34,7 +34,7 @@ from typing import Callable
 import jax
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointCorruptionError, CheckpointManager
 from repro.core import HOUR, PriceTrace, SimParams, Termination, run_cost
 from repro.core.events import EventKind, SpotEventGenerator
 from repro.core.lifecycle import AppState, Lifecycle
@@ -65,6 +65,7 @@ class SpotRunReport:
     n_checkpoints: int
     n_preemptions: int
     n_restores: int
+    restore_fallbacks: int
     straggler_events: int
     losses: list[float]
     lease_log: list[tuple[float, float]]  # (launch, end) virtual times
@@ -153,10 +154,11 @@ class SpotTrainer:
         sim = cfg.sim
         self.lifecycle.map_modules()  # New -> Inactive (composition)
         params, opt_state = self.init_params()
+        data0 = self.data.state_dict()  # pristine iterator state for total-loss recovery
         step = 0
         losses: list[float] = []
         cost = 0.0
-        n_ckpt = n_preempt = n_restore = n_straggler = 0
+        n_ckpt = n_preempt = n_restore = n_fallback = n_straggler = 0
         leases: list[tuple[float, float]] = []
         ewma = None
 
@@ -170,15 +172,34 @@ class SpotTrainer:
                 tel.event(EventKind.LAUNCH.value, launch, price=self.trace.price_at(launch))
                 tel.count(f"events.{EventKind.LAUNCH.value}")
             self.lifecycle.deploy() if self.lifecycle.state == AppState.INACTIVE else self.lifecycle.heal()
-            # resume from checkpoint if one exists (first launch: fresh state)
-            if self.mgr.latest_step() is not None:
-                (params, opt_state), extra = self.mgr.restore(
-                    (params, opt_state), shardings=self.relaunch_shardings
-                )
+            # resume from checkpoint if one exists (first launch: fresh state).
+            # Degraded recovery: a corrupt snapshot is quarantined and the next
+            # older one tried — the run repays the lost steps instead of dying;
+            # with every checkpoint damaged it restarts from pristine state.
+            restored = False
+            for s in reversed(self.mgr.steps()):
+                try:
+                    (params, opt_state), extra = self.mgr.restore(
+                        (params, opt_state), step=s, shardings=self.relaunch_shardings
+                    )
+                except CheckpointCorruptionError as e:
+                    self.mgr.quarantine(s)
+                    n_fallback += 1
+                    tel.count("trainer.restore_fallbacks")
+                    if tel.enabled:
+                        tel.event("trainer.restore_fallback", t, step=s, reason=e.reason)
+                    continue
                 self.data.load_state_dict(extra["data"])
                 step = int(extra["step"])
                 n_restore += 1
                 tel.count("trainer.restores")
+                restored = True
+                break
+            if not restored and n_fallback:
+                # every checkpoint was corrupt: restart from scratch, keeping
+                # step and data-iterator state consistent with the fresh params
+                step = 0
+                self.data.load_state_dict(data0)
             t = launch + sim.t_r  # recovery overhead
             gen = SpotEventGenerator(
                 a_bid=cfg.a_bid,
@@ -257,6 +278,7 @@ class SpotTrainer:
             n_checkpoints=n_ckpt,
             n_preemptions=n_preempt,
             n_restores=n_restore,
+            restore_fallbacks=n_fallback,
             straggler_events=n_straggler,
             losses=losses,
             lease_log=leases,

@@ -1,0 +1,150 @@
+"""Checkpoint corruption: typed errors, quarantine, and the ckpt fault sites."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.checkpoint import CheckpointCorruptionError, CheckpointManager
+from repro.faults import FaultPlan, FaultRule, InjectedFault
+
+
+def _tree(scale=1.0):
+    return {
+        "w": (np.arange(64, dtype=np.float32) * scale).reshape(8, 8),
+        "b": np.arange(8, dtype=np.float32),
+    }
+
+
+def _tmpl():
+    return {"w": np.zeros((8, 8), np.float32), "b": np.zeros(8, np.float32)}
+
+
+@pytest.fixture
+def mgr(tmp_path):
+    return CheckpointManager(str(tmp_path / "ckpt"), keep=5)
+
+
+# -- typed corruption on restore -------------------------------------------
+
+
+def test_torn_leaf_raises_corruption_error(mgr):
+    mgr.save(1, _tree(), {"step": 1})
+    leaf = os.path.join(mgr.root, "step_000000001", "leaf_00000.npy")
+    data = open(leaf, "rb").read()
+    open(leaf, "wb").write(data[: len(data) // 2])
+    with pytest.raises(CheckpointCorruptionError) as err:
+        mgr.restore(_tmpl(), step=1)
+    assert err.value.step == 1
+    assert "sha256 mismatch" in err.value.reason
+
+
+def test_missing_leaf_raises_corruption_error(mgr):
+    mgr.save(1, _tree(), {"step": 1})
+    os.unlink(os.path.join(mgr.root, "step_000000001", "leaf_00001.npy"))
+    with pytest.raises(CheckpointCorruptionError, match="missing leaf"):
+        mgr.restore(_tmpl(), step=1)
+
+
+def test_mangled_manifest_raises_corruption_error(mgr):
+    mgr.save(1, _tree(), {"step": 1})
+    m = os.path.join(mgr.root, "step_000000001", "manifest.json")
+    open(m, "w").write("{definitely not json")
+    with pytest.raises(CheckpointCorruptionError, match="unreadable manifest"):
+        mgr.restore(_tmpl(), step=1)
+
+
+def test_template_mismatch_stays_a_value_error(mgr):
+    # wrong template shape is a caller bug, not disk corruption
+    mgr.save(1, _tree(), {"step": 1})
+    with pytest.raises(ValueError, match="leaves"):
+        mgr.restore({"only": np.zeros(3)}, step=1)
+
+
+# -- quarantine -------------------------------------------------------------
+
+
+def test_quarantine_hides_step_and_keeps_evidence(mgr):
+    mgr.save(1, _tree(), {"step": 1})
+    mgr.save(2, _tree(2.0), {"step": 2})
+    path = mgr.quarantine(2)
+    assert path.endswith(".corrupt") and os.path.isdir(path)
+    assert mgr.steps() == [1]
+    assert mgr.latest_step() == 1
+    tree, extra = mgr.restore(_tmpl())  # latest now resolves to the survivor
+    assert extra["step"] == 1
+
+
+def test_requarantine_after_resave_replaces_evidence(mgr):
+    mgr.save(1, _tree(), {"step": 1})
+    mgr.quarantine(1)
+    mgr.save(1, _tree(2.0), {"step": 1})
+    mgr.quarantine(1)  # a second .corrupt for the same step must not crash
+    assert mgr.steps() == []
+
+
+# -- fault sites ------------------------------------------------------------
+
+
+def test_ckpt_save_raise_fault_surfaces_and_leaves_no_commit(mgr):
+    plan = FaultPlan([FaultRule(site="ckpt.save", kind="raise")], seed=0)
+    with plan:
+        with pytest.raises(InjectedFault):
+            mgr.save(1, _tree(), {"step": 1})
+    assert mgr.steps() == []
+    mgr.save(1, _tree(), {"step": 1})  # budget spent: retry lands cleanly
+    assert mgr.steps() == [1]
+
+
+def test_ckpt_save_raise_fault_async_surfaces_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=5, async_io=True)
+    plan = FaultPlan([FaultRule(site="ckpt.save", kind="raise")], seed=0)
+    with plan:
+        mgr.save(1, _tree(), {"step": 1}, block=False)
+        with pytest.raises(InjectedFault):
+            mgr.wait()
+    mgr.wait()  # the error is consumed, not re-raised forever
+    assert mgr.steps() == []
+
+
+def test_ckpt_save_torn_fault_commits_but_restore_detects(mgr):
+    plan = FaultPlan([FaultRule(site="ckpt.save", kind="torn")], seed=0)
+    with plan:
+        mgr.save(1, _tree(), {"step": 1})
+    assert mgr.steps() == [1]  # the torn write committed "successfully"
+    with pytest.raises(CheckpointCorruptionError, match="sha256 mismatch"):
+        mgr.restore(_tmpl(), step=1)
+
+
+def test_ckpt_restore_fault_keyed_by_step(mgr):
+    mgr.save(1, _tree(), {"step": 1})
+    mgr.save(2, _tree(2.0), {"step": 2})
+    plan = FaultPlan([FaultRule(site="ckpt.restore", key="2")], seed=0)
+    with plan:
+        with pytest.raises(CheckpointCorruptionError, match="injected"):
+            mgr.restore(_tmpl(), step=2)
+        tree, extra = mgr.restore(_tmpl(), step=1)  # other steps unaffected
+    assert extra["step"] == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]).ravel()[:3], [0, 1, 2])
+
+
+def test_sync_save_error_does_not_poison_next_save(mgr):
+    # regression: a failed blocking save used to leave _last_error set, so
+    # the *next* save/wait re-raised the stale exception
+    plan = FaultPlan([FaultRule(site="ckpt.save", kind="raise")], seed=0)
+    with plan:
+        with pytest.raises(InjectedFault):
+            mgr.save(1, _tree(), {"step": 1})
+    meta = mgr.save(2, _tree(), {"step": 2})
+    assert meta.step == 2
+    mgr.wait()
+
+
+def test_steps_skips_corrupt_and_tmp_dirs(mgr):
+    mgr.save(1, _tree(), {"step": 1})
+    os.makedirs(os.path.join(mgr.root, "step_000000009.tmp"))
+    os.makedirs(os.path.join(mgr.root, "step_000000008.corrupt"))
+    json.dump({}, open(os.path.join(mgr.root, "step_000000008.corrupt", "manifest.json"), "w"))
+    assert mgr.steps() == [1]

@@ -7,6 +7,8 @@ import shutil
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.parallel.sharding import make_compat_mesh
 import pytest
 
 from repro.checkpoint import CheckpointManager
@@ -122,7 +124,7 @@ def test_elastic_restore_to_shardings(tmp_path):
     dry-run exercises 512)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((1,), ("data",))
     mgr = CheckpointManager(str(tmp_path))
     tree = _tree()
     mgr.save(1, tree)

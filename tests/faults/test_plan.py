@@ -1,0 +1,212 @@
+"""Fault plane contract: deterministic, ambient, zero-cost when off."""
+
+import json
+import textwrap
+import threading
+
+import pytest
+
+from repro import faults, obs
+from repro.faults import FaultAction, FaultPlan, FaultRule, InjectedFault
+
+
+# -- rules ------------------------------------------------------------------
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultRule(site="s", kind="explode")
+    with pytest.raises(ValueError, match="outside"):
+        FaultRule(site="s", p=1.5)
+    with pytest.raises(ValueError, match="max_fires"):
+        FaultRule(site="s", max_fires=0)
+
+
+# -- determinism ------------------------------------------------------------
+
+
+def test_fire_is_a_pure_function_of_seed_site_key():
+    def fired_keys(order):
+        plan = FaultPlan([FaultRule(site="s", p=0.5)], seed=11)
+        return {k for k in order if plan.fire("s", k) is not None}
+
+    keys = [f"k{i}" for i in range(50)]
+    forward = fired_keys(keys)
+    backward = fired_keys(list(reversed(keys)))
+    assert forward == backward
+    assert 0 < len(forward) < 50  # p=0.5 selects a strict subset
+
+
+def test_same_seed_same_plan_same_injected_sequence():
+    def run():
+        plan = FaultPlan([FaultRule(site="s", p=0.4, max_fires=2)], seed=7)
+        for k in ["a", "b", "c", "a", "b", "c", "a"]:
+            plan.fire("s", k)
+        return [(a.site, a.key, a.hit) for a in plan.log]
+
+    assert run() == run()
+
+
+def test_different_seed_selects_different_keys():
+    keys = [f"k{i}" for i in range(64)]
+
+    def selected(seed):
+        plan = FaultPlan([FaultRule(site="s", p=0.5)], seed=seed)
+        return {k for k in keys if plan.fire("s", k) is not None}
+
+    assert selected(1) != selected(2)
+
+
+def test_thread_interleaving_cannot_perturb_decisions():
+    keys = [f"k{i}" for i in range(40)]
+    ref_plan = FaultPlan([FaultRule(site="s", p=0.5)], seed=5)
+    expect = {k for k in keys if ref_plan.fire("s", k) is not None}
+
+    plan = FaultPlan([FaultRule(site="s", p=0.5)], seed=5)
+    hits: set = set()
+    lock = threading.Lock()
+
+    def worker(chunk):
+        for k in chunk:
+            if plan.fire("s", k) is not None:
+                with lock:
+                    hits.add(k)
+
+    threads = [threading.Thread(target=worker, args=(keys[i::4],)) for i in range(4)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    assert hits == expect
+
+
+# -- budgets ----------------------------------------------------------------
+
+
+def test_max_fires_is_a_per_key_budget_transient_then_recovered():
+    plan = FaultPlan([FaultRule(site="s", max_fires=2)], seed=0)
+    assert plan.fire("s", "k") is not None  # hit 0
+    assert plan.fire("s", "k") is not None  # hit 1
+    assert plan.fire("s", "k") is None  # budget spent: retries now succeed
+    assert plan.fire("s", "other") is not None  # fresh key, fresh budget
+
+
+def test_after_skips_first_hits():
+    plan = FaultPlan([FaultRule(site="s", after=1)], seed=0)
+    assert plan.fire("s", "k") is None  # first attempt succeeds
+    assert plan.fire("s", "k") is not None  # the retry fails
+    assert plan.fire("s", "k") is None
+
+
+def test_key_pinned_rule_only_fires_on_that_key():
+    plan = FaultPlan([FaultRule(site="s", key="77")], seed=0)
+    assert plan.fire("s", "44") is None
+    assert plan.fire("s", 77) is not None  # keys are stringified
+    assert plan.fire("s", "78") is None
+
+
+def test_check_raises_only_on_raise_kind():
+    plan = FaultPlan([FaultRule(site="s", kind="raise")], seed=0)
+    with pytest.raises(InjectedFault) as err:
+        plan.check("s", "k")
+    assert isinstance(err.value.action, FaultAction)
+    assert "s[k]" in err.value.action.describe()
+
+    hang = FaultPlan([FaultRule(site="s", kind="hang", delay_s=0.0)], seed=0)
+    hang.check("s", "k")  # non-raise kinds pass through check()
+    assert len(hang.log) == 1
+
+
+# -- activation (mirrors obs.telemetry) -------------------------------------
+
+
+def test_null_plan_is_ambient_default_and_never_fires():
+    assert faults.current() is faults.NULL
+    assert faults.NULL.fire("s", "k") is None
+    faults.NULL.check("s", "k")
+    assert not faults.NULL.enabled
+    with pytest.raises(RuntimeError):
+        with faults.NULL:
+            pass
+    with pytest.raises(RuntimeError):
+        faults.activate(faults.NULL)
+
+
+def test_activation_is_lifo():
+    outer = FaultPlan(seed=1)
+    inner = FaultPlan(seed=2)
+    with outer:
+        assert faults.current() is outer
+        with faults.activate(inner):
+            assert faults.current() is inner
+        assert faults.current() is outer
+    assert faults.current() is faults.NULL
+
+
+def test_hit_counters_persist_across_activations():
+    plan = FaultPlan([FaultRule(site="s", max_fires=1)], seed=0)
+    with plan:
+        assert plan.fire("s", "k") is not None
+    with plan:  # faulted pass then clean pass: budget stays spent
+        assert plan.fire("s", "k") is None
+
+
+# -- telemetry --------------------------------------------------------------
+
+
+def test_injected_actions_count_on_current_collector():
+    plan = FaultPlan([FaultRule(site="a.b", max_fires=3)], seed=0)
+    with obs.Telemetry() as tel, plan:
+        plan.fire("a.b", "x")
+        plan.fire("a.b", "x")
+    assert tel.counter("faults.injected") == 2
+    assert tel.counter("faults.injected.a.b") == 2
+    assert plan.injected("a.b") == plan.log
+    assert plan.injected("other") == []
+
+
+# -- schedule files ---------------------------------------------------------
+
+
+def test_load_plan_json(tmp_path):
+    p = tmp_path / "chaos.json"
+    p.write_text(json.dumps({
+        "seed": 42,
+        "rules": [
+            {"site": "suite.worker", "kind": "raise", "p": 0.5},
+            {"site": "ckpt.restore", "key": "7", "max_fires": 2},
+        ],
+    }))
+    plan = faults.load_plan(p)
+    assert plan.seed == 42
+    assert [r.site for r in plan.rules] == ["suite.worker", "ckpt.restore"]
+    assert plan.rules[1].key == "7"
+    assert "suite.worker:raise" in plan.describe()
+
+
+def test_load_plan_toml(tmp_path):
+    pytest.importorskip("tomli", reason="TOML schedules need tomllib (py3.11+) or tomli")
+    p = tmp_path / "chaos.toml"
+    p.write_text(textwrap.dedent("""
+        seed = 9
+        [[rules]]
+        site = "store.payload_write"
+        kind = "torn"
+        p = 0.25
+    """))
+    plan = faults.load_plan(p)
+    assert plan.seed == 9 and plan.rules[0].kind == "torn"
+
+
+def test_load_plan_rejects_unknown_keys(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"rules": [{"site": "s", "probability": 1.0}]}))
+    with pytest.raises(ValueError, match="unknown fault-rule keys"):
+        faults.load_plan(p)
+
+
+def test_plan_from_env(tmp_path):
+    p = tmp_path / "chaos.json"
+    p.write_text(json.dumps({"seed": 3, "rules": [{"site": "s"}]}))
+    assert faults.plan_from_env({}) is None
+    assert faults.plan_from_env({faults.ENV_VAR: ""}) is None
+    plan = faults.plan_from_env({faults.ENV_VAR: str(p)})
+    assert plan is not None and plan.seed == 3

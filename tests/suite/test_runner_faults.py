@@ -1,0 +1,229 @@
+"""Failure containment: one bad cell never aborts a pass; reruns heal.
+
+Includes the chaos determinism/parity contract: same seed + same fault plan
+=> identical injected-failure sequence and identical final store contents.
+"""
+
+import json
+import textwrap
+
+import pytest
+
+from repro import faults, obs
+from repro.faults import FaultPlan, FaultRule
+from repro.suite import RetryPolicy, RunStore, run_suite
+from repro.suite.__main__ import main as suite_main
+from repro.suite.spec import load_suite
+
+pytest.importorskip("tomli", reason="TOML suite files need tomllib (py3.11+) or tomli")
+
+SUITE = """
+    [suite]
+    name = "tiny"
+    kind = "scenario"
+    engine = "auto"
+
+    [base]
+    work_s = 1800.0
+    instances = ["m1.xlarge/eu-west-1"]
+    bids = [0.4, 0.45]
+    horizon_days = 2.0
+
+    [axes]
+    schemes = ["opt", "hour"]
+    seeds = [0, 1]
+"""
+
+FAST = RetryPolicy(max_attempts=3, backoff_base_s=0.001, backoff_cap_s=0.01)
+
+
+@pytest.fixture
+def suite(tmp_path):
+    p = tmp_path / "tiny.toml"
+    p.write_text(textwrap.dedent(SUITE))
+    return load_suite(p)
+
+
+def _crash_plan(p=0.5, seed=0, max_fires=99):
+    return FaultPlan(
+        [FaultRule(site="suite.worker", kind="raise", p=p, max_fires=max_fires)], seed=seed
+    )
+
+
+# -- satellite: a crashing cell no longer aborts the pass -------------------
+
+
+@pytest.mark.parametrize("jobs", [1, 3])
+def test_crashing_cell_does_not_abort_pass(tmp_path, suite, jobs):
+    store = RunStore(tmp_path / "store")
+    plan = _crash_plan()  # permanent crashes on ~half the cells
+    with plan:
+        report = run_suite(suite, store, jobs=jobs, retry=FAST)
+    assert report.n_failed == 2  # p=0.5/seed=0 deterministically selects 2 of 4
+    assert report.n_misses == 4 - report.n_failed
+    assert not report.ok
+    # every completed cell was flushed, every failed one is absent
+    assert len(store) == report.n_misses
+    for o in report.failures:
+        assert o.record is None and "InjectedFault" in o.error
+        assert o.attempts == FAST.max_attempts
+    assert "FAILED" in report.summary()
+
+    # rerun without faults: exactly the failed cells re-simulate
+    healed = run_suite(suite, store, jobs=jobs, retry=FAST)
+    assert healed.ok
+    assert healed.n_hits == report.n_misses and healed.n_misses == report.n_failed
+
+
+def test_transient_fault_recovers_within_retry_budget(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+    # every cell's first attempt crashes; the retry succeeds (max_fires=1)
+    plan = FaultPlan([FaultRule(site="suite.worker", kind="raise", p=1.0, max_fires=1)], seed=0)
+    with plan, obs.Telemetry() as tel:
+        report = run_suite(suite, store, retry=FAST)
+    assert report.ok and report.n_misses == 4
+    assert all(o.attempts == 2 for o in report.outcomes)
+    assert tel.counter("retry.attempts") == 4
+    assert tel.counter("faults.injected") == 4
+    assert len(store) == 4
+
+
+def test_exhausted_retries_record_failure_and_counters(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+    plan = FaultPlan([FaultRule(site="suite.worker", kind="raise", p=1.0, max_fires=99)], seed=0)
+    with plan, obs.Telemetry() as tel:
+        report = run_suite(suite, store, retry=FAST)
+    assert report.n_failed == 4 and len(store) == 0
+    # every cell consumed its whole budget; re-attempts counted
+    assert tel.counter("retry.attempts") == 4 * (FAST.max_attempts - 1)
+
+
+def test_backoff_is_deterministic_and_capped():
+    p = RetryPolicy(max_attempts=5, backoff_base_s=0.1, backoff_cap_s=0.3)
+    seq = [p.backoff_s("cellkey", n) for n in range(1, 5)]
+    assert seq == [p.backoff_s("cellkey", n) for n in range(1, 5)]  # replayable
+    assert all(0.05 <= s <= 0.3 for s in seq)  # within [base/2, cap]
+    assert p.backoff_s("cellkey", 1) != p.backoff_s("otherkey", 1)  # de-synced
+
+
+def test_watchdog_abandons_hung_cells(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+    # hang every cell for 1.2s against a 0.2s watchdog, 2 pool slots: the
+    # first two cells wedge both slots, the queued cells get cancelled
+    plan = FaultPlan(
+        [FaultRule(site="suite.worker", kind="hang", p=1.0, delay_s=1.2, max_fires=99)], seed=0
+    )
+    policy = RetryPolicy(max_attempts=1, timeout_s=0.2)
+    with plan, obs.Telemetry() as tel:
+        report = run_suite(suite, store, jobs=2, retry=policy)
+    assert report.n_failed == 4 and not report.ok
+    assert tel.counter("suite.watchdog_timeout") == 2  # one per wedged slot
+    errors = sorted(o.error for o in report.failures)
+    assert any("watchdog timeout" in e for e in errors)
+    assert any("pool exhausted" in e for e in errors)
+
+
+def test_hang_shorter_than_watchdog_completes(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+    plan = FaultPlan(
+        [FaultRule(site="suite.worker", kind="hang", p=1.0, delay_s=0.05, max_fires=99)], seed=0
+    )
+    with plan:
+        report = run_suite(suite, store, jobs=2, retry=RetryPolicy(timeout_s=5.0))
+    assert report.ok and report.n_misses == 4
+
+
+def test_store_write_fault_is_contained_and_retried(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+    # payload write crashes once per cell; the flush retry succeeds
+    plan = FaultPlan(
+        [FaultRule(site="store.payload_write", kind="raise", p=1.0, max_fires=1)], seed=0
+    )
+    with plan, obs.Telemetry() as tel:
+        report = run_suite(suite, store, retry=FAST)
+    assert report.ok and len(store) == 4
+    assert tel.counter("retry.attempts") == 4
+    assert store.verify(deep=True).ok
+
+
+def test_torn_payload_write_is_silent_until_verify(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+    plan = FaultPlan([FaultRule(site="store.payload_write", kind="torn", p=1.0)], seed=0)
+    with plan:
+        report = run_suite(suite, store, retry=FAST)
+    assert report.ok  # torn writes complete "successfully"
+    stats = store.verify()
+    assert len(stats.corrupt) == 4  # but every payload fails its checksum
+    assert all("checksum mismatch" in r for _, r in stats.corrupt)
+    store.verify(repair=True)
+    healed = run_suite(suite, store, retry=FAST)
+    assert healed.ok and store.verify(deep=True).ok
+
+
+# -- CLI exit codes ---------------------------------------------------------
+
+
+def test_cli_run_exits_nonzero_on_failed_cells(tmp_path, suite, capsys, monkeypatch):
+    chaos = tmp_path / "chaos.json"
+    chaos.write_text(json.dumps({
+        "seed": 1,
+        "rules": [{"site": "suite.worker", "kind": "raise", "p": 0.5, "max_fires": 99}],
+    }))
+    monkeypatch.setenv(faults.ENV_VAR, str(chaos))
+    rc = suite_main([
+        "run", str(tmp_path / "tiny.toml"), "--store", str(tmp_path / "store"), "--retries", "2",
+    ])
+    assert rc == 1
+    assert "FAILED" in capsys.readouterr().out
+
+    monkeypatch.delenv(faults.ENV_VAR)
+    assert suite_main(["run", str(tmp_path / "tiny.toml"), "--store", str(tmp_path / "store")]) == 0
+    assert suite_main([
+        "run", str(tmp_path / "tiny.toml"), "--store", str(tmp_path / "store"),
+        "--expect-all-hits",
+    ]) == 0
+
+
+# -- the chaos determinism / parity contract --------------------------------
+
+
+def _chaos_plan():
+    return FaultPlan(
+        [
+            FaultRule(site="suite.worker", kind="raise", p=0.5, max_fires=99),
+            FaultRule(site="store.payload_write", kind="torn", p=0.3),
+        ],
+        seed=13,
+    )
+
+
+def _faulted_then_healed(root, suite, jobs):
+    store = RunStore(root)
+    plan = _chaos_plan()
+    with plan:
+        first = run_suite(suite, store, jobs=jobs, retry=FAST)
+    store.verify(repair=True)
+    healed = run_suite(suite, store, retry=FAST)
+    assert healed.ok
+    warm = run_suite(suite, store, retry=FAST)
+    assert warm.n_hits == 4
+    injected = [(a.site, a.key, a.hit, a.kind) for a in plan.log]
+    return store, injected, first.n_failed
+
+
+@pytest.mark.parametrize("jobs", [1, 3])
+def test_same_seed_same_plan_identical_failures_and_store(tmp_path, suite, jobs):
+    a, injected_a, failed_a = _faulted_then_healed(tmp_path / "a", suite, jobs)
+    b, injected_b, failed_b = _faulted_then_healed(tmp_path / "b", suite, 1)
+
+    # identical injected-failure *set* regardless of jobs/interleaving; the
+    # sequential order is also identical when both run sequentially
+    assert sorted(injected_a) == sorted(injected_b)
+    assert failed_a == failed_b > 0
+
+    # and the healed stores converge bit-identically to a never-faulted run
+    clean = RunStore(tmp_path / "clean")
+    run_suite(suite, clean, retry=FAST)
+    assert a.parity(clean) == {}
+    assert b.parity(clean) == {}
+    assert set(r.run_key for r in a.records()) == set(r.run_key for r in clean.records())

@@ -1,0 +1,318 @@
+"""Store integrity: checksums, typed corruption, verify/repair, gc crash-safety."""
+
+import io
+import json
+import os
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import faults, obs
+from repro.core import get_instance
+from repro.engine import Scenario
+from repro.engine.base import get_engine
+from repro.suite import RunStore, StoreCorruptionError, run_stored, run_suite
+from repro.suite.__main__ import main as suite_main
+from repro.suite.spec import load_suite
+
+pytest.importorskip("tomli", reason="TOML suite files need tomllib (py3.11+) or tomli")
+
+SUITE = """
+    [suite]
+    name = "tiny"
+    kind = "scenario"
+    engine = "auto"
+
+    [base]
+    work_s = 1800.0
+    instances = ["m1.xlarge/eu-west-1"]
+    bids = [0.4]
+    horizon_days = 2.0
+
+    [axes]
+    seeds = [0, 1]
+"""
+
+
+@pytest.fixture
+def suite(tmp_path):
+    p = tmp_path / "tiny.toml"
+    p.write_text(textwrap.dedent(SUITE))
+    return load_suite(p)
+
+
+def _scenario(seed=0):
+    return Scenario(
+        work_s=1800.0, bids=(0.4,),
+        instances=(get_instance("m1.xlarge", "eu-west-1"),), horizon_days=2.0, seeds=(seed,),
+    )
+
+
+def _populate(store_dir, seeds=(0, 1)):
+    store = RunStore(store_dir)
+    recs = []
+    for s in seeds:
+        sc = _scenario(s)
+        recs.append(store.put_engine_result(sc, get_engine("auto").run(sc)))
+    return store, recs
+
+
+# -- checksums --------------------------------------------------------------
+
+
+def test_records_carry_payload_checksums_and_load_verifies(tmp_path):
+    store, (rec, _) = _populate(tmp_path / "store")
+    assert rec.sha256 is not None and len(rec.sha256) == 64
+    result = store.load(rec.run_key, scenario=_scenario(0))
+    assert result.cost.shape == (1, 1, 5)  # 1 market x 1 bid x all schemes
+
+
+def test_truncated_payload_raises_typed_error_with_key_and_path(tmp_path):
+    store, (rec, _) = _populate(tmp_path / "store")
+    path = store.root / rec.payload
+    path.write_bytes(path.read_bytes()[: path.stat().st_size // 2])
+    with pytest.raises(StoreCorruptionError) as err:
+        store.load(rec.run_key)
+    assert err.value.run_key == rec.run_key
+    assert err.value.payload == str(path)
+    assert "checksum mismatch" in err.value.reason
+
+
+def test_missing_payload_raises_typed_error(tmp_path):
+    store, (rec, _) = _populate(tmp_path / "store")
+    (store.root / rec.payload).unlink()
+    with pytest.raises(StoreCorruptionError, match="unreadable payload"):
+        store.load(rec.run_key)
+
+
+def test_valid_zip_with_wrong_content_is_caught_by_checksum(tmp_path):
+    store, (rec, _) = _populate(tmp_path / "store")
+    buf = io.BytesIO()
+    np.savez_compressed(buf, junk=np.zeros(3))
+    (store.root / rec.payload).write_bytes(buf.getvalue())
+    with pytest.raises(StoreCorruptionError, match="checksum mismatch"):
+        store.load(rec.run_key)
+
+
+def test_undecodable_payload_without_checksum_is_wrapped(tmp_path):
+    # simulate a pre-checksum index line: strip sha256, corrupt the payload
+    store, (rec, _) = _populate(tmp_path / "store")
+    lines = [json.loads(ln) for ln in store.index_path.read_text().splitlines()]
+    for d in lines:
+        d["sha256"] = None
+    store.index_path.write_text("".join(json.dumps(d) + "\n" for d in lines))
+    (store.root / rec.payload).write_bytes(b"not an npz archive at all")
+    store.reload()
+    with pytest.raises(StoreCorruptionError, match="undecodable payload"):
+        store.load(rec.run_key)
+
+
+# -- self-healing hits ------------------------------------------------------
+
+
+def test_corrupt_cache_hit_self_heals_by_resimulating(tmp_path):
+    store = RunStore(tmp_path / "store")
+    sc = _scenario(0)
+    res, hit = run_stored(sc, store)
+    assert not hit
+    rec = store.records()[0]
+    path = store.root / rec.payload
+    path.write_bytes(b"garbage")
+    with obs.Telemetry() as tel:
+        res2, hit2 = run_stored(sc, store)
+    assert not hit2  # re-simulated, not served corrupt
+    assert tel.counter("store.corrupt_hits") == 1
+    np.testing.assert_array_equal(res2.cost, res.cost)
+    res3, hit3 = run_stored(sc, store)  # healed: next pass hits clean
+    assert hit3
+
+
+# -- verify / repair --------------------------------------------------------
+
+
+def test_verify_clean_store(tmp_path):
+    store, _ = _populate(tmp_path / "store")
+    stats = store.verify()
+    assert stats.ok and stats.n_ok == 2 and not stats.corrupt
+    deep = store.verify(deep=True)
+    assert deep.ok and deep.deep
+
+
+def test_verify_repair_quarantines_and_next_run_resimulates(tmp_path, suite):
+    store = RunStore(tmp_path / "store")
+    first = run_suite(suite, store)
+    assert first.n_misses == 2
+    bad = store.records()[0]
+    path = store.root / bad.payload
+    path.write_bytes(path.read_bytes()[:50])
+
+    with obs.Telemetry() as tel:
+        stats = store.verify(repair=True)
+    assert [k for k, _ in stats.corrupt] == [bad.run_key]
+    assert stats.quarantined == [f"quarantine/{bad.run_key}.npz"]
+    assert tel.counter("store.quarantined") == 1
+    assert (store.root / "quarantine" / f"{bad.run_key}.npz").exists()
+    assert not path.exists()
+    assert store.get(bad.run_key) is None  # index line dropped
+
+    second = run_suite(suite, store)  # heals: exactly the quarantined cell re-runs
+    assert second.n_hits == 1 and second.n_misses == 1
+    assert store.verify().ok
+
+
+def test_verify_repair_handles_missing_payload(tmp_path):
+    store, (rec, _) = _populate(tmp_path / "store")
+    (store.root / rec.payload).unlink()
+    stats = store.verify(repair=True)
+    assert [k for k, _ in stats.corrupt] == [rec.run_key]
+    assert stats.quarantined == []  # nothing to move, line still dropped
+    assert store.get(rec.run_key) is None
+
+
+def test_cli_verify_exit_codes(tmp_path, suite, capsys):
+    store_dir = str(tmp_path / "store")
+    suite_path = str(tmp_path / "tiny.toml")
+    assert suite_main(["run", suite_path, "--store", store_dir]) == 0
+    assert suite_main(["verify", "--store", store_dir]) == 0
+
+    store = RunStore(store_dir)
+    bad = store.records()[0]
+    path = store.root / bad.payload
+    path.write_bytes(path.read_bytes()[:40])
+    assert suite_main(["verify", "--store", store_dir]) == 1
+    out = capsys.readouterr().out
+    assert "corrupt" in out
+
+    assert suite_main(["verify", "--store", store_dir, "--repair"]) == 0
+    assert suite_main(["run", suite_path, "--store", store_dir]) == 0
+    assert suite_main(["verify", "--store", store_dir, "--deep"]) == 0
+
+
+# -- parity -----------------------------------------------------------------
+
+
+def test_parity_of_independent_runs_is_bit_identical(tmp_path, suite):
+    a = RunStore(tmp_path / "a")
+    b = RunStore(tmp_path / "b")
+    run_suite(suite, a)
+    run_suite(suite, b)
+    assert a.parity(b) == {}
+
+
+def test_parity_detects_divergence(tmp_path):
+    a, (rec, _) = _populate(tmp_path / "a")
+    b, _ = _populate(tmp_path / "b")
+    # flip one byte in b's payload and re-checksum the index line so the
+    # divergence is in content, not integrity
+    path = b.root / rec.payload
+    sc = _scenario(99)
+    res = get_engine("auto").run(sc)
+    b.put_engine_result(sc, res)  # extra non-shared key: ignored by parity
+    buf = io.BytesIO()
+    np.savez_compressed(buf, **{"header": np.array(json.dumps({"x": 1}))})
+    path.write_bytes(buf.getvalue())
+    import hashlib
+
+    lines = [json.loads(ln) for ln in b.index_path.read_text().splitlines()]
+    for d in lines:
+        if d["run_key"] == rec.run_key:
+            d["sha256"] = hashlib.sha256(buf.getvalue()).hexdigest()
+    b.index_path.write_text("".join(json.dumps(d) + "\n" for d in lines))
+    b.reload()
+    mismatches = a.parity(b)
+    assert set(mismatches) == {rec.run_key}
+
+
+def test_cli_verify_parity(tmp_path, suite, capsys):
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    suite_path = str(tmp_path / "tiny.toml")
+    assert suite_main(["run", suite_path, "--store", a]) == 0
+    assert suite_main(["run", suite_path, "--store", b]) == 0
+    assert suite_main(["verify", "--store", a, "--parity", b]) == 0
+    assert "bit-identical" in capsys.readouterr().out
+
+
+# -- gc x interrupted flush (crash-safety) ----------------------------------
+
+
+def test_gc_reclaims_stale_tmp_left_by_interrupted_flush(tmp_path):
+    store = RunStore(tmp_path / "store")
+    sc = _scenario(0)
+    plan = faults.FaultPlan([faults.FaultRule(site="store.payload_write", kind="raise")], seed=0)
+    with plan:
+        with pytest.raises(faults.InjectedFault):
+            store.put_engine_result(sc, get_engine("auto").run(sc))
+    stale = list(store.runs_dir.glob("*.tmp.npz"))
+    assert len(stale) == 1  # the crash left a half-written tmp file
+    assert len(store) == 0  # and no index entry
+
+    stats = store.gc()
+    assert not list(store.runs_dir.glob("*.tmp.npz"))
+    assert len(stats.payloads_deleted) == 1
+
+    # the cell is simply missing afterwards: a rerun stores it cleanly
+    res, hit = run_stored(sc, store)
+    assert not hit and store.verify().ok
+
+
+def test_gc_compacts_to_last_line_wins_after_resupersede(tmp_path):
+    store = RunStore(tmp_path / "store")
+    sc = _scenario(0)
+    r1 = store.put_engine_result(sc, get_engine("auto").run(sc))
+    r2 = store.put_engine_result(sc, get_engine("auto").run(sc))
+    assert r1.run_key == r2.run_key
+    assert len(store.index_path.read_text().splitlines()) == 2
+    store.gc()
+    lines = store.index_path.read_text().splitlines()
+    assert len(lines) == 1
+    assert json.loads(lines[0])["created_at"] == r2.created_at  # survivor = newest
+    assert store.load(r2.run_key) is not None
+
+
+def test_gc_interrupted_mid_replace_leaves_loadable_index(tmp_path, monkeypatch):
+    store = RunStore(tmp_path / "store")
+    for s in (0, 1):
+        sc = _scenario(s)
+        store.put_engine_result(sc, get_engine("auto").run(sc))
+        store.put_engine_result(sc, get_engine("auto").run(sc))  # superseded lines
+    keys = {r.run_key for r in store.records()}
+
+    real_replace = os.replace
+    calls = {"n": 0}
+
+    def exploding_replace(src, dst):
+        if str(dst).endswith("index.jsonl"):
+            calls["n"] += 1
+            raise OSError("simulated crash mid-replace")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr("repro.suite.store.os.replace", exploding_replace)
+    with pytest.raises(OSError, match="mid-replace"):
+        store.gc()
+    monkeypatch.undo()
+    assert calls["n"] == 1
+
+    # os.replace is atomic: the interrupted gc left the *old* index intact
+    fresh = RunStore(tmp_path / "store")
+    assert {r.run_key for r in fresh.records()} == keys
+    for rec in fresh.records():
+        fresh.load(rec.run_key)
+    assert fresh.verify(deep=True).ok
+    fresh.gc()  # a rerun completes the compaction
+    assert len(fresh.index_path.read_text().splitlines()) == 2
+
+
+def test_index_append_fault_leaves_orphan_payload_for_gc(tmp_path):
+    store = RunStore(tmp_path / "store")
+    sc = _scenario(0)
+    plan = faults.FaultPlan([faults.FaultRule(site="store.index_append")], seed=0)
+    with plan:
+        with pytest.raises(faults.InjectedFault):
+            store.put_engine_result(sc, get_engine("auto").run(sc))
+    # payload committed, index append failed: an orphan, never a torn entry
+    assert len(list(store.runs_dir.glob("*.npz"))) == 1
+    fresh = RunStore(tmp_path / "store")
+    assert len(fresh) == 0
+    stats = fresh.gc()
+    assert len(stats.payloads_deleted) == 1

@@ -1,0 +1,126 @@
+"""SpotTrainer degraded recovery: corrupt checkpoints fall back, never crash.
+
+Uses a dummy scalar train step (no model stack, no jit) so the recovery
+control flow is exercised in milliseconds: params is a float64 counter that
+increments per step, so "which checkpoint was restored" is directly
+readable off the final state.
+"""
+
+import numpy as np
+import pytest
+
+from repro import faults, obs
+from repro.core import PriceTrace, SimParams
+from repro.faults import FaultPlan, FaultRule
+from repro.train.spot_trainer import SpotTrainer, SpotTrainerConfig
+
+
+def _trace(spike_hours=((3, 4), (6, 7))):
+    t = np.arange(0, 3600.0 * 24 + 300, 300.0)
+    p = np.full(len(t) - 1, 0.1)
+    for lo, hi in spike_hours:
+        p[(t[:-1] >= 3600 * lo) & (t[:-1] < 3600 * hi)] = 2.0  # out-of-bid window
+    return PriceTrace(times=t, prices=p)
+
+
+def _step(params, opt, batch):
+    return params + 1, opt, {"loss": float(params)}
+
+
+class _Data:
+    """Minimal TokenStream stand-in with resumable state."""
+
+    def __init__(self):
+        self.i = 0
+
+    def __next__(self):
+        self.i += 1
+        return self.i
+
+    def state_dict(self):
+        return {"i": self.i}
+
+    def load_state_dict(self, s):
+        self.i = s["i"]
+
+
+def _trainer(tmp_path, trace, max_steps=110):
+    cfg = SpotTrainerConfig(
+        a_bid=0.5, ckpt_dir=str(tmp_path / "ckpt"), max_steps=max_steps, step_time_s=300.0,
+        sim=SimParams(t_c=60.0, t_w=60.0, t_r=60.0), async_io=False, keep=4,
+    )
+    return SpotTrainer(
+        cfg, train_step=_step,
+        init_params=lambda: (np.float64(0.0), np.float64(0.0)),
+        data=_Data(), trace=trace,
+    )
+
+
+def test_clean_two_preemption_run_baseline(tmp_path):
+    rep = _trainer(tmp_path, _trace()).run()
+    assert rep.completed and rep.n_preemptions == 2
+    assert rep.n_restores == 2 and rep.restore_fallbacks == 0
+
+
+def test_corrupt_latest_falls_back_to_older_checkpoint(tmp_path):
+    # the clean run checkpoints at steps 44 and 77 (decision points before the
+    # two terminations); corrupt the restore of 77 so the relaunch falls back
+    tr = _trainer(tmp_path, _trace())
+    plan = FaultPlan([FaultRule(site="ckpt.restore", key="77")], seed=0)
+    with plan, obs.Telemetry() as tel:
+        rep = tr.run()
+    assert rep.completed and rep.steps_done == tr.cfg.max_steps
+    assert rep.restore_fallbacks == 1
+    assert rep.n_restores == 2  # both relaunches still restored *something*
+    assert tel.counter("trainer.restore_fallbacks") == 1
+    assert tel.counter("trainer.restores") == 2
+    assert [a.key for a in plan.log] == ["77"]
+    # the damaged snapshot was quarantined as evidence, the survivor kept
+    assert tr.mgr.steps() == [44]
+    import os
+
+    assert os.path.isdir(os.path.join(tr.mgr.root, "step_000000077.corrupt"))
+
+
+def test_every_checkpoint_corrupt_restarts_from_scratch(tmp_path):
+    tr = _trainer(tmp_path, _trace())
+    plan = FaultPlan([FaultRule(site="ckpt.restore", p=1.0, max_fires=99)], seed=0)
+    with plan, obs.Telemetry() as tel:
+        rep = tr.run()
+    # the run survives total checkpoint loss: restart from step 0, repay all
+    # the work, and still complete inside the horizon
+    assert rep.completed and rep.steps_done == tr.cfg.max_steps
+    assert rep.n_restores == 0
+    assert rep.restore_fallbacks >= 1
+    assert tel.counter("trainer.restore_fallbacks") == rep.restore_fallbacks
+
+
+def test_scratch_restart_resets_data_iterator_consistently(tmp_path):
+    tr = _trainer(tmp_path, _trace(spike_hours=((3, 4),)))
+    plan = FaultPlan([FaultRule(site="ckpt.restore", p=1.0, max_fires=99)], seed=0)
+    with plan:
+        rep = tr.run()
+    assert rep.completed
+    assert rep.steps_done == tr.cfg.max_steps
+    # the invariant the reset protects: data position tracks the step counter
+    # (both restarted from zero together), never the discarded pre-preemption
+    # progress — fresh params with a stale iterator would skew training
+    assert tr.data.i == rep.steps_done
+    assert len(rep.losses) > rep.steps_done  # repaid work stays in the log
+
+
+def test_no_plan_means_no_fallbacks_and_identical_report_surface(tmp_path):
+    rep = _trainer(tmp_path, _trace()).run()
+    assert rep.restore_fallbacks == 0
+    assert faults.current() is faults.NULL
+
+
+def test_report_losses_match_executed_steps(tmp_path):
+    tr = _trainer(tmp_path, _trace())
+    plan = FaultPlan([FaultRule(site="ckpt.restore", key="77")], seed=0)
+    with plan:
+        rep = tr.run()
+    # fallback to step 44 repays 77-44 extra steps on top of the clean run's
+    # repaid work; every executed step logged a loss
+    clean = _trainer(tmp_path / "clean", _trace()).run()
+    assert len(rep.losses) == len(clean.losses) + (77 - 44)
