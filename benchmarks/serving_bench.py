@@ -1,0 +1,186 @@
+"""Serving engine benchmark: lockstep batch grid vs the scalar reference.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--quick]
+                    [--min-speedup 10] [--repeats 3]
+
+Runs the (policy x bid-margin x seed) serving grid on a capacity-limited
+market — the contended case, where per-period auction clearing dominates —
+through both backends, asserts the results are **bit-identical** before
+timing anything (never time a wrong answer), then times each backend
+best-of-``--repeats`` after a warm-up pass that populates the shared input
+cache (traces, free depths, hazard factors), so the comparison measures the
+control loops, not trace generation.  Writes ``BENCH_serving.json``, appends
+to ``BENCH_history.jsonl``, and fails (exit 1) unless the batch backend
+clears ``--min-speedup`` — the CI gate for the lockstep serving engine.
+
+Results also persist through the content-addressed run store (``--store``;
+``--no-store`` disables), so a rerun of an unchanged grid is a cache hit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import logging
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+from repro import configure_logging
+from repro.serving import ServingResult, ServingScenario, run_serving
+from repro.suite import DEFAULT_ROOT, RunStore
+
+log = logging.getLogger("repro.bench.serving")
+
+
+def bench_scenario(quick: bool) -> ServingScenario:
+    """The contended serving grid the backend comparison runs on."""
+    if quick:
+        return ServingScenario(
+            base_rps=1500.0,
+            flash_crowds=1,
+            horizon_days=2.0,
+            seeds=(0, 1, 2, 3),
+            bid_margins=(0.5, 0.7, 1.1),
+            capacity=12,
+            max_spot=16,
+        )
+    return ServingScenario(
+        base_rps=1500.0,
+        flash_crowds=2,
+        horizon_days=4.0,
+        seeds=(0, 1, 2, 3, 4, 5, 6, 7),
+        bid_margins=(0.5, 0.7, 1.1),
+        capacity=12,
+        max_spot=16,
+    )
+
+
+def _results_equal(a: ServingResult, b: ServingResult) -> bool:
+    """Bit-exact result equality across every array and axis label."""
+    for f in dataclasses.fields(ServingResult):
+        if f.name in ("engine", "wall_s"):
+            continue
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        same = np.array_equal(x, y, equal_nan=True) if isinstance(x, np.ndarray) else x == y
+        if not same:
+            log.error("parity mismatch in ServingResult.%s", f.name)
+            return False
+    return True
+
+
+def _time_engine(scenario: ServingScenario, engine: str, repeats: int):
+    """(best wall over ``repeats``, last result) after one warm-up run."""
+    result = run_serving(scenario, engine=engine)  # warm-up
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = run_serving(scenario, engine=engine)
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def _slo_table(res: ServingResult) -> str:
+    lines = [f"{'policy':<10} {'margin':>6}  {'avail':>7} {'viol h':>7} {'$/Mreq':>7} {'preempt':>7}"]
+    for pi, policy in enumerate(res.policies):
+        for mi, margin in enumerate(res.bid_margins):
+            lines.append(
+                f"{policy:<10} {margin:>6.2f}  "
+                f"{res.availability[pi, mi].mean():>7.4f} "
+                f"{res.slo_violation_s[pi, mi].mean() / 3600.0:>7.2f} "
+                f"{np.nanmean(res.cost_per_mreq[pi, mi]):>7.3f} "
+                f"{int(res.n_preempted[pi, mi].sum()):>7d}"
+            )
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    # engine_bench (sibling script on sys.path) owns the history-log helpers
+    from engine_bench import append_history, git_sha
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI-sized grid")
+    ap.add_argument(
+        "--min-speedup", type=float, default=10.0,
+        help="fail unless the batch backend clears this factor over reference",
+    )
+    ap.add_argument("--repeats", type=int, default=3, help="best-of-N timing")
+    ap.add_argument("--out", default="BENCH_serving.json", help="benchmark record path")
+    ap.add_argument("--history", default="BENCH_history.jsonl", help="history log to append to")
+    ap.add_argument("--store", default=DEFAULT_ROOT, help="run-store root directory")
+    ap.add_argument(
+        "--no-store", action="store_true", help="do not persist the batch result to the store"
+    )
+    args = ap.parse_args(argv)
+    configure_logging()
+
+    scenario = bench_scenario(args.quick)
+    walls: dict[str, float] = {}
+    results: dict[str, ServingResult] = {}
+    for engine in ("reference", "batch"):
+        walls[engine], results[engine] = _time_engine(scenario, engine, args.repeats)
+
+    parity_ok = _results_equal(results["reference"], results["batch"])
+    if not parity_ok:
+        log.error("FAIL: backend results diverge; not timing a wrong answer")
+
+    n_cells = scenario.n_cells
+    speedup = walls["reference"] / walls["batch"]
+    record = {
+        "grid": {
+            "n_policies": len(scenario.policies),
+            "n_margins": len(scenario.bid_margins),
+            "n_seeds": len(scenario.seeds),
+            "n_cells": n_cells,
+            "n_periods": scenario.n_periods,
+            "n_types": len(scenario.spot_types),
+            "capacity": scenario.capacity,
+            "horizon_days": scenario.horizon_days,
+            "quick": bool(args.quick),
+        },
+        "backends": {
+            "reference": {"wall_s": walls["reference"], "cells_per_s": n_cells / walls["reference"]},
+            "batch": {
+                "wall_s": walls["batch"],
+                "cells_per_s": n_cells / walls["batch"],
+                "speedup": speedup,
+            },
+        },
+        "parity_ok": parity_ok,
+    }
+    for engine in ("reference", "batch"):
+        log.info(
+            "%-10s wall %.3fs (%.1f cells/s)%s", engine, walls[engine],
+            n_cells / walls[engine], f"  {speedup:.1f}x" if engine == "batch" else "",
+        )
+    log.info("\n%s", _slo_table(results["batch"]))
+
+    pathlib.Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+    log.info("wrote %s", args.out)
+    append_history(args.history, record, git_sha())
+
+    if not args.no_store:
+        rec = RunStore(args.store).put_serving_result(
+            scenario, results["batch"], suite="serving_bench",
+            cell="quick" if args.quick else "full",
+        )
+        log.info("stored batch grid as %s", rec.run_key[:12])
+
+    failures = []
+    if not parity_ok:
+        failures.append("backend parity")
+    if speedup < args.min_speedup:
+        failures.append(f"batch speedup {speedup:.1f}x < {args.min_speedup:.0f}x")
+    if failures:
+        log.error("FAIL: %s", "; ".join(failures))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

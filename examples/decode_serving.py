@@ -1,7 +1,7 @@
 """Serving example: prefill + batched greedy decode with a KV cache,
 including the RecurrentGemma hybrid (RG-LRU state + circular window cache).
 
-Run:  PYTHONPATH=src python examples/serve.py
+Run:  PYTHONPATH=src python examples/decode_serving.py
 """
 
 import jax

@@ -3,8 +3,10 @@
 The chaos-engineering counterpart of :mod:`repro.obs` — a LIFO-activated
 :class:`FaultPlan` (no-op :data:`NULL` when nothing is active) fires seeded
 failures at named sites threaded through the control plane's I/O and
-execution paths (``suite.worker``, ``store.payload_write``,
-``store.index_append``, ``ckpt.save``, ``ckpt.restore``), so the recovery
+execution paths (the :data:`SITES` registry: ``suite.worker``,
+``store.payload_write``, ``store.index_append``, ``ckpt.save``,
+``ckpt.restore``, plus subsystem sites like ``serving.replica_boot`` /
+``serving.scale_decision`` added via :func:`register_site`), so the recovery
 machinery — store verify/repair, runner retries and watchdog, trainer
 checkpoint fallback — is tested under the same "may become unavailable at
 any time without any notice" regime the paper assumes of the infrastructure.
@@ -14,6 +16,7 @@ See docs/resilience.md.
 from repro.faults.plan import (
     ENV_VAR,
     NULL,
+    SITES,
     FaultAction,
     FaultPlan,
     FaultRule,
@@ -22,11 +25,13 @@ from repro.faults.plan import (
     current,
     load_plan,
     plan_from_env,
+    register_site,
 )
 
 __all__ = [
     "ENV_VAR",
     "NULL",
+    "SITES",
     "FaultAction",
     "FaultPlan",
     "FaultRule",
@@ -35,4 +40,5 @@ __all__ = [
     "current",
     "load_plan",
     "plan_from_env",
+    "register_site",
 ]

@@ -25,13 +25,20 @@ fires on its first ``max_fires`` hits.  A retried operation re-hits the same
 ``(site, key)`` and stops failing once the rule's budget for that key is
 spent — exactly the transient-then-recovered shape retry loops exist for.
 
-**Sites** (threaded through the I/O and execution hot spots)::
+**Sites** are registered in :data:`SITES` (name -> behavior summary); the
+core set is threaded through the I/O and execution hot spots::
 
     suite.worker        one hit per cell-simulation attempt (raise | hang)
     store.payload_write one hit per RunStore payload flush  (raise | torn)
     store.index_append  one hit per index line append       (raise)
     ckpt.save           one hit per checkpoint write        (raise | torn)
     ckpt.restore        one hit per checkpoint restore      (raise)
+
+and subsystems contribute theirs at import time via :func:`register_site`
+(:mod:`repro.serving` adds ``serving.replica_boot`` and
+``serving.scale_decision``).  :func:`load_plan` warns about rules naming
+sites nobody registered — the typo guard that keeps a committed chaos
+schedule from silently testing nothing.
 
 The zero-overhead-when-off contract matches telemetry: with no plan
 activated every site costs one global read plus a no-op method call, and no
@@ -49,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import logging
 import os
 import pathlib
 import threading
@@ -58,6 +66,7 @@ from repro.obs import telemetry as obs
 
 __all__ = [
     "NULL",
+    "SITES",
     "FaultAction",
     "FaultPlan",
     "FaultRule",
@@ -66,12 +75,42 @@ __all__ = [
     "current",
     "load_plan",
     "plan_from_env",
+    "register_site",
 ]
+
+log = logging.getLogger("repro.faults")
 
 #: Environment variable naming a fault-schedule file to activate ambiently.
 ENV_VAR = "REPRO_FAULTS"
 
 _KINDS = ("raise", "torn", "hang")
+
+#: Every known injection site: name -> one-line behavior summary.  The core
+#: control-plane sites live here; subsystems register theirs at import time
+#: (:func:`register_site`), and :func:`load_plan` warns about schedule rules
+#: naming sites nobody registered.
+SITES: dict[str, str] = {
+    "suite.worker": "one hit per cell-simulation attempt (raise | hang)",
+    "store.payload_write": "one hit per RunStore payload flush (raise | torn)",
+    "store.index_append": "one hit per index line append (raise)",
+    "ckpt.save": "one hit per checkpoint write (raise | torn)",
+    "ckpt.restore": "one hit per checkpoint restore (raise)",
+}
+
+
+def register_site(site: str, description: str) -> None:
+    """Declare an injection site (idempotent; re-registration must agree).
+
+    Registration is documentation plus the :func:`load_plan` typo guard —
+    firing an unregistered site still works, so ad-hoc experiments need no
+    ceremony, but committed schedules get validated against this dict.
+    """
+    existing = SITES.get(site)
+    if existing is not None and existing != description:
+        raise ValueError(
+            f"fault site {site!r} already registered with a different description"
+        )
+    SITES[site] = description
 
 
 @dataclasses.dataclass(frozen=True)
@@ -279,6 +318,12 @@ def _plan_from_dict(d: Mapping[str, Any]) -> FaultPlan:
         if unknown:
             raise ValueError(f"unknown fault-rule keys {sorted(unknown)} in {raw}")
         rules.append(FaultRule(**raw))
+    unregistered = sorted({r.site for r in rules} - set(SITES))
+    if unregistered:
+        log.warning(
+            "fault schedule names unregistered sites %s (typo? known sites: %s)",
+            unregistered, sorted(SITES),
+        )
     return FaultPlan(rules, seed=int(d.get("seed", 0)))
 
 

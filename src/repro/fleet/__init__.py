@@ -44,7 +44,7 @@ from repro.fleet.sweep import (
     select_types,
     summarize,
 )
-from repro.fleet.workload import Job, Workload
+from repro.fleet.workload import Job, Workload, poisson_arrivals, rate_arrivals
 
 __all__ = [
     "Algorithm1Policy",
@@ -67,6 +67,8 @@ __all__ = [
     "Workload",
     "batched_fleet_traces",
     "default_policies",
+    "poisson_arrivals",
+    "rate_arrivals",
     "select_types",
     "summarize",
 ]

@@ -156,6 +156,7 @@ def clear_periods(
     free: np.ndarray,
     capacity: int,
     params: MarketParams,
+    ladder: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Vectorized :func:`clear_stack` over every period at once.
 
@@ -165,6 +166,17 @@ def clear_periods(
     one masked sort along the bidder axis plus one ladder comparison, the
     "sort/cumsum over the bid stack per period" that keeps batch clearing a
     single program.
+
+    ``ladder`` optionally supplies the ``(n_bidders, n_periods)`` marginal
+    price ladder precomputed by the caller.  It must hold exactly
+    ``marginal_price(base, free, rank)`` for every rank a bidder can clear
+    at — callers that know their active depth is bounded (the serving grid:
+    at most ``max_spot`` homogeneous lanes per period) may fill deeper rungs
+    with ``+inf``, since an inactive ``-inf`` lane can never meet any rung.
+    The ladder depends only on the background state, not the bids, so one
+    vectorized :func:`marginal_price` over a whole horizon can feed every
+    per-period call — this is what keeps lockstep serving clearing off the
+    ladder-recomputation hot path.
     """
     n, P = active.shape
     tel = _obs_current()
@@ -173,8 +185,9 @@ def clear_periods(
         tel.count("market.cleared_period_cells", P)
     stack = np.where(active, np.asarray(bids, dtype=np.float64)[:, None], -np.inf)
     b_sorted = -np.sort(-stack, axis=0)  # (n, P) descending per period
-    ranks = np.arange(1, n + 1)[:, None]
-    ladder = marginal_price(base[None, :], free[None, :], ranks, capacity, params)
+    if ladder is None:
+        ranks = np.arange(1, n + 1)[:, None]
+        ladder = marginal_price(base[None, :], free[None, :], ranks, capacity, params)
     n_served = (b_sorted >= ladder).sum(axis=0)
     price = np.where(
         n_served > 0,

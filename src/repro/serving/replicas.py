@@ -1,0 +1,131 @@
+"""The replica tier: heterogeneous throughput, boot/drain pipelines, billing.
+
+A serving fleet mixes a fixed **on-demand floor** (always up, billed at the
+on-demand price) with an elastic **spot tier** of one or more instance
+types.  Per-replica throughput derives from the same reference-ECU scaling
+that :mod:`repro.fleet.workload` uses for batch jobs — the paper's m1.xlarge
+(8 ECU) is the reference, so a c1.xlarge (20 ECU) replica serves 2.5x the
+requests of the reference replica.
+
+Everything here is *shared arithmetic*: small elementwise helpers that both
+serving backends call with the same operand order — the scalar reference
+engine passes per-cell scalars / ``(T,)`` vectors, the lockstep batch engine
+passes ``(n_cells, T)`` arrays — so per-period capacity, billing, and target
+counts are bit-identical across backends by construction (the same
+structural trick :mod:`repro.engine.kernels` uses for survival math).
+
+Boot and drain delays are modeled as integer-period shift registers: a
+scale-out lands in the last stage of the boot pipe and joins the running
+set ``boot periods`` later (booting replicas neither serve, nor bid, nor
+bill — billing starts in service); a scale-in first cancels not-yet-booted
+replicas (latest stage first), then schedules connection-draining removals
+that take effect ``drain periods`` later (draining replicas keep serving,
+bidding, and billing until removed).  A preemption may beat a scheduled
+drain to the replica; the matured drain then removes ``min(pending,
+running)`` — deterministic, and identical in both backends.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.market import InstanceType
+
+__all__ = [
+    "REFERENCE_ECU",
+    "replica_rps",
+    "advance_pipe",
+    "cancel_latest",
+    "tier_capacity",
+    "period_cost",
+    "target_counts",
+]
+
+#: The paper's reference instance (m1.xlarge) throughput in ECU; work and
+#: request throughput both scale as ``compute_units / REFERENCE_ECU``
+#: (cf. ``repro.fleet.workload`` and ``repro.core.provision.algorithm1``).
+REFERENCE_ECU = 8.0
+
+
+def replica_rps(it: InstanceType, rps_capacity_ref: float) -> float:
+    """Steady-state requests/s one replica of ``it`` can serve.
+
+    ``rps_capacity_ref`` is the throughput of one reference (8-ECU) replica;
+    heterogeneous types scale linearly in ECU, the same first-order model
+    the paper applies to batch work.
+    """
+    return rps_capacity_ref * it.compute_units / REFERENCE_ECU
+
+
+def advance_pipe(pipe: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Advance a ``(..., K)`` shift register one period.
+
+    Returns ``(matured, shifted)``: stage 0 pops out (matured), everything
+    else moves one stage closer, and the freshly vacated last stage is zero
+    (new entries land there via ``shifted[..., -1] += n``).
+    """
+    matured = pipe[..., 0].copy()
+    shifted = np.concatenate([pipe[..., 1:], np.zeros_like(pipe[..., :1])], axis=-1)
+    return matured, shifted
+
+
+def cancel_latest(pipe: np.ndarray, n: np.ndarray) -> np.ndarray:
+    """Cancel up to ``n`` in-flight entries from ``pipe``, latest stage first.
+
+    Mutates ``pipe`` in place and returns how many were cancelled (the
+    remainder of a scale-in must be drained from the running set instead).
+    Latest-first means a scale-out immediately followed by a scale-in is a
+    no-op, not a boot-then-drain churn.
+    """
+    cancelled = np.zeros_like(n)
+    for k in range(pipe.shape[-1] - 1, -1, -1):
+        take = np.minimum(pipe[..., k], n - cancelled)
+        pipe[..., k] -= take
+        cancelled = cancelled + take
+    return cancelled
+
+
+def tier_capacity(od_rps, n_run: np.ndarray, rps: np.ndarray):
+    """Serving capacity in rps: on-demand floor + running spot replicas.
+
+    ``n_run`` is ``(..., T)`` integer counts, ``rps`` the ``(T,)``
+    per-replica throughputs.  Accumulated type by type in index order so
+    every backend performs the identical float64 addition sequence.
+    """
+    cap = od_rps + np.zeros(n_run.shape[:-1])
+    for t in range(len(rps)):
+        cap = cap + n_run[..., t] * rps[t]
+    return cap
+
+
+def period_cost(n_od: int, od_price: float, n_spot: np.ndarray, prices: np.ndarray, period_h: float):
+    """Dollars billed over one control period.
+
+    On-demand replicas pay the on-demand price; each *running* spot replica
+    pays its type's cleared spot price (booting replicas are not billed —
+    see the module docstring).  Type-ordered accumulation, as in
+    :func:`tier_capacity`.
+    """
+    cost = n_od * od_price * period_h
+    for t in range(n_spot.shape[-1]):
+        cost = cost + n_spot[..., t] * prices[..., t] * period_h
+    return cost
+
+
+def target_counts(
+    desired_rps, rps: np.ndarray, factor: np.ndarray, max_spot: int
+) -> np.ndarray:
+    """Per-type replica targets for a desired total spot capacity.
+
+    The desired rps is split evenly across the spot types (a diversification
+    baseline: correlated price spikes cannot take out the whole tier), then
+    converted to replica counts with ``ceil``; ``factor`` (``(..., T)``,
+    ``>= 1``) over-provisions hazard-aware policies by the expected
+    preemption loss.  Counts are clamped to ``[0, max_spot]`` per type.
+    """
+    share = desired_rps / len(rps)
+    out = np.empty(np.shape(factor), dtype=np.int64)
+    for t in range(len(rps)):
+        n = np.ceil(share * factor[..., t] / rps[t])
+        out[..., t] = np.clip(n, 0, max_spot).astype(np.int64)
+    return out

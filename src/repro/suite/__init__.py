@@ -31,6 +31,7 @@ from repro.suite.runner import (
     RetryPolicy,
     SuiteReport,
     run_fleet_stored,
+    run_serving_stored,
     run_stored,
     run_suite,
 )
@@ -70,6 +71,7 @@ __all__ = [
     "render_trends",
     "run_fleet_stored",
     "run_key",
+    "run_serving_stored",
     "run_stored",
     "run_suite",
     "scenario_hash",

@@ -15,7 +15,7 @@ interrupted sweep), simulating up to ``--jobs`` cells concurrently (store
 writes stay on the main thread); ``--dry-run`` prints the expanded cell
 list with per-field layer provenance and simulates nothing;
 ``--expect-all-hits`` fails (exit 1) unless the whole pass was served from
-the store with zero ``engine.run`` telemetry spans — the CI regression
+the store with zero ``engine.run``/``serving.run`` spans — the CI regression
 contract for "re-running an unchanged suite performs zero simulation".
 A crashing or hung cell no longer aborts the pass: it retries under
 ``--retries``/``--cell-timeout`` (see :class:`repro.suite.RetryPolicy`),
@@ -87,15 +87,15 @@ def _cmd_run(args: argparse.Namespace) -> int:
         )
         return 1
     if args.expect_all_hits:
-        n_runs = len(tel.find_spans("engine.run"))
+        n_runs = len(tel.find_spans("engine.run")) + len(tel.find_spans("serving.run"))
         if report.n_misses or report.n_skipped or n_runs:
             log.error(
-                "expected a fully cached pass: %d misses, %d skipped, %d engine.run spans",
+                "expected a fully cached pass: %d misses, %d skipped, %d engine/serving run spans",
                 report.n_misses, report.n_skipped, n_runs,
             )
             return 1
         log.info(
-            "all %d cells served from the store (suite.cache_hit=%d, zero engine.run spans)",
+            "all %d cells served from the store (suite.cache_hit=%d, zero simulation spans)",
             len(report.outcomes), int(tel.counter("suite.cache_hit")),
         )
     return 0
@@ -194,7 +194,7 @@ def main(argv: list[str] | None = None) -> int:
     )
     p_run.add_argument(
         "--expect-all-hits", action="store_true",
-        help="fail unless every cell was a cache hit with zero engine.run spans",
+        help="fail unless every cell was a cache hit with zero simulation spans",
     )
     p_run.add_argument(
         "--jobs", type=int, default=1, metavar="N",

@@ -26,14 +26,16 @@ parallel path, under a wall-clock watchdog that abandons cells stuck past
 cell is flushed as usual; the CLI exits nonzero and lists the failures, and
 the next pass re-simulates exactly the failed cells.  Corrupt cache hits
 (:class:`~repro.suite.store.StoreCorruptionError` on load) self-heal in
-:func:`run_stored` / :func:`run_fleet_stored` by re-simulating.  Injection
+:func:`run_stored` / :func:`run_fleet_stored` / :func:`run_serving_stored`
+by re-simulating.  Injection
 sites for :mod:`repro.faults`: ``suite.worker`` fires once per simulation
 attempt (``raise`` = worker crash, ``hang`` = stall), and the store's write
 sites are exercised through `_flush_cell`.
 
-:func:`run_stored` / :func:`run_fleet_stored` are the single-scenario
-primitives (used by ``benchmarks/paper_figs.py`` / ``fleet_study.py``):
-cache-or-run one scenario, returning the result either way.
+:func:`run_stored` / :func:`run_fleet_stored` / :func:`run_serving_stored`
+are the single-scenario primitives (used by ``benchmarks/paper_figs.py`` /
+``fleet_study.py`` / ``serving_bench.py``): cache-or-run one scenario,
+returning the result either way.
 """
 
 from __future__ import annotations
@@ -48,6 +50,7 @@ from repro.engine.base import EngineResult, get_engine
 from repro.engine.fleetgrid import FleetGridResult, run_fleet
 from repro.engine.scenario import FleetScenario, Scenario
 from repro.obs import telemetry as obs
+from repro.serving import ServingResult, ServingScenario, run_serving
 from repro.suite.hashing import run_key
 from repro.suite.spec import Suite, SuiteCell
 from repro.suite.store import RunRecord, RunStore, StoreCorruptionError
@@ -59,6 +62,7 @@ __all__ = [
     "run_suite",
     "run_stored",
     "run_fleet_stored",
+    "run_serving_stored",
 ]
 
 log = logging.getLogger("repro.suite.runner")
@@ -196,6 +200,8 @@ def _simulate_cell(cell: SuiteCell, eng_id: str, engine: str | None, suite_name:
     with tel.span("suite.cell", suite=suite_name, cell=cell.label, engine=eng_id):
         if cell.kind == "fleet":
             return run_fleet(cell.scenario)
+        if cell.kind == "serving":
+            return run_serving(cell.scenario, engine=engine or cell.engine)
         return get_engine(engine or cell.engine).run(cell.scenario)
 
 
@@ -230,6 +236,8 @@ def _flush_cell(store: RunStore, suite_name: str, cell: SuiteCell, key: str, res
     thread-safe) and cross-check the content-addressed key."""
     if cell.kind == "fleet":
         rec = store.put_fleet_result(cell.scenario, result, suite=suite_name, cell=cell.label)
+    elif cell.kind == "serving":
+        rec = store.put_serving_result(cell.scenario, result, suite=suite_name, cell=cell.label)
     else:
         rec = store.put_engine_result(cell.scenario, result, suite=suite_name, cell=cell.label)
     if rec.run_key != key:
@@ -480,3 +488,32 @@ def run_fleet_stored(
     grid = run_fleet(scenario)
     store.put_fleet_result(scenario, grid, suite=suite, cell=cell)
     return grid, False
+
+
+def run_serving_stored(
+    scenario: ServingScenario,
+    store: RunStore,
+    engine: str = "auto",
+    *,
+    suite: str | None = None,
+    cell: str | None = None,
+) -> tuple[ServingResult, bool]:
+    """Cache-or-run one serving scenario; returns ``(result, was_cache_hit)``.
+    Corrupt cache hits self-heal by re-simulating, as in :func:`run_stored`.
+    """
+    eng_id = _ENGINE_ALIAS.get(engine, engine)
+    key = run_key(scenario, eng_id)
+    tel = obs.current()
+    if store.has(key):
+        try:
+            result = store.load(key)
+        except StoreCorruptionError as e:
+            tel.count("store.corrupt_hits")
+            log.warning("re-simulating corrupt cache hit: %s", e)
+        else:
+            tel.count("suite.cache_hit")
+            return result, True
+    tel.count("suite.cache_miss")
+    res = run_serving(scenario, engine=engine)
+    store.put_serving_result(scenario, res, engine=eng_id, suite=suite, cell=cell)
+    return res, False

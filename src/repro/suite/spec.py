@@ -5,7 +5,7 @@ data::
 
     [suite]
     name = "paper_fig7"
-    kind = "scenario"          # or "fleet"
+    kind = "scenario"          # or "fleet" / "serving"
     engine = "auto"            # any repro.engine backend id
     # extends = "common.toml"  # optional deeper base layer(s)
 
@@ -51,12 +51,13 @@ from repro.core.provision import SLA
 from repro.core.schemes import Scheme, SimParams
 from repro.engine.scenario import FleetScenario, Scenario
 from repro.market import MarketParams
+from repro.serving import ServingScenario
 from repro.suite.layers import Layer, Resolved, merge_layers, nest_dotted
 
 __all__ = ["Suite", "SuiteCell", "load_suite", "build_scenario"]
 
 _TOP_LEVEL_KEYS = {"suite", "base", "axes", "cells"}
-_KINDS = ("scenario", "fleet")
+_KINDS = ("scenario", "fleet", "serving")
 
 #: Spec keys accepted for kind="scenario" (besides the layered "engine").
 SCENARIO_KEYS = {
@@ -93,6 +94,38 @@ FLEET_KEYS = {
     "market",
     "bid_policy",
     "rebid_markup",
+}
+
+#: Spec keys accepted for kind="serving" (see repro.serving.ServingScenario).
+SERVING_KEYS = {
+    "base_rps",
+    "diurnal_amplitude",
+    "diurnal_period_s",
+    "diurnal_phase_s",
+    "flash_crowds",
+    "flash_magnitude",
+    "flash_duration_s",
+    "jitter",
+    "horizon_days",
+    "control_period_s",
+    "seeds",
+    "on_demand_replicas",
+    "on_demand_type",
+    "spot_types",
+    "rps_capacity_ref",
+    "boot_delay_s",
+    "drain_delay_s",
+    "max_spot",
+    "policies",
+    "target_utilization",
+    "threshold_hi",
+    "threshold_lo",
+    "threshold_step",
+    "hazard_window_s",
+    "bid_margins",
+    "capacity",
+    "market",
+    "slo_p99_s",
 }
 
 
@@ -174,7 +207,7 @@ def _instance(spec: Any) -> InstanceType:
     return get_instance(*parts)
 
 
-def build_scenario(kind: str, values: Mapping[str, Any]) -> Scenario | FleetScenario:
+def build_scenario(kind: str, values: Mapping[str, Any]) -> Scenario | FleetScenario | ServingScenario:
     """Materialize one cell's merged spec values into a frozen scenario.
 
     Only keys present in ``values`` are passed through — everything else
@@ -184,6 +217,8 @@ def build_scenario(kind: str, values: Mapping[str, Any]) -> Scenario | FleetScen
     """
     if kind == "fleet":
         return _build_fleet(values)
+    if kind == "serving":
+        return _build_serving(values)
     if kind == "scenario":
         return _build_single(values)
     raise ValueError(f"unknown suite kind {kind!r}; expected one of {_KINDS}")
@@ -273,6 +308,54 @@ def _build_fleet(values: Mapping[str, Any]) -> FleetScenario:
     return FleetScenario(**kwargs)
 
 
+def _build_serving(values: Mapping[str, Any]) -> ServingScenario:
+    v = dict(values)
+    unknown = set(v) - SERVING_KEYS
+    if unknown:
+        raise ValueError(f"unknown serving keys {sorted(unknown)}; allowed: {sorted(SERVING_KEYS)}")
+    kwargs: dict[str, Any] = {}
+    for key, conv in (
+        ("base_rps", float),
+        ("diurnal_amplitude", float),
+        ("diurnal_period_s", float),
+        ("diurnal_phase_s", float),
+        ("flash_crowds", int),
+        ("flash_magnitude", float),
+        ("flash_duration_s", float),
+        ("jitter", float),
+        ("horizon_days", float),
+        ("control_period_s", float),
+        ("on_demand_replicas", int),
+        ("rps_capacity_ref", float),
+        ("boot_delay_s", float),
+        ("drain_delay_s", float),
+        ("max_spot", int),
+        ("target_utilization", float),
+        ("threshold_hi", float),
+        ("threshold_lo", float),
+        ("threshold_step", int),
+        ("hazard_window_s", float),
+        ("slo_p99_s", float),
+    ):
+        if key in v:
+            kwargs[key] = conv(v[key])
+    if "seeds" in v:
+        kwargs["seeds"] = tuple(int(s) for s in _wrap(v["seeds"]))
+    if "bid_margins" in v:
+        kwargs["bid_margins"] = tuple(float(m) for m in _wrap(v["bid_margins"]))
+    if "policies" in v:
+        kwargs["policies"] = tuple(str(p) for p in _wrap(v["policies"]))
+    if "on_demand_type" in v:
+        kwargs["on_demand_type"] = _instance(v["on_demand_type"])
+    if "spot_types" in v:
+        kwargs["spot_types"] = tuple(_instance(s) for s in _wrap(v["spot_types"]))
+    if "market" in v:
+        kwargs["market"] = _market_params(v["market"])
+    if "capacity" in v and not _is_none(v["capacity"]):
+        kwargs["capacity"] = int(v["capacity"])
+    return ServingScenario(**kwargs)
+
+
 # ---------------------------------------------------------------------------
 # Suite: the parsed file and its expansion
 # ---------------------------------------------------------------------------
@@ -286,7 +369,7 @@ class SuiteCell:
     label: str
     kind: str
     engine: str
-    scenario: Scenario | FleetScenario
+    scenario: Scenario | FleetScenario | ServingScenario
     resolved: Resolved
 
     def describe(self) -> str:

@@ -11,7 +11,8 @@ scenario content hash, engine id, schema version, git sha, creation time,
 wall time, and a small summary-metrics dict — so listing and trend analysis
 never open a payload.  Payloads are plain ``npz`` archives (structure-of-
 arrays outcome grids for :class:`~repro.engine.base.EngineResult`, per-cell
-attempt-record columns for fleet grids) with one JSON header entry; floats
+attempt-record columns for fleet grids, SLO/price grids for
+:class:`~repro.serving.ServingResult`) with one JSON header entry; floats
 ride either in float64 arrays or through JSON's exact shortest-round-trip
 repr, so a store round trip is bit-for-bit.
 
@@ -64,6 +65,7 @@ from repro.fleet.controller import AttemptRecord, FleetResult, JobOutcome
 from repro.fleet.sweep import SweepCell
 from repro.fleet.workload import Job
 from repro.obs import telemetry as obs
+from repro.serving import ServingResult, ServingScenario
 from repro.suite.hashing import SCHEMA_VERSION, run_key, scenario_hash
 
 __all__ = [
@@ -116,7 +118,7 @@ class RunRecord:
     scenario_hash: str
     engine: str
     schema_version: int
-    kind: str  # "scenario" | "fleet"
+    kind: str  # "scenario" | "fleet" | "serving"
     created_at: float  # unix seconds
     sha: str | None  # git commit the run was produced at
     payload: str  # path relative to the store root
@@ -387,6 +389,36 @@ class RunStore:
         )
         return self._flush(rec, _pack_fleet_grid(scenario, grid))
 
+    def put_serving_result(
+        self,
+        scenario: ServingScenario,
+        result: ServingResult,
+        *,
+        engine: str | None = None,
+        suite: str | None = None,
+        cell: str | None = None,
+        sha: str | None = None,
+    ) -> RunRecord:
+        """Persist one serving-grid run; returns its index record."""
+        engine = engine or result.engine
+        key = run_key(scenario, engine)
+        rec = RunRecord(
+            run_key=key,
+            scenario_hash=scenario_hash(scenario),
+            engine=engine,
+            schema_version=SCHEMA_VERSION,
+            kind="serving",
+            created_at=time.time(),
+            sha=self._resolve_sha(sha),
+            payload=f"runs/{key}.npz",
+            wall_s=float(result.wall_s),
+            n_cells=result.n_cells,
+            metrics=_serving_metrics(result),
+            suite=suite,
+            cell=cell,
+        )
+        return self._flush(rec, _pack_serving_result(scenario, result))
+
     # -- load ---------------------------------------------------------------
 
     def load(
@@ -409,6 +441,8 @@ class RunStore:
             with np.load(io.BytesIO(data)) as z:
                 if rec.kind == "fleet":
                     return _unpack_fleet_grid(z, scenario)
+                if rec.kind == "serving":
+                    return _unpack_serving_result(z)
                 return _unpack_engine_result(z, scenario)
         except (zipfile.BadZipFile, KeyError, ValueError, EOFError, OSError,
                 json.JSONDecodeError) as e:
@@ -459,6 +493,8 @@ class RunStore:
                     with np.load(io.BytesIO(data)) as z:
                         if rec.kind == "fleet":
                             _unpack_fleet_grid(z, None)
+                        elif rec.kind == "serving":
+                            _unpack_serving_result(z)
                         else:
                             _unpack_engine_result(z, None)
             except StoreCorruptionError as e:
@@ -572,6 +608,18 @@ def _fleet_metrics(grid: FleetGridResult) -> dict[str, float]:
     }
 
 
+def _serving_metrics(res: ServingResult) -> dict[str, float]:
+    with np.errstate(invalid="ignore"):
+        finite_cost = res.cost_per_mreq[np.isfinite(res.cost_per_mreq)]
+    return {
+        "mean_availability": float(res.availability.mean()),
+        "mean_slo_violation_s": float(res.slo_violation_s.mean()),
+        "mean_cost_per_mreq": float(finite_cost.mean()) if finite_cost.size else math.nan,
+        "total_preempted": float(res.n_preempted.sum()),
+        "total_boot_lost": float(res.n_boot_lost.sum()),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Engine-result codec
 # ---------------------------------------------------------------------------
@@ -624,6 +672,56 @@ def _unpack_engine_result(z, scenario: Scenario | None) -> EngineResult:
         wall_s=float(header["wall_s"]),
         timings=timings,
         **{name: z[name] for name in _ENGINE_ARRAYS},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving-result codec
+# ---------------------------------------------------------------------------
+
+_SERVING_ARRAYS = (
+    "availability",
+    "p99_latency_s",
+    "slo_violation_s",
+    "cost",
+    "served_requests",
+    "offered_requests",
+    "cost_per_mreq",
+    "n_preempted",
+    "n_scale_out",
+    "n_scale_in",
+    "n_boot_lost",
+    "capacity_rps",
+    "spot_price",
+    "rates",
+)
+
+
+def _pack_serving_result(scenario: ServingScenario, res: ServingResult) -> dict[str, np.ndarray]:
+    header = {
+        "engine": res.engine,
+        "wall_s": res.wall_s,
+        "policies": [str(p) for p in res.policies],
+        "bid_margins": [float(m) for m in res.bid_margins],
+        "seeds": [int(s) for s in res.seeds],
+        "spot_types": [str(t) for t in res.spot_types],
+        "scenario": scenario.canonical(),
+    }
+    out = {name: getattr(res, name) for name in _SERVING_ARRAYS}
+    out["header"] = np.array(json.dumps(header))
+    return out
+
+
+def _unpack_serving_result(z) -> ServingResult:
+    header = json.loads(str(z["header"][()]))
+    return ServingResult(
+        policies=tuple(str(p) for p in header["policies"]),
+        bid_margins=tuple(float(m) for m in header["bid_margins"]),
+        seeds=tuple(int(s) for s in header["seeds"]),
+        spot_types=tuple(str(t) for t in header["spot_types"]),
+        engine=str(header["engine"]),
+        wall_s=float(header["wall_s"]),
+        **{name: z[name] for name in _SERVING_ARRAYS},
     )
 
 

@@ -210,3 +210,42 @@ def test_plan_from_env(tmp_path):
     assert faults.plan_from_env({faults.ENV_VAR: ""}) is None
     plan = faults.plan_from_env({faults.ENV_VAR: str(p)})
     assert plan is not None and plan.seed == 3
+
+
+# -- site registry ----------------------------------------------------------
+
+
+def test_core_sites_registered():
+    assert {
+        "suite.worker", "store.payload_write", "store.index_append",
+        "ckpt.save", "ckpt.restore",
+    } <= set(faults.SITES)
+
+
+def test_subsystems_register_sites_at_import():
+    import repro.serving  # noqa: F401  (registration is an import side effect)
+
+    assert "serving.replica_boot" in faults.SITES
+    assert "serving.scale_decision" in faults.SITES
+
+
+def test_register_site_idempotent_but_conflict_raises():
+    faults.register_site("test.site_x", "does a thing")
+    faults.register_site("test.site_x", "does a thing")  # same description: fine
+    with pytest.raises(ValueError, match="already registered"):
+        faults.register_site("test.site_x", "does a different thing")
+
+
+def test_load_plan_warns_on_unregistered_site(tmp_path, caplog):
+    p = tmp_path / "typo.json"
+    p.write_text(json.dumps({"rules": [{"site": "serving.replica_bot"}]}))
+    with caplog.at_level("WARNING", logger="repro.faults"):
+        faults.load_plan(p)
+    assert any("unregistered sites" in r.message for r in caplog.records)
+
+    caplog.clear()
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps({"rules": [{"site": "suite.worker"}]}))
+    with caplog.at_level("WARNING", logger="repro.faults"):
+        faults.load_plan(ok)
+    assert not any("unregistered sites" in r.message for r in caplog.records)

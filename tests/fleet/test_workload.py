@@ -1,0 +1,95 @@
+"""Workload.merge / from_arrivals and the arrival generators (deterministic)."""
+
+import numpy as np
+import pytest
+
+from repro.core.market import HOUR
+from repro.fleet import Workload, poisson_arrivals, rate_arrivals
+from repro.serving.traffic import TrafficModel
+
+
+def test_merge_sorted_unique_and_preserving():
+    a = Workload.poisson(20, mean_interarrival_s=600.0, mean_work_s=HOUR, seed=0)
+    b = Workload.poisson(15, mean_interarrival_s=900.0, mean_work_s=2 * HOUR, seed=1)
+    c = Workload.batch(5, work_s=HOUR, arrival_s=3600.0)
+    merged = a.merge(b, c)
+    assert len(merged) == len(a) + len(b) + len(c)
+    arrivals = [j.arrival_s for j in merged]
+    assert arrivals == sorted(arrivals)
+    assert [j.id for j in merged] == list(range(len(merged)))
+    # multiset of (arrival, work, deadline) survives the merge, only ids change
+    def key(w):
+        return sorted((j.arrival_s, j.work_s, j.deadline_s) for j in w)
+    assert key(merged) == sorted(key(a) + key(b) + key(c))
+    assert merged.total_work_s == pytest.approx(a.total_work_s + b.total_work_s + c.total_work_s)
+
+
+def test_merge_ties_keep_stream_order():
+    a = Workload.batch(2, work_s=1 * HOUR)  # both arrive at t=0
+    b = Workload.batch(2, work_s=2 * HOUR)  # both arrive at t=0
+    merged = a.merge(b)
+    assert [j.work_s for j in merged] == [1 * HOUR, 1 * HOUR, 2 * HOUR, 2 * HOUR]
+
+
+def test_merge_single_stream_is_renumbered_copy():
+    w = Workload.poisson(10, mean_interarrival_s=600.0, mean_work_s=HOUR, seed=3)
+    assert [(j.arrival_s, j.work_s) for j in w.merge()] == [(j.arrival_s, j.work_s) for j in w]
+
+
+def test_poisson_arrivals_match_workload_poisson():
+    # Workload.poisson draws its arrivals first from the same seeded stream
+    w = Workload.poisson(50, mean_interarrival_s=300.0, mean_work_s=HOUR, seed=7)
+    arrivals = poisson_arrivals(50, 300.0, seed=7)
+    assert np.array_equal(np.array([j.arrival_s for j in w.jobs]), arrivals)
+
+
+def test_poisson_arrivals_validation():
+    with pytest.raises(ValueError):
+        poisson_arrivals(-1, 300.0)
+    with pytest.raises(ValueError):
+        poisson_arrivals(10, 0.0)
+
+
+def test_rate_arrivals_constant_rate_count():
+    rate = 0.5  # per second
+    horizon = 4 * HOUR
+    arr = rate_arrivals(np.full(48, rate), horizon / 48, seed=0)
+    assert np.all(np.diff(arr) >= 0) and arr[0] >= 0 and arr[-1] < horizon
+    # Poisson(lambda * T): mean 7200, sd ~85 — 6 sigma bounds
+    assert abs(arr.size - rate * horizon) < 6 * np.sqrt(rate * horizon)
+
+
+def test_rate_arrivals_zero_and_empty_trace():
+    assert rate_arrivals(np.zeros(10), 300.0).size == 0
+    assert rate_arrivals(np.empty(0), 300.0).size == 0
+
+
+def test_rate_arrivals_deterministic_and_rate_following():
+    # first half silent, second half busy: arrivals land only in the second
+    rates = np.concatenate([np.zeros(24), np.full(24, 1.0)])
+    a = rate_arrivals(rates, 300.0, seed=5)
+    b = rate_arrivals(rates, 300.0, seed=5)
+    assert np.array_equal(a, b)
+    assert a.size > 0 and np.all(a >= 24 * 300.0)
+
+
+def test_rate_arrivals_validation():
+    with pytest.raises(ValueError):
+        rate_arrivals(np.full(4, -1.0), 300.0)
+    with pytest.raises(ValueError):
+        rate_arrivals(np.full(4, 1.0), 0.0)
+
+
+def test_from_arrivals_bridges_serving_traffic():
+    trace = TrafficModel(base_rps=0.2, jitter=0.0).rates(6 * HOUR, 300.0, seed=0)
+    w = Workload.from_arrivals(rate_arrivals(trace, 300.0, seed=1), mean_work_s=2 * HOUR,
+                               deadline_slack=3.0)
+    arrivals = [j.arrival_s for j in w]
+    assert arrivals == sorted(arrivals)
+    assert all(j.work_s >= 60.0 for j in w)
+    assert all(j.deadline_s == pytest.approx(j.arrival_s + 3.0 * j.work_s) for j in w)
+
+
+def test_from_arrivals_rejects_unsorted():
+    with pytest.raises(ValueError):
+        Workload.from_arrivals([10.0, 5.0], mean_work_s=HOUR)

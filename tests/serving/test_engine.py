@@ -1,0 +1,153 @@
+"""run_serving: backend parity, the zero-traffic market anchor, telemetry."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.market import TraceModel, ensemble_seed, sample_traces_batch
+from repro.obs import telemetry as obs
+from repro.serving import ServingResult, ServingScenario, run_serving
+from repro.serving.engine import SERVING_ENGINES
+
+QUICK = dict(
+    base_rps=1200.0,
+    flash_crowds=1,
+    horizon_days=0.25,
+    seeds=(0, 1),
+    bid_margins=(0.5, 1.1),
+    max_spot=8,
+)
+
+
+def assert_results_equal(a: ServingResult, b: ServingResult):
+    for f in dataclasses.fields(ServingResult):
+        if f.name in ("engine", "wall_s"):
+            continue
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(x, np.ndarray):
+            assert np.array_equal(x, y, equal_nan=True), f"mismatch in {f.name}"
+        else:
+            assert x == y, f"mismatch in {f.name}"
+
+
+@pytest.mark.parametrize("capacity", [None, 6], ids=["uncontended", "contended"])
+def test_reference_batch_bit_identical(capacity):
+    sc = ServingScenario(**QUICK, capacity=capacity)
+    ref = run_serving(sc, engine="reference")
+    batch = run_serving(sc, engine="batch")
+    assert ref.engine == "reference" and batch.engine == "batch"
+    assert_results_equal(ref, batch)
+    # the grid actually exercised scaling and (when contended) preemption
+    assert batch.n_scale_out.sum() > 0
+    if capacity is not None:
+        assert batch.n_preempted.sum() > 0
+
+
+def test_auto_is_batch():
+    sc = ServingScenario(**QUICK)
+    assert run_serving(sc, engine="auto").engine == "batch"
+    assert set(SERVING_ENGINES) == {"reference", "batch"}
+
+
+def exogenous_base_prices(sc: ServingScenario) -> np.ndarray:
+    """(T, S, P) period-start prices rebuilt from the market plane alone."""
+    models, streams = [], []
+    for it in sc.spot_types:
+        m = TraceModel.for_instance(it)
+        for s in sc.seeds:
+            models.append(m)
+            streams.append(ensemble_seed(it, s))
+    traces = sample_traces_batch(models, sc.horizon_s, streams)
+    starts = np.arange(sc.n_periods, dtype=np.float64) * sc.control_period_s
+    S = len(sc.seeds)
+    base = np.empty((len(sc.spot_types), S, sc.n_periods))
+    for ti in range(len(sc.spot_types)):
+        for si in range(S):
+            tr = traces[ti * S + si]
+            idx = np.clip(
+                np.searchsorted(tr.times, starts, side="right") - 1, 0, len(tr.prices) - 1
+            )
+            base[ti, si] = tr.prices[idx]
+    return base
+
+
+@pytest.mark.parametrize("engine", SERVING_ENGINES)
+@pytest.mark.parametrize("capacity", [None, 6], ids=["uncontended", "contended"])
+def test_zero_traffic_reproduces_exogenous_price_trace(engine, capacity):
+    # with no traffic nothing ever bids: the recorded spot_price must be the
+    # exogenous per-type trace bit for bit (the PR 5 backward-compat anchor),
+    # availability is vacuously 1.0 and cost is the on-demand floor
+    sc = ServingScenario(
+        base_rps=0.0, horizon_days=0.25, seeds=(0, 1), bid_margins=(0.5, 1.1),
+        capacity=capacity,
+    )
+    res = run_serving(sc, engine=engine)
+    expected = exogenous_base_prices(sc)  # (T, S, P)
+    for pi in range(len(res.policies)):
+        for mi in range(len(res.bid_margins)):
+            for si in range(len(res.seeds)):
+                assert np.array_equal(res.spot_price[pi, mi, si], expected[:, si, :])
+    assert (res.availability == 1.0).all()
+    assert (res.n_scale_out == 0).all() and (res.n_preempted == 0).all()
+    od_floor = (
+        sc.on_demand_replicas * sc.on_demand_type.on_demand
+        * sc.n_periods * sc.control_period_s / 3600.0
+    )
+    assert res.cost == pytest.approx(od_floor)
+
+
+def test_custom_policy_override():
+    never = type(
+        "Never", (), {"name": "never", "hazard_aware": False,
+                      "desired_spot_rps": staticmethod(lambda rate, od, spot: rate * 0.0)}
+    )()
+    sc = ServingScenario(**QUICK, policies=("target", "never"))
+    ref = run_serving(sc, engine="reference", policies={"never": never})
+    batch = run_serving(sc, engine="batch", policies={"never": never})
+    assert_results_equal(ref, batch)
+    assert ref.policies == ("target", "never")
+    assert (ref.n_scale_out[1] == 0).all()  # never asks for spot replicas
+
+
+def test_unknown_engine_and_policy_raise():
+    sc = ServingScenario(**QUICK)
+    with pytest.raises(ValueError, match="unknown serving engine"):
+        run_serving(sc, engine="warp")
+    with pytest.raises(ValueError, match="unknown autoscaler policies"):
+        run_serving(dataclasses.replace(sc, policies=("target", "nope")))
+
+
+def test_telemetry_span_and_counters():
+    sc = ServingScenario(**QUICK, capacity=6)
+    with obs.Telemetry() as tel:
+        res = run_serving(sc)
+    spans = tel.find_spans("serving.run")
+    assert len(spans) == 1
+    assert spans[0].attrs["engine"] == "batch"
+    assert spans[0].attrs["n_cells"] == sc.n_cells
+    assert tel.counter("serving.scale_out") == res.n_scale_out.sum()
+    assert tel.counter("serving.preempt_outbid") == res.n_preempted.sum()
+    assert tel.counter("serving.slo_violation_s") == pytest.approx(res.slo_violation_s.sum())
+
+
+def test_result_shapes():
+    sc = ServingScenario(**QUICK)
+    res = run_serving(sc)
+    grid = (len(sc.policies), len(sc.bid_margins), len(sc.seeds))
+    assert res.availability.shape == grid
+    assert res.capacity_rps.shape == grid + (sc.n_periods,)
+    assert res.spot_price.shape == grid + (len(sc.spot_types), sc.n_periods)
+    assert res.rates.shape == (len(sc.seeds), sc.n_periods)
+    assert res.n_cells == sc.n_cells
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        ServingScenario(seeds=())
+    with pytest.raises(ValueError):
+        ServingScenario(capacity=0)
+    with pytest.raises(ValueError):
+        ServingScenario(max_spot=0)
+    with pytest.raises(ValueError):
+        ServingScenario(horizon_days=0.001, control_period_s=300.0)

@@ -1,0 +1,94 @@
+"""Serving fault sites: domain effects, determinism, backend parity under chaos."""
+
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.serving import ServingResult, ServingScenario, run_serving
+
+QUICK = dict(
+    base_rps=1200.0,
+    flash_crowds=1,
+    horizon_days=0.25,
+    seeds=(0, 1),
+    bid_margins=(0.5, 1.1),
+    max_spot=8,
+)
+
+
+def assert_results_equal(a: ServingResult, b: ServingResult):
+    for f in dataclasses.fields(ServingResult):
+        if f.name in ("engine", "wall_s"):
+            continue
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(x, np.ndarray):
+            assert np.array_equal(x, y, equal_nan=True), f"mismatch in {f.name}"
+        else:
+            assert x == y, f"mismatch in {f.name}"
+
+
+BOOT_RULE = faults.FaultRule("serving.replica_boot", p=0.3, max_fires=2)
+SCALE_RULE = faults.FaultRule("serving.scale_decision", p=0.2, max_fires=2)
+
+
+def chaos_plan(seed=7):
+    return faults.FaultPlan([BOOT_RULE, SCALE_RULE], seed=seed)
+
+
+def test_sites_are_registered():
+    assert "serving.replica_boot" in faults.SITES
+    assert "serving.scale_decision" in faults.SITES
+
+
+@pytest.mark.parametrize("capacity", [None, 6], ids=["uncontended", "contended"])
+def test_backends_bit_identical_under_faults(capacity):
+    # fault keys are per (cell, period), so the scalar and lockstep backends
+    # must lose the *same* boot batches and skip the *same* decisions
+    sc = ServingScenario(**QUICK, capacity=capacity)
+    with chaos_plan():
+        ref = run_serving(sc, engine="reference")
+    with chaos_plan():
+        batch = run_serving(sc, engine="batch")
+    assert_results_equal(ref, batch)
+
+
+def test_faults_have_domain_effect_and_never_raise():
+    sc = ServingScenario(**QUICK)
+    clean = run_serving(sc)
+    plan = chaos_plan()
+    with plan:
+        faulted = run_serving(sc)  # must not raise: effects fold into the result
+    assert len(plan.log) > 0
+    assert faulted.n_boot_lost.sum() > clean.n_boot_lost.sum() == 0
+    assert not np.array_equal(faulted.capacity_rps, clean.capacity_rps)
+
+
+def test_same_plan_same_injections():
+    sc = ServingScenario(**QUICK)
+    a_plan, b_plan = chaos_plan(), chaos_plan()
+    with a_plan:
+        a = run_serving(sc)
+    with b_plan:
+        b = run_serving(sc)
+    assert_results_equal(a, b)
+    assert [f.describe() for f in a_plan.log] == [f.describe() for f in b_plan.log]
+
+
+def test_different_seed_different_failure_set():
+    sc = ServingScenario(**QUICK)
+    with chaos_plan(seed=7) as a_plan:
+        run_serving(sc)
+    with chaos_plan(seed=8) as b_plan:
+        run_serving(sc)
+    assert {f.key for f in a_plan.log} != {f.key for f in b_plan.log}
+
+
+def test_committed_chaos_schedule_loads_and_names_known_sites():
+    schedule = pathlib.Path(__file__).resolve().parents[2] / "examples/faults/chaos_serving.json"
+    plan = faults.load_plan(schedule)
+    sites = {r.site for r in plan.rules}
+    assert sites == {"serving.replica_boot", "serving.scale_decision"}
+    assert sites <= set(faults.SITES)

@@ -1,0 +1,77 @@
+"""SLO math: M/M/c p99 latency, availability, $/Mreq."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving import ServingScenario
+from repro.serving.slo import _TAIL, p99_latency, summarize
+
+MU = 100.0  # one reference replica serves 100 rps
+
+
+def test_p99_idle_zero_overload_inf():
+    p99 = p99_latency(np.array([0.0, 250.0, 50.0]), np.array([200.0, 200.0, 0.0]), MU)
+    assert p99[0] == 0.0          # idle period
+    assert p99[1] == np.inf       # rho >= 1: unstable queue
+    assert p99[2] == np.inf       # traffic offered into zero capacity
+
+
+def test_p99_matches_mm1_closed_form():
+    # c = 1: Erlang C collapses to rho, so
+    # p99 = 1/mu + ln(rho / tail) / (mu - lam) whenever rho > tail
+    lam = 60.0
+    p99 = p99_latency(np.array([lam]), np.array([MU]), MU)
+    rho = lam / MU
+    expected = 1.0 / MU + math.log(rho / _TAIL) / (MU - lam)
+    assert p99[0] == pytest.approx(expected, rel=1e-12)
+
+
+def test_p99_light_load_is_service_time_only():
+    # tail never reached: P(wait) <= tail -> p99 is the 1/mu service time
+    p99 = p99_latency(np.array([1.0]), np.array([2000.0]), MU)
+    assert p99[0] == pytest.approx(1.0 / MU)
+
+
+def test_p99_more_servers_lower_tail():
+    lam = np.array([150.0])
+    few = p99_latency(lam, np.array([200.0]), MU)
+    many = p99_latency(lam, np.array([800.0]), MU)
+    assert many[0] < few[0]
+
+
+def test_p99_grid_matches_per_cell():
+    # the vectorized Erlang recurrence freezes each element at its own c:
+    # scoring a grid must be bit-identical to scoring cells one by one
+    rng = np.random.default_rng(0)
+    lam = rng.uniform(0.0, 900.0, (4, 7))
+    cap = rng.choice([0.0, 100.0, 300.0, 800.0], (4, 7))
+    grid = p99_latency(lam, cap, MU)
+    for i in range(4):
+        assert np.array_equal(grid[i], p99_latency(lam[i], cap[i], MU), equal_nan=True)
+
+
+def test_summarize_availability_and_cost():
+    sc = ServingScenario(seeds=(0,), slo_p99_s=1.0)
+    rates = np.array([[100.0, 400.0, 0.0]])
+    caps = np.array([[200.0, 200.0, 200.0]])
+    served = np.array([(100.0 + 200.0 + 0.0) * 300.0])
+    offered = np.array([(100.0 + 400.0 + 0.0) * 300.0])
+    cost = np.array([3.0])
+    avail, p99, viol, cpm = summarize(sc, rates, caps, served, offered, cost)
+    assert avail[0] == pytest.approx(300.0 / 500.0)
+    assert viol[0] == 300.0  # exactly the overloaded period (p99 = inf)
+    assert cpm[0] == pytest.approx(3.0 / (served[0] / 1e6))
+    assert np.isfinite(p99[0])
+
+
+def test_summarize_no_traffic_is_perfectly_available():
+    sc = ServingScenario(seeds=(0,))
+    rates = np.zeros((1, 4))
+    caps = np.full((1, 4), 200.0)
+    avail, p99, viol, cpm = summarize(
+        sc, rates, caps, np.zeros(1), np.zeros(1), np.array([1.0])
+    )
+    assert avail[0] == 1.0 and p99[0] == 0.0 and viol[0] == 0.0
+    assert np.isnan(cpm[0])  # $/Mreq undefined when nothing was served

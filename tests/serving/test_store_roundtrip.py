@@ -1,0 +1,82 @@
+"""ServingResult through the suite RunStore: bit-for-bit persistence."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.obs import telemetry as obs
+from repro.serving import ServingResult, ServingScenario, run_serving
+from repro.suite import RunStore, run_key, run_serving_stored
+
+SC = ServingScenario(
+    base_rps=900.0,
+    horizon_days=0.25,
+    seeds=(0, 1),
+    bid_margins=(0.5, 1.1),
+    capacity=6,
+    max_spot=8,
+)
+
+
+@pytest.fixture(scope="module")
+def serving_run():
+    return SC, run_serving(SC)
+
+
+def assert_results_equal(a: ServingResult, b: ServingResult):
+    for f in dataclasses.fields(ServingResult):
+        if f.name == "wall_s":  # a legitimate re-simulation times differently
+            continue
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(x, np.ndarray):
+            assert np.array_equal(x, y, equal_nan=True), f"mismatch in {f.name}"
+        else:
+            assert x == y, f"mismatch in {f.name}"
+
+
+def test_round_trip_bit_for_bit(tmp_path, serving_run):
+    sc, res = serving_run
+    store = RunStore(tmp_path / "store")
+    rec = store.put_serving_result(sc, res, suite="s", cell="c")
+    assert rec.kind == "serving"
+    assert rec.run_key == run_key(sc, "batch")
+
+    # a fresh store instance reads everything back from disk
+    reloaded = RunStore(tmp_path / "store").load(rec.run_key)
+    assert_results_equal(res, reloaded)
+    assert reloaded.wall_s == res.wall_s  # floats survive the header exactly
+
+    stats = RunStore(tmp_path / "store").verify(deep=True)
+    assert stats.corrupt == [] and stats.n_ok == 1
+
+
+def test_metrics_rollup(tmp_path, serving_run):
+    sc, res = serving_run
+    rec = RunStore(tmp_path / "store").put_serving_result(sc, res)
+    assert rec.metrics["mean_availability"] == pytest.approx(res.availability.mean())
+    assert rec.metrics["total_preempted"] == res.n_preempted.sum()
+
+
+def test_run_serving_stored_miss_then_hit(tmp_path, serving_run):
+    sc, res = serving_run
+    store = RunStore(tmp_path / "store")
+    with obs.Telemetry() as tel:
+        first, hit = run_serving_stored(sc, store)
+    assert not hit and tel.counter("suite.cache_hit") == 0
+    assert_results_equal(res, first)
+
+    with obs.Telemetry() as tel:
+        second, hit = run_serving_stored(sc, store)
+    assert hit and tel.counter("suite.cache_hit") == 1
+    assert len(tel.find_spans("serving.run")) == 0  # zero simulation on a hit
+    assert_results_equal(res, second)
+
+
+def test_store_parity_across_independent_runs(tmp_path, serving_run):
+    sc, res = serving_run
+    a = RunStore(tmp_path / "a")
+    b = RunStore(tmp_path / "b")
+    a.put_serving_result(sc, res)
+    b.put_serving_result(sc, run_serving(sc))  # re-simulated, same scenario
+    assert a.parity(b) == {}

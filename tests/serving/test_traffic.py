@@ -1,0 +1,67 @@
+"""TrafficModel: determinism, zero-traffic anchor, flash crowds, batching."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.market import HOUR
+from repro.serving.traffic import TrafficModel, rates_batch, traffic_seed
+
+DAY = 24 * HOUR
+
+
+def test_rates_deterministic_in_seed():
+    m = TrafficModel(base_rps=1000.0, flash_crowds=2)
+    a = m.rates(DAY, 300.0, seed=3)
+    b = m.rates(DAY, 300.0, seed=3)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, m.rates(DAY, 300.0, seed=4))
+
+
+def test_rates_shape_and_nonnegative():
+    m = TrafficModel(base_rps=500.0, jitter=2.0)
+    r = m.rates(2 * DAY, 300.0, seed=0)
+    assert r.shape == (2 * DAY // 300,)
+    assert (r >= 0).all()
+
+
+def test_zero_traffic_is_bitwise_zero():
+    # sqrt(0) * z == 0: jitter cannot resurrect a silent service
+    m = TrafficModel(base_rps=0.0, flash_crowds=3, jitter=5.0)
+    assert (m.rates(DAY, 300.0, seed=9) == 0.0).all()
+
+
+def test_diurnal_cycle_and_flash_crowds():
+    quiet = TrafficModel(base_rps=1000.0, jitter=0.0)
+    r = quiet.rates(DAY, 300.0, seed=0)
+    # amplitude 0.6 around the base rate, sampled at period midpoints
+    assert r.max() == pytest.approx(1600.0, rel=1e-3)
+    assert r.min() == pytest.approx(400.0, rel=1e-3)
+    crowd = dataclasses.replace(quiet, flash_crowds=1, flash_magnitude=4.0)
+    assert crowd.rates(DAY, 300.0, seed=0).max() > r.max()
+
+
+def test_traffic_seed_decorrelates_from_price_stream():
+    assert traffic_seed(3) != 3
+    assert traffic_seed(3, 0) != traffic_seed(3, 1)
+    with pytest.raises(ValueError):
+        traffic_seed(-1)
+
+
+def test_rates_batch_rows_match_single_calls():
+    m = TrafficModel(base_rps=800.0, flash_crowds=1)
+    grid = rates_batch(m, DAY, 300.0, (0, 1, 5))
+    for row, seed in zip(grid, (0, 1, 5)):
+        assert np.array_equal(row, m.rates(DAY, 300.0, seed))
+
+
+def test_model_validation():
+    with pytest.raises(ValueError):
+        TrafficModel(base_rps=-1.0)
+    with pytest.raises(ValueError):
+        TrafficModel(diurnal_amplitude=1.5)
+    with pytest.raises(ValueError):
+        TrafficModel(flash_magnitude=0.5)
+    with pytest.raises(ValueError):
+        TrafficModel().rates(100.0, 300.0, seed=0)  # horizon < one period

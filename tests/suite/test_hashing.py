@@ -110,3 +110,89 @@ def test_kind_disambiguates():
     assert single.canonical()["kind"] == "scenario"
     assert fleet.canonical()["kind"] == "fleet"
     assert scenario_hash(single) != scenario_hash(fleet)
+
+
+SERVING_SPEC = {
+    "base_rps": 800.0,
+    "horizon_days": 1.0,
+    "seeds": [0, 1],
+    "bid_margins": [0.5, 1.1],
+    "policies": ["target", "hazard"],
+    "max_spot": 8,
+}
+
+
+def test_serving_hash_invariant_under_spec_field_order():
+    items = list(SERVING_SPEC.items())
+    forward = build_scenario("serving", dict(items))
+    backward = build_scenario("serving", dict(reversed(items)))
+    assert scenario_hash(forward) == scenario_hash(backward)
+
+
+def test_serving_hash_invariant_under_numeric_spelling():
+    ints = build_scenario("serving", {**SERVING_SPEC, "base_rps": 800, "horizon_days": 1})
+    floats = build_scenario("serving", SERVING_SPEC)
+    assert scenario_hash(ints) == scenario_hash(floats)
+
+
+def test_serving_hash_invariant_under_default_materialization():
+    # omitting a field == spelling out its dataclass default
+    implicit = build_scenario("serving", SERVING_SPEC)
+    explicit = build_scenario(
+        "serving",
+        {
+            **SERVING_SPEC,
+            "jitter": 1.0,
+            "control_period_s": 300.0,
+            "on_demand_replicas": 2,
+            "rps_capacity_ref": 100.0,
+            "boot_delay_s": 600.0,
+            "target_utilization": 0.7,
+            "capacity": "none",
+            "market": {},
+            "slo_p99_s": 1.0,
+        },
+    )
+    assert scenario_hash(implicit) == scenario_hash(explicit)
+
+
+@pytest.mark.parametrize(
+    "mutation",
+    [
+        {"base_rps": 801.0},
+        {"diurnal_amplitude": 0.5},
+        {"flash_crowds": 1},
+        {"jitter": 0.0},
+        {"horizon_days": 2.0},
+        {"control_period_s": 600.0},
+        {"seeds": [0, 2]},
+        {"on_demand_replicas": 3},
+        {"on_demand_type": "c1.xlarge"},
+        {"spot_types": ["m1.xlarge"]},
+        {"rps_capacity_ref": 120.0},
+        {"boot_delay_s": 900.0},
+        {"drain_delay_s": 600.0},
+        {"max_spot": 9},
+        {"policies": ["target"]},
+        {"target_utilization": 0.8},
+        {"threshold_hi": 0.9},
+        {"threshold_step": 3},
+        {"hazard_window_s": 7200.0},
+        {"bid_margins": [0.5, 1.100001]},
+        {"capacity": 8},
+        {"market": {"price_impact": 0.07}},
+        {"slo_p99_s": 2.0},
+    ],
+)
+def test_serving_engine_visible_field_change_changes_hash(mutation):
+    base = build_scenario("serving", SERVING_SPEC)
+    mutated = build_scenario("serving", {**SERVING_SPEC, **mutation})
+    assert scenario_hash(base) != scenario_hash(mutated)
+
+
+def test_serving_kind_disambiguates():
+    serving = build_scenario("serving", SERVING_SPEC)
+    assert serving.canonical()["kind"] == "serving"
+    single = build_scenario("scenario", BASE_SPEC)
+    fleet = build_scenario("fleet", {"n_jobs": 5})
+    assert len({scenario_hash(serving), scenario_hash(single), scenario_hash(fleet)}) == 3
